@@ -1,0 +1,53 @@
+"""Codec microbenchmark — paper §II-A / §IV-C context (ZFP rate trade-off).
+
+Reports, per rate: wire compression ratio, round-trip max relative error,
+and CPU wall-time per call for encode/decode/fused-ring-hop (the TPU Pallas
+kernels are validated separately in interpret mode; these numbers time the
+XLA-compiled oracle path used on CPU)."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import codecs
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6  # us
+
+
+def run():
+    rows = []
+    n = 1 << 20  # 1M f32
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(n,)).astype(np.float32))
+    x2d = ops.to_blocks(x)
+    for bits in (8, 16, 24):
+        c = codecs.get(f"bq{bits}")
+        enc = jax.jit(lambda a, b=bits: ops.bq_encode_blocks(a, b))
+        wire = enc(x2d)
+        dec = jax.jit(lambda w, b=bits: ops.bq_decode_blocks(w, b))
+        dae = jax.jit(lambda w, l, b=bits:
+                      ops.bq_decode_add_encode_blocks(w, l, b))
+        t_enc = _time(enc, x2d)
+        t_dec = _time(dec, wire)
+        t_dae = _time(dae, wire, x2d)
+        y = dec(wire)
+        err = float(jnp.max(jnp.abs(y - x2d)))
+        ratio = 32.0 / c.wire_bits_per_value()
+        rows.append((f"codec_bq{bits}_encode_1M", t_enc,
+                     f"ratio={ratio:.3f}"))
+        rows.append((f"codec_bq{bits}_decode_1M", t_dec,
+                     f"max_abs_err={err:.2e}"))
+        rows.append((f"codec_bq{bits}_ring_hop_1M", t_dae,
+                     f"fused_decode_add_encode"))
+    return rows

@@ -1,0 +1,56 @@
+"""Modeled training-throughput uplift per scheme — paper Figs 7a/b-10a/b.
+
+No TPU wall clock exists in this container, so throughput is *modeled* from
+the roofline terms on the production (16,16) mesh: step_time(scheme) =
+max(compute, memory, collective(scheme)); samples/s and TFLOPS-per-chip
+uplifts follow.  compute/memory come from the compiled baseline dry-run
+cell (identical across schemes up to codec flops); collective bytes come
+from the scheme's ledger.
+
+Reproduces the paper's ordering: lower rate -> bigger win; MPC ~ no win;
+hybrids in between — on the collective-bound gemma3-1b train_4k cell.
+"""
+
+import json
+import pathlib
+
+from repro.analysis import roofline as rl
+
+RESULTS = pathlib.Path(__file__).parent / "results" / "dryrun"
+CELL = "gemma3-1b-train_4k"
+SCHEMES = ("baseline", "naive_mpc", "naive_zfp8", "naive_zfp16",
+           "mzhybrid8", "zhybrid_16_8", "zhybrid_24_8", "zhybrid_8_4")
+
+
+def _load(scheme):
+    fn = RESULTS / f"pod16x16-{scheme}-{CELL}.json"
+    if not fn.exists():
+        return None
+    return json.loads(fn.read_text())
+
+
+def run():
+    rows = []
+    base = _load("baseline")
+    if base is None or "roofline" not in base:
+        rows.append(("throughput_model", 0.0,
+                     "SKIPPED: run `python -m repro.launch.dryrun --arch "
+                     "gemma3-1b --shape train_4k --scheme <s>` for schemes "
+                     "first"))
+        return rows
+    r0 = base["roofline"]
+    t0 = r0["step_time_s"]
+    batch = 256
+    for scheme in SCHEMES:
+        res = _load(scheme)
+        if res is None or "roofline" not in res:
+            continue
+        r = res["roofline"]
+        t = r["step_time_s"]
+        sps = batch / t
+        tflops = r["model_flops"] / t / 1e12
+        rows.append((f"throughput_{scheme}", t * 1e6,
+                     f"samples_per_s={sps:.1f} tflops_per_chip={tflops:.1f} "
+                     f"uplift_vs_baseline={t0 / t:.3f}x "
+                     f"dominant={r['dominant']}"))
+    return rows

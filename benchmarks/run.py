@@ -1,0 +1,52 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  bench_codec        ZFP-rate trade-off microbench        (paper §II-A/IV-C)
+  bench_collectives  wire bytes per parallelism dim/scheme (paper Fig 1, §III)
+  bench_convergence  loss curves per scheme               (paper Figs 7c-11)
+  bench_throughput   modeled throughput uplift            (paper Figs 7a-10b)
+
+The bench harness needs a multi-device host mesh to exercise the schemes;
+it sets its own 8-device flag (NOT the dry-run's 512) before jax init.
+"""
+
+import os
+
+if "XLA_FLAGS" not in os.environ or \
+        "device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import importlib     # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+
+MODULES = ("bench_codec", "bench_collectives", "bench_convergence",
+           "bench_throughput")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", choices=MODULES)
+    args = ap.parse_args()
+    mods = [args.only] if args.only else list(MODULES)
+    print("name,us_per_call,derived")
+    for name in mods:
+        mod = importlib.import_module(f"benchmarks.{name}")
+        t0 = time.time()
+        try:
+            rows = mod.run()
+        except Exception as e:  # keep the harness going; record the failure
+            print(f"{name},0.0,FAILED:{e!r}")
+            continue
+        for r in rows:
+            print(f"{r[0]},{r[1]:.2f},{r[2]}")
+        print(f"{name}_total,{(time.time() - t0) * 1e6:.0f},wall",
+              file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,72 @@
+"""Rate sweep: loss-vs-wire-bytes trade-off across schemes (paper Fig 11
+analog, plus the beyond-paper rate-4 knee).
+
+Trains the same tiny model under every registered scheme and prints a
+table of (final loss, wire MB/step, modeled collective-term speedup).
+
+    PYTHONPATH=src python examples/compression_sweep.py [--steps 80]
+"""
+
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
+import argparse
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro import configs
+from repro.analysis import roofline as rl
+from repro.core import comms, schemes as schemes_lib
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.models.model import Model
+from repro.models.params import MeshInfo
+from repro.train.optimizer import AdamConfig
+from repro.train.train_step import Trainer, batch_specs
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=80)
+    args = ap.parse_args()
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mi = MeshInfo.from_mesh(mesh)
+    cfg = configs.get("gemma3-1b").reduced().replace(vocab_size=128)
+    data = SyntheticCorpus(DataConfig(vocab_size=128, seq_len=32,
+                                      global_batch=8, noise=0.05))
+    model = Model(cfg, mi)
+    bspecs = batch_specs(cfg, mi)
+
+    base_bytes = None
+    print(f"{'scheme':16s} {'final_loss':>10s} {'wire MB/step':>13s} "
+          f"{'coll. reduction':>15s}")
+    for scheme in schemes_lib.names():
+        trainer = Trainer(model, mesh, scheme=scheme,
+                          opt_cfg=AdamConfig(lr=3e-3))
+        params, ostate = trainer.init_all(jax.random.key(0))
+        with comms.record_traffic() as events:
+            trainer.step.lower(
+                jax.tree.map(jax.typeof, params),
+                jax.tree.map(jax.typeof, ostate),
+                {k: jax.typeof(jax.numpy.asarray(v))
+                 for k, v in data.batch(0).items()})
+        led = rl.ledger_summary(events, train=True)
+        if scheme == "baseline":
+            base_bytes = led["total_bytes"]
+        losses = []
+        for s in range(args.steps):
+            b = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+                 for k, v in data.batch(s).items()}
+            params, ostate, m = trainer.step(params, ostate, b)
+            losses.append(float(m["loss"]))
+        final = float(np.mean(losses[-8:]))
+        print(f"{scheme:16s} {final:10.4f} {led['total_bytes']/1e6:13.2f} "
+              f"{base_bytes/max(led['total_bytes'],1):14.2f}x")
+        jax.clear_caches()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Assigned-architecture registry: ``get("<arch-id>")`` -> ArchConfig.
+
+One module per architecture, exact dims from the assignment brief
+(sources cited per-module).  ``--arch`` flags resolve through here.
+"""
+
+from __future__ import annotations
+
+import importlib
+
+ARCH_IDS = (
+    "gemma3-1b",
+    "qwen2-72b",
+    "gemma3-4b",
+    "minitron-4b",
+    "whisper-base",
+    "xlstm-1.3b",
+    "zamba2-1.2b",
+    "kimi-k2-1t-a32b",
+    "qwen3-moe-235b-a22b",
+    "qwen2-vl-72b",
+)
+
+
+def get(arch_id: str):
+    if arch_id not in ARCH_IDS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {ARCH_IDS}")
+    mod = importlib.import_module(
+        "repro.configs." + arch_id.replace("-", "_").replace(".", "_"))
+    return mod.CONFIG

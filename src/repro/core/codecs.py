@@ -1,0 +1,190 @@
+"""Codec registry: the wire-compression schemes collectives can carry.
+
+* ``none`` — uncompressed baseline (paper's stock MVAPICH2-GDR path).
+* ``mpc``  — lossless.  MPC's variable-rate bitstream does not map to XLA's
+  static shapes, so the wire stays full-size (bit-exact, ratio 1.0) — which
+  also reproduces the paper's measured result that MPC yields no throughput
+  benefit (§IV-D) while perfectly preserving loss.
+* ``bq8/bq16/bq24`` — fixed-rate lossy block quantization, the TPU-native
+  analogue of ZFP rate:8/16/24 (DESIGN.md §2).
+
+A codec turns a tensor into a *wire pytree* whose leaves are what actually
+crosses the interconnect; collectives in ``comms.py`` operate leaf-wise on
+that pytree, so the byte reduction is visible in the lowered HLO.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.kernels.ref import BLOCK
+
+
+@dataclasses.dataclass(frozen=True)
+class Codec:
+    """Base codec: identity (uncompressed) wire."""
+
+    name: str = "none"
+    lossless: bool = True
+
+    # -- wire interface ----------------------------------------------------
+    def encode(self, x):
+        return {"raw": x}
+
+    def decode(self, wire, shape, dtype):
+        return wire["raw"].reshape(shape).astype(dtype)
+
+    def wire_bits_per_value(self, dtype=jnp.float32) -> float:
+        return jnp.dtype(dtype).itemsize * 8
+
+    @property
+    def is_identity(self) -> bool:
+        return True
+
+    def __str__(self):
+        return self.name
+
+
+@dataclasses.dataclass(frozen=True)
+class MpcCodec(Codec):
+    """Lossless MPC analogue: bit-exact wire, ratio 1.0 (see module docstring)."""
+
+    name: str = "mpc"
+    lossless: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class BqCodec(Codec):
+    """Fixed-rate block quantization at ``bits`` bits/value (ZFP-rate analogue)."""
+
+    name: str = "bq"
+    lossless: bool = False
+    bits: int = 8
+    backend: str | None = None  # None -> ops default
+
+    def __post_init__(self):
+        object.__setattr__(self, "name", f"bq{self.bits}")
+
+    def encode(self, x):
+        return ops.bq_encode(x, self.bits, self.backend)
+
+    def decode(self, wire, shape, dtype):
+        return ops.bq_decode(wire, self.bits, shape, dtype, self.backend)
+
+    # block-matrix fast path for the ring collectives
+    def encode_blocks(self, x2d):
+        return ops.bq_encode_blocks(x2d, self.bits, self.backend)
+
+    def decode_blocks(self, wire):
+        return ops.bq_decode_blocks(wire, self.bits, self.backend)
+
+    def decode_add_encode_blocks(self, wire, local2d):
+        return ops.bq_decode_add_encode_blocks(wire, local2d, self.bits, self.backend)
+
+    def wire_bits_per_value(self, dtype=jnp.float32) -> float:
+        return self.bits + 32.0 / BLOCK  # mantissa + per-block f32 scale
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class GqCodec(Codec):
+    """ABLATION codec: fixed-rate quantization with a single *per-tensor*
+    scale (scale granularity of classic fixed-rate schemes, which share
+    exponents across large groups).  One outlier crushes the resolution of
+    every other value — this is the failure mode behind the paper's naive-
+    ZFP loss degradation, and the per-128-block scaling of ``bq`` is the
+    TPU-native fix.  Used by the convergence benchmark to reproduce the
+    paper's qualitative claim."""
+
+    name: str = "gq"
+    lossless: bool = False
+    bits: int = 8
+
+    def __post_init__(self):
+        object.__setattr__(self, "name", f"gq{self.bits}")
+
+    def _qmax(self):
+        return float(2 ** (self.bits - 1) - 1)
+
+    def encode(self, x):
+        from repro.kernels import ops as kops
+        return self.encode_blocks(kops.to_blocks(x))
+
+    def decode(self, wire, shape, dtype):
+        from repro.kernels import ops as kops
+        return kops.from_blocks(self.decode_blocks(wire), shape, dtype)
+
+    def encode_blocks(self, x2d):
+        x2d = x2d.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(x2d), axis=(-1, -2), keepdims=True)
+        scale = jnp.where(amax == 0.0, 1.0, amax)
+        q = jnp.clip(jnp.round(x2d / scale * self._qmax()),
+                     -self._qmax(), self._qmax()).astype(jnp.int8)
+        # store the (single) scale broadcast per block so gathered wires
+        # keep the bq layout; only the *value* granularity is global
+        scale_b = jnp.broadcast_to(scale, q.shape[:-1] + (1,))
+        return {"q_hi": q, "q_lo": None, "scale": scale_b}
+
+    def decode_blocks(self, wire):
+        return wire["q_hi"].astype(jnp.float32) \
+            * (wire["scale"] / self._qmax())
+
+    def decode_add_encode_blocks(self, wire, local2d):
+        s = self.decode_blocks(wire) + local2d.astype(jnp.float32)
+        return self.encode_blocks(s), s
+
+    def wire_bits_per_value(self, dtype=jnp.float32) -> float:
+        return float(self.bits)  # scale overhead ~0
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class TqCodec(GqCodec):
+    """ABLATION codec #2: block-scaled rate-``bits`` quantization that
+    TRUNCATES toward zero instead of rounding to nearest — the error
+    profile of ZFP's dropped bitplanes (biased underestimate).  Isolates
+    *rounding bias* (vs rate, vs scale granularity) as a degradation
+    mechanism."""
+
+    name: str = "tq"
+
+    def __post_init__(self):
+        object.__setattr__(self, "name", f"tq{self.bits}")
+
+    def encode_blocks(self, x2d):
+        x2d = x2d.astype(jnp.float32)
+        amax = jnp.max(jnp.abs(x2d), axis=-1, keepdims=True)
+        scale = jnp.where(amax == 0.0, 1.0, amax)
+        q = jnp.trunc(x2d / scale * self._qmax())      # biased toward zero
+        q = jnp.clip(q, -self._qmax(), self._qmax()).astype(jnp.int8)
+        return {"q_hi": q, "q_lo": None, "scale": scale}
+
+
+NONE = Codec()
+MPC = MpcCodec()
+GQ8 = GqCodec(bits=8)
+TQ8 = TqCodec(bits=8)
+BQ4 = BqCodec(bits=4)   # beyond-paper: nibble-packed rate 4 (knee finder)
+BQ8 = BqCodec(bits=8)
+BQ16 = BqCodec(bits=16)
+BQ24 = BqCodec(bits=24)
+
+_REGISTRY = {c.name: c for c in (NONE, MPC, GQ8, TQ8, BQ4, BQ8, BQ16, BQ24)}
+
+
+def get(name) -> Codec:
+    if isinstance(name, Codec):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown codec {name!r}; have {sorted(_REGISTRY)}") from None

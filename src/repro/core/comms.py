@@ -1,0 +1,636 @@
+"""Compression-assisted collectives (the paper's core mechanism, TPU-native).
+
+Every collective the framework emits goes through this module, tagged with
+the parallelism dimension it serves (``dp``/``zero``/``tp``/``pp``/``ep``).
+The active :mod:`repro.core.schemes` scheme maps tags to codecs:
+
+* identity codecs (``none``, ``mpc``) lower to stock ``jax.lax`` collectives —
+  the uncompressed MVAPICH2-GDR baseline of the paper;
+* ``bq*`` codecs lower to compression-assisted implementations in which the
+  *wire payload is the encoded pytree*:
+
+    - all-gather / ppermute / all-to-all: encode once -> collective on the
+      int8/int16 wire -> decode;
+    - reduce-scatter / all-reduce: a ring over ``lax.ppermute`` whose per-hop
+      payload is encoded, with the fused ``decode->add->encode`` Pallas kernel
+      as the hop body.  all-reduce = ring reduce-scatter + all-gather of the
+      final *compressed* chunk — exactly the paper's compression-assisted
+      reduce-scatter-allgather all-reduce (§IV-A).
+
+Autodiff: each primitive carries a ``custom_vjp`` whose backward applies the
+transpose collective under the *backward-direction* codec (paper §III-A:
+gradients crossing MP collectives in the backward pass get the MP codec).
+Compression itself is straight-through for gradients — it is a wire-level,
+semantically-identity transform.
+
+All functions must be called inside ``shard_map`` over a mesh that defines
+the named axis.
+"""
+
+from __future__ import annotations
+
+import functools
+import threading
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import codecs, schemes
+from repro.kernels import ops
+from repro.kernels.ref import BLOCK
+
+
+# --------------------------------------------------------------------------
+# traffic recorder (trace-time, static shapes): benchmarks and the roofline
+# cross-check read this.
+# --------------------------------------------------------------------------
+
+_rec = threading.local()
+
+
+class record_traffic:
+    """Trace-time collective ledger.
+
+    Every public comms call appends one event with the *local* payload
+    element count, the axis size, both codecs, and the current scan
+    multiplier (layers per scanned group).  ``analysis.roofline`` turns
+    events into per-device link bytes with the formulas:
+
+        all_gather      (n-1) * E * bpv          (ring, E = local elems)
+        reduce_scatter  (n-1)/n * E * bpv        (E = full local array)
+        all_reduce      2 (n-1)/n * E * bpv      (RS + AG of compressed chunk)
+        ppermute        E * bpv
+        all_to_all      (n-1)/n * E * bpv
+
+    with bpv = codec.wire_bits_per_value(dtype)/8.  The backward twin of a
+    collective (its transpose under the bwd codec) moves the same element
+    count, so training traffic = fwd + analytic bwd.  These formulas match
+    what the implementations below actually emit into HLO (the rings are
+    unrolled ppermute chains of exactly those payloads)."""
+
+    def __enter__(self):
+        self.events = []
+        _rec.events = self.events
+        return self.events
+
+    def __exit__(self, *exc):
+        del _rec.events
+        return False
+
+
+class scope_mult:
+    """Multiplier for collectives traced once inside a scanned group.
+
+    ``remat=True`` marks events whose forward collective re-executes during
+    the rematerialized backward pass (fwd count = 2 in training)."""
+
+    def __init__(self, n: int, remat: bool = False):
+        self.n = n
+        self.remat = remat
+
+    def __enter__(self):
+        self.prev = getattr(_rec, "mult", 1)
+        self.prev_remat = getattr(_rec, "remat", False)
+        _rec.mult = self.prev * self.n
+        _rec.remat = self.prev_remat or self.remat
+        return self
+
+    def __exit__(self, *exc):
+        _rec.mult = self.prev
+        _rec.remat = self.prev_remat
+        return False
+
+
+def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None):
+    events = getattr(_rec, "events", None)
+    if events is None:
+        return
+    leaves = jax.tree_util.tree_leaves(x)
+    elems = sum(l.size for l in leaves)
+    dt = leaves[0].dtype if leaves else jnp.float32
+    events.append(dict(
+        op=op, tag=tag, axis=axis, n=int(lax.axis_size(axis)),
+        elems=int(elems), dtype=str(dt),
+        codec_fwd=c_fwd.name, codec_bwd=c_bwd.name,
+        bwd_op=bwd_op, mult=int(getattr(_rec, "mult", 1)),
+        remat=bool(getattr(_rec, "remat", False)),
+        bidir=_bidir()))
+
+
+def _log(op, tag, codec, payload_bytes, hops):
+    # accounting moved to the public wrappers (_account); kept as a no-op so
+    # the low-level impls stay annotated with their traffic shapes.
+    return
+
+
+class ring_options:
+    """Hillclimb lever: bidirectional rings.
+
+    When on, the compressed reduce-scatter ring splits its payload in two
+    and runs simultaneous CW and CCW ppermute chains — each ICI link
+    carries half the bytes (visible in HLO as paired collective-permutes).
+    The ledger credits the same 2-link utilization to the XLA-native
+    all-gather/all-to-all on the wire, which TPU tori perform
+    bidirectionally anyway (EXPERIMENTS.md §Perf)."""
+
+    def __init__(self, bidir: bool):
+        self.bidir = bidir
+
+    def __enter__(self):
+        self.prev = getattr(_rec, "bidir", False)
+        _rec.bidir = self.bidir
+        return self
+
+    def __exit__(self, *exc):
+        _rec.bidir = self.prev
+        return False
+
+
+def _bidir() -> bool:
+    return bool(getattr(_rec, "bidir", False))
+
+
+def _codec_pair(tag: str):
+    scheme = schemes.current()
+    if tag in ("dp", "zero") or tag.endswith(("_fwd", "_bwd")):
+        # explicit direction (e.g. "tp_bwd" for the optimizer's model-axis
+        # gradient fold) -> same codec both ways
+        c = scheme.codec(tag)
+        return c, c
+    return scheme.codec(f"{tag}_fwd"), scheme.codec(f"{tag}_bwd")
+
+
+def axis_size(axis: str) -> int:
+    return lax.axis_size(axis)
+
+
+_vma = threading.local()
+
+
+class vma_mode:
+    """Whether the surrounding shard_map tracks varying-manual-axes.
+
+    The train step runs with ``check_vma=False`` (see train_step.py); in
+    that mode every value is typed with an empty vma and ``pvary`` must NOT
+    be inserted — its transpose (psum_invariant) rejects untyped values.
+    All vma-cast helpers below become no-ops when this flag is off."""
+
+    def __init__(self, checked: bool):
+        self.checked = checked
+
+    def __enter__(self):
+        self.prev = getattr(_vma, "checked", True)
+        _vma.checked = self.checked
+        return self
+
+    def __exit__(self, *exc):
+        _vma.checked = self.prev
+        return False
+
+
+def _vma_checked() -> bool:
+    return getattr(_vma, "checked", True)
+
+
+def _ensure_varying(x, axis: str):
+    """pvary iff not already varying over ``axis`` (pvary is not idempotent)."""
+    if not _vma_checked():
+        return x
+    vma = getattr(jax.typeof(x), "vma", frozenset())
+    if axis in vma:
+        return x
+    return lax.pvary(x, (axis,))
+
+
+# --------------------------------------------------------------------------
+# block-layout helpers
+# --------------------------------------------------------------------------
+
+def _chunked_blocks(flat: jnp.ndarray, n: int) -> jnp.ndarray:
+    """1-D f32 -> [n, M, BLOCK] with each of the n chunks tile-padded."""
+    per = -(-flat.shape[0] // n)
+    m = ops.padded_rows(per)
+    flat = jnp.pad(flat.astype(jnp.float32), (0, n * m * BLOCK - flat.shape[0]))
+    return flat.reshape(n, m, BLOCK)
+
+
+def _split_for_scatter(x: jnp.ndarray, axis_dim: int, n: int):
+    """x with x.shape[axis_dim] % n == 0 -> ([n, chunk_flat...] blocks, chunk_shape)."""
+    s = x.shape[axis_dim]
+    assert s % n == 0, f"dim {axis_dim} of size {s} not divisible by axis size {n}"
+    chunk_shape = x.shape[:axis_dim] + (s // n,) + x.shape[axis_dim + 1:]
+    xs = x.reshape(x.shape[:axis_dim] + (n, s // n) + x.shape[axis_dim + 1:])
+    xs = jnp.moveaxis(xs, axis_dim, 0)  # [n, ..., s//n, ...]
+    flat = xs.reshape(n, -1)
+    m = ops.padded_rows(flat.shape[1])
+    flat = jnp.pad(flat.astype(jnp.float32),
+                   ((0, 0), (0, m * BLOCK - flat.shape[1])))
+    return flat.reshape(n, m, BLOCK), chunk_shape
+
+
+def _chunk_to_shape(chunk2d: jnp.ndarray, shape, dtype):
+    return ops.from_blocks(chunk2d, shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# the compressed ring (reduce-scatter core)
+# --------------------------------------------------------------------------
+
+def _ring_rs_dir(xb, axis, codec, direction: int):
+    """One directional ring (direction=+1 CW, -1 CCW).  Rank i ends owning
+    the full sum of chunk i."""
+    n = xb.shape[0]
+    idx = lax.axis_index(axis)
+    perm = [(j, (j + direction) % n) for j in range(n)]
+
+    def take(k):
+        return lax.dynamic_index_in_dim(xb, k % n, axis=0, keepdims=False)
+
+    acc = take(idx - direction)
+    wire = codec.encode_blocks(acc)
+    for t in range(n - 1):
+        wire = jax.tree.map(lambda l: lax.ppermute(l, axis, perm), wire)
+        local = take(idx - direction * (2 + t))
+        wire, acc = codec.decode_add_encode_blocks(wire, local)
+    return acc, wire
+
+
+def _ring_reduce_scatter(xb: jnp.ndarray, axis: str, codec: codecs.BqCodec):
+    """xb: [n, M, BLOCK] per-device addends -> (sum chunk [M, BLOCK] f32 owned
+    by this rank (canonical: rank i owns chunk i), final compressed wire).
+
+    Bidirectional mode splits the block rows across two opposite-direction
+    rings, halving per-link bytes."""
+    n = xb.shape[0]
+    m = xb.shape[1]
+    half = (m // 2) // 8 * 8  # keep pallas tile alignment
+    if _bidir() and half >= 8:
+        a1, w1 = _ring_rs_dir(xb[:, :half], axis, codec, +1)
+        a2, w2 = _ring_rs_dir(xb[:, half:], axis, codec, -1)
+        acc = jnp.concatenate([a1, a2], axis=0)
+        wire = jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0),
+                            w1, w2)
+        return acc, wire
+    return _ring_rs_dir(xb, axis, codec, +1)
+
+
+# --------------------------------------------------------------------------
+# primitive implementations (no autodiff)
+# --------------------------------------------------------------------------
+
+def _psum_impl(x, axis, codec):
+    if codec.is_identity:
+        _log("all_reduce", "-", codec, 2 * x.size * x.dtype.itemsize, 1)
+        return lax.psum(x, axis)
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    xb = _chunked_blocks(x.reshape(-1), n)
+    acc, wire = _ring_reduce_scatter(xb, axis, codec)
+    gathered = jax.tree.map(
+        lambda l: lax.all_gather(l, axis, axis=0, tiled=False), wire)
+    _log("ar_allgather", "-", codec, ops.wire_nbytes(wire), n - 1)
+    full = codec.decode_blocks(gathered)            # [n, M, BLOCK]
+    flat = full.reshape(-1)[: x.size]
+    return flat.reshape(x.shape).astype(x.dtype)
+
+
+def _reduce_scatter_impl(x, axis, axis_dim, codec):
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    if codec.is_identity:
+        _log("reduce_scatter", "-", codec, x.size * x.dtype.itemsize, 1)
+        return lax.psum_scatter(x, axis, scatter_dimension=axis_dim, tiled=True)
+    xb, chunk_shape = _split_for_scatter(x, axis_dim, n)
+    acc, _ = _ring_reduce_scatter(xb, axis, codec)
+    return _chunk_to_shape(acc, chunk_shape, x.dtype)
+
+
+def _all_gather_impl(x, axis, axis_dim, codec):
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    if codec.is_identity:
+        _log("all_gather", "-", codec, x.size * x.dtype.itemsize, n - 1)
+        return lax.all_gather(x, axis, axis=axis_dim, tiled=True)
+    wire = codec.encode(x)
+    _log("all_gather", "-", codec, ops.wire_nbytes(wire), n - 1)
+    gathered = jax.tree.map(
+        lambda l: lax.all_gather(l, axis, axis=0, tiled=False), wire)
+    blocks = codec.decode_blocks(gathered)                    # [n, M, BLOCK]
+    # strip each shard's tile padding BEFORE concatenating shards
+    flat = blocks.reshape(n, -1)[:, :x.size]
+    parts = flat.reshape((n,) + x.shape).astype(x.dtype)
+    out = jnp.moveaxis(parts, 0, axis_dim)                    # [..., n, s, ...]
+    shape = list(x.shape)
+    shape[axis_dim] *= n
+    return out.reshape(shape)
+
+
+def _ppermute_impl(x, axis, perm, codec):
+    if codec.is_identity:
+        _log("ppermute", "-", codec, x.size * x.dtype.itemsize, 1)
+        return lax.ppermute(x, axis, perm)
+    wire = codec.encode(x)
+    _log("ppermute", "-", codec, ops.wire_nbytes(wire), 1)
+    wire = jax.tree.map(lambda l: lax.ppermute(l, axis, perm), wire)
+    return codec.decode(wire, x.shape, x.dtype)
+
+
+def _all_to_all_impl(x, axis, split_axis, concat_axis, codec):
+    n = axis_size(axis)
+    if n == 1:
+        return x
+    if codec.is_identity:
+        _log("all_to_all", "-", codec,
+             x.size * x.dtype.itemsize * (n - 1) // n, 1)
+        return lax.all_to_all(x, axis, split_axis=split_axis,
+                              concat_axis=concat_axis, tiled=True)
+    # slice along split_axis, encode each slice, exchange wire, reassemble
+    xb, chunk_shape = _split_for_scatter(x, split_axis, n)   # [n, M, BLOCK]
+    wire = codec.encode_blocks(xb)
+    _log("all_to_all", "-", codec,
+         ops.wire_nbytes(wire) * (n - 1) // n, 1)
+    wire = jax.tree.map(
+        lambda l: lax.all_to_all(l, axis, split_axis=0, concat_axis=0,
+                                 tiled=True), wire)
+    parts = codec.decode_blocks(wire)                        # [n, M, BLOCK]
+    per = 1
+    for d in chunk_shape:
+        per *= d
+    parts = parts.reshape(n, -1)[:, :per].reshape((n,) + chunk_shape)
+    out = jnp.moveaxis(parts, 0, concat_axis)
+    shape = list(chunk_shape)
+    shape[concat_axis] *= n
+    return out.reshape(shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# autodiff-aware public API
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _psum_vjp(x, axis, c_fwd, c_bwd):
+    return _psum_impl(x, axis, c_fwd)
+
+
+def _psum_fwd(x, axis, c_fwd, c_bwd):
+    return _psum_impl(x, axis, c_fwd), None
+
+
+def _psum_bwd(axis, c_fwd, c_bwd, _, g):
+    return (_ensure_varying(_psum_impl(g, axis, c_bwd), axis),)
+
+
+_psum_vjp.defvjp(_psum_fwd, _psum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _ag_vjp(x, axis, axis_dim, c_fwd, c_bwd):
+    return _all_gather_impl(x, axis, axis_dim, c_fwd)
+
+
+def _ag_fwd(x, axis, axis_dim, c_fwd, c_bwd):
+    return _all_gather_impl(x, axis, axis_dim, c_fwd), None
+
+
+def _ag_bwd(axis, axis_dim, c_fwd, c_bwd, _, g):
+    return (_reduce_scatter_impl(g, axis, axis_dim, c_bwd),)
+
+
+_ag_vjp.defvjp(_ag_fwd, _ag_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _rs_vjp(x, axis, axis_dim, c_fwd, c_bwd):
+    return _reduce_scatter_impl(x, axis, axis_dim, c_fwd)
+
+
+def _rs_fwd(x, axis, axis_dim, c_fwd, c_bwd):
+    return _reduce_scatter_impl(x, axis, axis_dim, c_fwd), None
+
+
+def _rs_bwd(axis, axis_dim, c_fwd, c_bwd, _, g):
+    return (_all_gather_impl(g, axis, axis_dim, c_bwd),)
+
+
+_rs_vjp.defvjp(_rs_fwd, _rs_bwd)
+
+
+def _invert_perm(perm):
+    return [(d, s) for (s, d) in perm]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _pp_vjp(x, axis, perm, c_fwd, c_bwd):
+    return _ppermute_impl(x, axis, perm, c_fwd)
+
+
+def _pp_fwd(x, axis, perm, c_fwd, c_bwd):
+    return _ppermute_impl(x, axis, perm, c_fwd), None
+
+
+def _pp_bwd(axis, perm, c_fwd, c_bwd, _, g):
+    return (_ppermute_impl(g, axis, _invert_perm(perm), c_bwd),)
+
+
+_pp_vjp.defvjp(_pp_fwd, _pp_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _a2a_vjp(x, axis, split_axis, concat_axis, c_fwd, c_bwd):
+    return _all_to_all_impl(x, axis, split_axis, concat_axis, c_fwd)
+
+
+def _a2a_fwd(x, axis, split_axis, concat_axis, c_fwd, c_bwd):
+    return _all_to_all_impl(x, axis, split_axis, concat_axis, c_fwd), None
+
+
+def _a2a_bwd(axis, split_axis, concat_axis, c_fwd, c_bwd, _, g):
+    return (_all_to_all_impl(g, axis, concat_axis, split_axis, c_bwd),)
+
+
+_a2a_vjp.defvjp(_a2a_fwd, _a2a_bwd)
+
+
+# ---- Megatron conjugate pair: g (copy fwd / all-reduce bwd) and
+#      f (all-reduce fwd / copy bwd) -------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _g_vjp(x, axis, c_bwd):
+    return x
+
+
+def _g_fwd(x, axis, c_bwd):
+    return x, None
+
+
+def _g_bwd(axis, c_bwd, _, g):
+    return (_ensure_varying(_psum_impl(g, axis, c_bwd), axis),)
+
+
+_g_vjp.defvjp(_g_fwd, _g_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2))
+def _f_vjp(x, axis, c_fwd):
+    return _psum_impl(x, axis, c_fwd)
+
+
+def _f_fwd(x, axis, c_fwd):
+    return _psum_impl(x, axis, c_fwd), None
+
+
+def _f_bwd(axis, c_fwd, _, g):
+    return (_ensure_varying(g, axis),)
+
+
+_f_vjp.defvjp(_f_fwd, _f_bwd)
+
+
+# --------------------------------------------------------------------------
+# public, tag-resolving entry points
+# --------------------------------------------------------------------------
+
+def psum(x, axis: str, tag: str):
+    """All-reduce-sum over ``axis`` under the active scheme's codec for ``tag``."""
+    c_fwd, c_bwd = _codec_pair(tag)
+    _account("all_reduce", tag, x, axis, c_fwd, c_bwd, bwd_op="all_reduce")
+    return _psum_vjp(x, axis, c_fwd, c_bwd)
+
+
+def all_gather(x, axis: str, axis_dim: int, tag: str):
+    c_fwd, c_bwd = _codec_pair(tag)
+    _account("all_gather", tag, x, axis, c_fwd, c_bwd,
+             bwd_op="reduce_scatter")
+    return _ag_vjp(x, axis, axis_dim, c_fwd, c_bwd)
+
+
+def reduce_scatter(x, axis: str, axis_dim: int, tag: str):
+    c_fwd, c_bwd = _codec_pair(tag)
+    _account("reduce_scatter", tag, x, axis, c_fwd, c_bwd,
+             bwd_op="all_gather")
+    return _rs_vjp(x, axis, axis_dim, c_fwd, c_bwd)
+
+
+def ppermute(x, axis: str, perm, tag: str):
+    c_fwd, c_bwd = _codec_pair(tag)
+    _account("ppermute", tag, x, axis, c_fwd, c_bwd, bwd_op="ppermute")
+    return _pp_vjp(x, axis, tuple(perm), c_fwd, c_bwd)
+
+
+def all_to_all(x, axis: str, split_axis: int, concat_axis: int, tag: str):
+    c_fwd, c_bwd = _codec_pair(tag)
+    _account("all_to_all", tag, x, axis, c_fwd, c_bwd, bwd_op="all_to_all")
+    return _a2a_vjp(x, axis, split_axis, concat_axis, c_fwd, c_bwd)
+
+
+def copy_fwd_psum_bwd(x, axis: str, tag: str):
+    """Megatron 'g': identity forward, (compressed) all-reduce backward."""
+    _, c_bwd = _codec_pair(tag)
+    _account("none", tag, x, axis, c_bwd, c_bwd, bwd_op="all_reduce")
+    return _g_vjp(x, axis, c_bwd)
+
+
+def psum_fwd_copy_bwd(x, axis: str, tag: str):
+    """Megatron 'f': (compressed) all-reduce forward, identity backward."""
+    c_fwd, _ = _codec_pair(tag)
+    _account("all_reduce", tag, x, axis, c_fwd, c_fwd, bwd_op=None)
+    return _f_vjp(x, axis, c_fwd)
+
+
+def match_vma(x, like):
+    """pvary pytree ``x`` so its varying-axes type matches ``like``'s leaves.
+
+    Needed wherever a freshly-created zeros/ones scan seed meets values that
+    came through collectives (scan carries must be vma-stable)."""
+    if not _vma_checked():
+        return x
+    vma = frozenset()
+    for l in jax.tree_util.tree_leaves(like):
+        vma = vma | getattr(jax.typeof(l), "vma", frozenset())
+
+    def f(l):
+        cur = getattr(jax.typeof(l), "vma", frozenset())
+        need = tuple(vma - cur)
+        return lax.pvary(l, need) if need else l
+    return jax.tree.map(f, x)
+
+
+def varying_all(x, axes):
+    """pvary a pytree onto every mesh axis (idempotent) — used to give scan
+    carries a stable vma type regardless of which collectives produced
+    them."""
+    if not _vma_checked():
+        return x
+
+    def f(l):
+        for ax in axes:
+            l = _ensure_varying(l, ax)
+        return l
+    return jax.tree.map(f, x)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
+def pmax(x, axis: str):
+    """Max-reduce (never compressed: tiny softmax-stat payloads).
+
+    Carries a zero VJP — its only use is as a numerics stabilizer (shift-
+    invariant logsumexp), where the gradient contribution is exactly zero."""
+    return lax.pmax(x, axis)
+
+
+def _pmax_fwd(x, axis):
+    return lax.pmax(x, axis), None
+
+
+def _pmax_bwd(axis, res, g):
+    return (_ensure_varying(jnp.zeros_like(g), axis),)
+
+
+pmax.defvjp(_pmax_fwd, _pmax_bwd)
+
+
+# --------------------------------------------------------------------------
+# flat-vector paths for the optimizer (outside autodiff)
+# --------------------------------------------------------------------------
+
+def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag: str = "dp",
+                        mean: bool = False) -> jnp.ndarray:
+    """1-D sum-reduce-scatter: rank i returns padded chunk i (len ceil(n/axis))."""
+    c, _ = _codec_pair(tag)
+    _account("reduce_scatter", tag, flat, axis, c, c, bwd_op=None)
+    n = axis_size(axis)
+    if n == 1:
+        return flat / n if mean else flat
+    xb = _chunked_blocks(flat, n)
+    if c.is_identity:
+        _log("reduce_scatter", tag, c, flat.size * flat.dtype.itemsize, 1)
+        chunk = lax.psum_scatter(xb, axis, scatter_dimension=0, tiled=False)
+    else:
+        chunk, _ = _ring_reduce_scatter(xb, axis, c)
+    chunk = chunk.reshape(-1)
+    return chunk / n if mean else chunk
+
+
+def all_gather_flat(chunk: jnp.ndarray, axis: str, total: int,
+                    tag: str = "zero") -> jnp.ndarray:
+    """Inverse of reduce_scatter_flat: gather padded chunks, trim to ``total``."""
+    c, _ = _codec_pair(tag)
+    _account("all_gather", tag, chunk, axis, c, c, bwd_op=None)
+    n = axis_size(axis)
+    if n == 1:
+        return chunk[:total]
+    if c.is_identity:
+        _log("all_gather", tag, c, chunk.size * chunk.dtype.itemsize, n - 1)
+        full = lax.all_gather(chunk, axis, axis=0, tiled=True)
+    else:
+        x2d = chunk.reshape(-1, BLOCK)
+        wire = c.encode_blocks(x2d)
+        _log("all_gather", tag, c, ops.wire_nbytes(wire), n - 1)
+        gathered = jax.tree.map(
+            lambda l: lax.all_gather(l, axis, axis=0, tiled=True), wire)
+        full = c.decode_blocks(gathered).reshape(-1)
+    return full[:total]

@@ -1,0 +1,129 @@
+"""Compression schemes: which codec rides on which parallelism dimension.
+
+Direct transcription of the paper's Tables II/III plus the naive baselines
+from §IV-C/D.  A scheme maps a *communication tag* (what kind of traffic a
+collective carries) to a codec:
+
+  dp    — data-parallel gradient reduce-scatter / all-reduce   (paper: DP AR)
+  zero  — ZeRO-1 param all-gather / grad reduce-scatter        (paper: ZeRO)
+  tp    — tensor-parallel activation (fwd) / gradient (bwd)    (paper: TP AR/AG)
+  pp    — point-to-point traffic: pipeline handoff, ring-attention KV hops,
+          SSM/xLSTM cross-shard state, conv halos              (paper: PP p2p)
+  ep    — MoE token all-to-all (activation-class traffic; the paper's related
+          work [29] compresses all-to-all the same way)
+
+Each tag has a fwd and bwd codec — the paper's §III-A rule that gradients
+flowing through MP collectives in the backward pass must also be covered by
+the MP codec (and never double-compressed more aggressively than DP).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+
+from repro.core import codecs
+
+
+@dataclasses.dataclass(frozen=True)
+class Scheme:
+    name: str
+    dp: str = "none"
+    zero: str = "none"
+    tp_fwd: str = "none"
+    tp_bwd: str = "none"
+    pp_fwd: str = "none"
+    pp_bwd: str = "none"
+    ep_fwd: str = "none"
+    ep_bwd: str = "none"
+
+    def codec(self, tag: str) -> codecs.Codec:
+        try:
+            return codecs.get(getattr(self, tag))
+        except AttributeError:
+            raise KeyError(f"unknown comm tag {tag!r}") from None
+
+    @classmethod
+    def uniform(cls, name: str, codec_name: str) -> "Scheme":
+        fields = {f.name: codec_name for f in dataclasses.fields(cls)
+                  if f.name != "name"}
+        return cls(name=name, **fields)
+
+    @classmethod
+    def hybrid(cls, name: str, dp: str, mp: str, zero: str | None = None) -> "Scheme":
+        """Paper-style hybrid: one codec for DP, one for all MP + ZeRO traffic."""
+        z = zero if zero is not None else mp
+        return cls(name=name, dp=dp, zero=z,
+                   tp_fwd=mp, tp_bwd=mp, pp_fwd=mp, pp_bwd=mp,
+                   ep_fwd=mp, ep_bwd=mp)
+
+
+BASELINE = Scheme(name="baseline")                                  # stock collectives
+NAIVE_ZFP8 = Scheme.uniform("naive_zfp8", "bq8")                    # paper §IV-C
+NAIVE_ZFP16 = Scheme.uniform("naive_zfp16", "bq16")
+NAIVE_MPC = Scheme.uniform("naive_mpc", "mpc")                      # paper §IV-D
+MZHYBRID8 = Scheme.hybrid("mzhybrid8", dp="bq8", mp="mpc")          # paper Table II
+MZHYBRID16 = Scheme.hybrid("mzhybrid16", dp="bq16", mp="mpc")
+ZHYBRID_16_8 = Scheme.hybrid("zhybrid_16_8", dp="bq8", mp="bq16")   # paper Table III
+ZHYBRID_24_8 = Scheme.hybrid("zhybrid_24_8", dp="bq8", mp="bq24")
+# beyond-paper rate-4 points: the block-scaled codec tolerates rate 8 where
+# bitplane ZFP degraded, so the rate->quality knee sits lower (EXPERIMENTS.md)
+NAIVE_ZFP4 = Scheme.uniform("naive_zfp4", "bq4")
+ZHYBRID_16_4 = Scheme.hybrid("zhybrid_16_4", dp="bq4", mp="bq16")
+# scale-granularity ablation (classic global-scale rate-8 — the regime in
+# which the paper observed naive-compression loss degradation)
+NAIVE_GQ8 = Scheme.uniform("naive_gq8", "gq8")
+MZHYBRID_G8 = Scheme.hybrid("mzhybrid_g8", dp="gq8", mp="mpc")
+# rounding-bias ablation (ZFP truncated-bitplane error profile)
+NAIVE_TQ8 = Scheme.uniform("naive_tq8", "tq8")
+MZHYBRID_T8 = Scheme.hybrid("mzhybrid_t8", dp="tq8", mp="mpc")
+# bf16-native ZHybrid: the paper compressed fp32 wires, so its rate-16 MP
+# setting is a no-op on bf16 traffic — halving both rates restores the
+# intended compression ratios (EXPERIMENTS.md §Perf)
+ZHYBRID_8_4 = Scheme.hybrid("zhybrid_8_4", dp="bq4", mp="bq8")
+
+_REGISTRY = {s.name: s for s in (
+    BASELINE, NAIVE_ZFP8, NAIVE_ZFP16, NAIVE_MPC,
+    MZHYBRID8, MZHYBRID16, ZHYBRID_16_8, ZHYBRID_24_8,
+    NAIVE_ZFP4, ZHYBRID_16_4, NAIVE_GQ8, MZHYBRID_G8,
+    NAIVE_TQ8, MZHYBRID_T8, ZHYBRID_8_4,
+)}
+
+
+def get(name) -> Scheme:
+    if isinstance(name, Scheme):
+        return name
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown scheme {name!r}; have {sorted(_REGISTRY)}") from None
+
+
+def names() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# trace-time scheme context: set once around the jitted step; comm calls in
+# model code read it.  Thread-local so parallel tracing stays correct.
+# --------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+def current() -> Scheme:
+    return getattr(_ctx, "scheme", BASELINE)
+
+
+@contextlib.contextmanager
+def use(scheme) -> "Scheme":
+    prev = getattr(_ctx, "scheme", None)
+    _ctx.scheme = get(scheme)
+    try:
+        yield _ctx.scheme
+    finally:
+        if prev is None:
+            del _ctx.scheme
+        else:
+            _ctx.scheme = prev

@@ -1,0 +1,127 @@
+"""Public, jit-friendly entry points for the bq codec kernels.
+
+Backend dispatch:
+  * ``auto``              -> compiled Pallas on TPU, pure-jnp oracle elsewhere
+                             (bit-identical math either way — see ref.py)
+  * ``jnp``               -> force the oracle (fast on CPU; used by dry-run)
+  * ``pallas``            -> force compiled Pallas (TPU)
+  * ``pallas_interpret``  -> Pallas interpret mode (CPU kernel validation)
+
+Shape handling: tensors of any shape are flattened, padded to a whole number
+of (TILE_M x BLOCK) tiles, and viewed as an (M, 128) block matrix — the layout
+the kernels and the ring-collective hops operate on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+import functools
+
+from repro.kernels import bq, ref
+from repro.kernels.ref import BLOCK
+
+# jitted oracle entry points: the oracle must go through XLA like the kernels
+# do, so CPU validation compares compiled-vs-compiled (same fusion decisions).
+_encode_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_encode_ref)
+_decode_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_ref)
+_dae_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_add_encode_ref)
+
+_TILE_ELEMS = bq.TILE_M * BLOCK
+
+_DEFAULT_BACKEND = "auto"
+
+
+def set_default_backend(name: str) -> None:
+    global _DEFAULT_BACKEND
+    assert name in ("auto", "jnp", "pallas", "pallas_interpret"), name
+    _DEFAULT_BACKEND = name
+
+
+def _resolve(backend: str | None) -> str:
+    b = backend or _DEFAULT_BACKEND
+    if b == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return b
+
+
+def padded_rows(n: int) -> int:
+    """Number of BLOCK-wide rows after padding n elements to whole tiles."""
+    n_pad = max(-(-n // _TILE_ELEMS), 1) * _TILE_ELEMS
+    return n_pad // BLOCK
+
+
+def to_blocks(x: jnp.ndarray) -> jnp.ndarray:
+    """Flatten + zero-pad to an (M, 128) f32 block matrix."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    n = flat.shape[0]
+    m = padded_rows(n)
+    flat = jnp.pad(flat, (0, m * BLOCK - n))
+    return flat.reshape(m, BLOCK)
+
+
+def from_blocks(x2d: jnp.ndarray, shape, dtype=jnp.float32) -> jnp.ndarray:
+    """Inverse of :func:`to_blocks`."""
+    n = 1
+    for d in shape:
+        n *= d
+    return x2d.reshape(-1)[:n].reshape(shape).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# block-matrix level ops (used directly by the ring collectives)
+# --------------------------------------------------------------------------
+
+def bq_encode_blocks(x2d: jnp.ndarray, bits: int, backend: str | None = None):
+    """(M,128) f32 -> wire dict {q_hi, q_lo|None, scale}."""
+    be = _resolve(backend)
+    if be == "jnp":
+        hi, lo, scale = _encode_ref(x2d, bits=bits)
+    else:
+        hi, lo, scale = bq.bq_encode_pallas(
+            x2d, bits, interpret=(be == "pallas_interpret"))
+    return {"q_hi": hi, "q_lo": lo, "scale": scale}
+
+
+def bq_decode_blocks(wire: dict, bits: int, backend: str | None = None) -> jnp.ndarray:
+    """wire dict -> (M,128) f32."""
+    be = _resolve(backend)
+    if be == "jnp":
+        return _decode_ref(wire["q_hi"], wire["q_lo"], wire["scale"], bits=bits)
+    return bq.bq_decode_pallas(
+        wire["q_hi"], wire["q_lo"], wire["scale"], bits,
+        interpret=(be == "pallas_interpret"))
+
+
+def bq_decode_add_encode_blocks(wire: dict, local2d: jnp.ndarray, bits: int,
+                                backend: str | None = None):
+    """Fused ring hop: returns (wire', sum_f32 (M,128))."""
+    be = _resolve(backend)
+    if be == "jnp":
+        hi, lo, scale, s = _dae_ref(
+            wire["q_hi"], wire["q_lo"], wire["scale"], local2d, bits=bits)
+    else:
+        hi, lo, scale, s = bq.bq_decode_add_encode_pallas(
+            wire["q_hi"], wire["q_lo"], wire["scale"], local2d, bits,
+            interpret=(be == "pallas_interpret"))
+    return {"q_hi": hi, "q_lo": lo, "scale": scale}, s
+
+
+# --------------------------------------------------------------------------
+# tensor-level ops (arbitrary shape; used by one-shot encode/decode paths)
+# --------------------------------------------------------------------------
+
+def bq_encode(x: jnp.ndarray, bits: int, backend: str | None = None):
+    return bq_encode_blocks(to_blocks(x), bits, backend)
+
+
+def bq_decode(wire: dict, bits: int, shape, dtype=jnp.float32,
+              backend: str | None = None) -> jnp.ndarray:
+    return from_blocks(bq_decode_blocks(wire, bits, backend), shape, dtype)
+
+
+def wire_nbytes(wire) -> int:
+    """Actual bytes crossing the interconnect for a wire pytree."""
+    return sum(l.size * l.dtype.itemsize
+               for l in jax.tree_util.tree_leaves(wire))

@@ -1,0 +1,266 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, impossible collectives, or spec bugs fail here.  Emits
+memory_analysis / cost_analysis / collective-ledger JSON per cell for the
+roofline tables (EXPERIMENTS.md §Dry-run, §Roofline).
+
+Usage:
+  python -m repro.launch.dryrun --arch gemma3-1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--scheme zhybrid_16_8]
+"""
+
+# The placeholder-device flag MUST precede any other import (jax locks the
+# device count on first init).
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import pathlib       # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
+
+from repro import configs                     # noqa: E402
+from repro.analysis import costmodel          # noqa: E402
+from repro.analysis import roofline as rl     # noqa: E402
+from repro.core import comms                  # noqa: E402
+from repro.launch import mesh as meshlib      # noqa: E402
+from repro.launch import specs as speclib     # noqa: E402
+from repro.models.model import Model          # noqa: E402
+from repro.models.params import MeshInfo, count_params  # noqa: E402
+from repro.serve.serve_step import Server     # noqa: E402
+from repro.train.train_step import Trainer, batch_specs  # noqa: E402
+
+
+def _lower_cell(cfg, mesh, scheme, shape_name, bidir=False):
+    """-> (lowered, events, meta). Raises on sharding bugs."""
+    mi = MeshInfo.from_mesh(mesh)
+    model = Model(cfg, mi)
+    spec = speclib.input_specs(cfg, shape_name, mi)
+    pstructs = model.structs()
+
+    with comms.record_traffic() as events:
+        if spec["kind"] == "train":
+            trainer = Trainer(model, mesh, scheme=scheme, ring_bidir=bidir)
+            ostructs = jax.eval_shape(trainer.opt_init, pstructs)
+            lowered = trainer.step.lower(pstructs, ostructs, spec["inputs"])
+            tokens = spec["meta"]["seq"] * spec["meta"]["batch"]
+            train = True
+        elif spec["kind"] == "prefill":
+            srv = Server(model, mesh, scheme=scheme, ring_bidir=bidir)
+            bspecs = {k: batch_specs(cfg, mi).get(k, P(mi.batch_axes, None))
+                      for k in spec["inputs"]}
+            pre = srv.prefill_step(bspecs, spec["meta"]["batch"])
+            lowered = pre.lower(pstructs, spec["inputs"])
+            tokens = spec["meta"]["seq"] * spec["meta"]["batch"]
+            train = False
+        else:  # decode
+            meta = spec["meta"]
+            srv = Server(model, mesh, scheme=scheme,
+                         seq_axes=meta["seq_axes"], ring_bidir=bidir)
+            dec, cstructs, _ = srv.decode_step(
+                meta["batch"], meta["seq"], s_enc=meta["s_enc"])
+            lowered = dec.lower(
+                pstructs, spec["inputs"]["token"], cstructs,
+                jax.ShapeDtypeStruct((), jnp.int32))
+            tokens = meta["batch"]  # one new token per sequence
+            train = False
+    return lowered, events, dict(model=model, tokens=tokens, train=train,
+                                 spec=spec)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, scheme: str,
+             compile_: bool = True, bidir: bool = False,
+             cfg_overrides: dict | None = None,
+             mesh_override=None, tag: str = "") -> dict:
+    cfg = configs.get(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    ok, why = speclib.cell_supported(cfg, shape_name)
+    mesh_name = tag or ("pod2x16x16" if multi_pod else "pod16x16")
+    base = dict(arch=arch, shape=shape_name, mesh=mesh_name, scheme=scheme,
+                bidir=bidir, overrides=cfg_overrides or {})
+    if not ok:
+        return {**base, "status": "skipped", "why": why}
+
+    t0 = time.time()
+    if mesh_override is not None:
+        mesh = meshlib.make_mesh(*mesh_override)
+    else:
+        mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    try:
+        lowered, events, meta = _lower_cell(cfg, mesh, scheme, shape_name,
+                                            bidir=bidir)
+    except Exception as e:  # lowering failure = sharding bug
+        return {**base, "status": "lower_failed", "error": repr(e),
+                "trace": traceback.format_exc()[-2000:]}
+    t_lower = time.time() - t0
+
+    led = rl.ledger_summary(events, train=meta["train"])
+    mi = MeshInfo.from_mesh(mesh)
+    n_params = count_params(Model(cfg, mi).plan)
+    n_active = rl.active_params(cfg, n_params)
+    mflops = rl.model_flops(cfg, n_active, meta["tokens"])
+    if not meta["train"]:
+        mflops /= 3.0  # decode/prefill: 2ND (fwd only); 6ND counts fwd+bwd
+
+    sp = meta["spec"]
+    ana = costmodel.cost_for(
+        cfg, mi, sp["kind"] if sp["kind"] != "decode_long" else "decode",
+        sp["meta"]["batch"], sp["meta"]["seq"], n_active, n_params,
+        seq_axes=sp["meta"].get("seq_axes", ("model",)))
+
+    out = {**base, "status": "lowered", "chips": n_chips,
+           "lower_s": round(t_lower, 1),
+           "params": n_params, "active_params": n_active,
+           "tokens": meta["tokens"],
+           "analytic": {"flops": ana.flops, "hbm_bytes": ana.hbm_bytes},
+           "collective": {k: (round(v, 1) if isinstance(v, float) else
+                              {kk: round(vv, 1) for kk, vv in v.items()})
+                          for k, v in led.items()},
+           "n_events": len(events)}
+
+    # roofline terms: analytic flops/bytes (scan-aware; raw HLO cost_analysis
+    # under-counts while bodies) + ledger collective bytes.  Computable from
+    # the lowering alone.
+    r = rl.roofline({"flops": ana.flops, "bytes accessed": ana.hbm_bytes},
+                    led["total_bytes"], n_chips, mflops)
+    out["roofline"] = {k: (round(v, 6) if isinstance(v, float) else v)
+                       for k, v in r.to_dict().items()}
+
+    if not compile_:
+        return out
+
+    t0 = time.time()
+    try:
+        compiled = lowered.compile()
+    except Exception as e:
+        return {**out, "status": "compile_failed", "error": repr(e),
+                "trace": traceback.format_exc()[-2000:]}
+    out["compile_s"] = round(time.time() - t0, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        out["memory_analysis"] = {
+            k: int(getattr(mem, k))
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:
+        out["memory_analysis"] = {"error": repr(e)}
+    try:
+        cost = compiled.cost_analysis()
+        out["cost_analysis"] = {k: float(v) for k, v in cost.items()
+                                if isinstance(v, (int, float))
+                                and k in ("flops", "bytes accessed",
+                                          "transcendentals")}
+    except Exception as e:
+        cost = {}
+        out["cost_analysis"] = {"error": repr(e)}
+
+    try:
+        hlo = compiled.as_text()
+        out["hlo_collectives"] = rl.hlo_collective_counts(hlo)
+    except Exception:
+        out["hlo_collectives"] = {}
+    out["status"] = "ok"
+    return out
+
+
+def all_cells():
+    for arch in configs.ARCH_IDS:
+        for shape in speclib.SHAPES:
+            yield arch, shape
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(speclib.SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--scheme", default="zhybrid_16_8")
+    ap.add_argument("--no-compile", action="store_true")
+    ap.add_argument("--refresh", action="store_true",
+                    help="re-lower only, merging ledger/analytic/roofline "
+                         "into existing result JSONs (keeps compiled "
+                         "memory/cost/hlo fields)")
+    ap.add_argument("--bidir", action="store_true",
+                    help="bidirectional compressed rings (§Perf lever)")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ArchConfig override, e.g. --set moe_ws=True")
+    ap.add_argument("--mesh", default="",
+                    help="override mesh 'dp,tp[,pod]' (§Perf re-mesh lever)")
+    ap.add_argument("--tag", default="",
+                    help="result-file tag for hillclimb artifacts")
+    ap.add_argument("--out-dir", default="benchmarks/results/dryrun")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        overrides[k] = {"True": True, "False": False}.get(v) \
+            if v in ("True", "False") else (int(v) if v.isdigit() else v)
+    mesh_override = tuple(int(x) for x in args.mesh.split(",")) \
+        if args.mesh else None
+
+    cells = list(all_cells()) if args.all else [(args.arch, args.shape)]
+    out_dir = pathlib.Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    mesh_name = args.tag or ("pod2x16x16" if args.multi_pod else "pod16x16")
+
+    failures = 0
+    for arch, shape in cells:
+        fn = out_dir / f"{mesh_name}-{args.scheme}-{arch}-{shape}.json"
+        if args.refresh:
+            res = run_cell(arch, shape, args.multi_pod, args.scheme,
+                           compile_=False)
+            if fn.exists() and res["status"] == "lowered":
+                old = json.loads(fn.read_text())
+                for k in ("memory_analysis", "cost_analysis",
+                          "hlo_collectives", "compile_s"):
+                    if k in old:
+                        res[k] = old[k]
+                res["status"] = "ok" if old["status"] == "ok" \
+                    else old["status"]
+            fn.write_text(json.dumps(res, indent=1))
+            r = res.get("roofline", {})
+            print(f"[refr] {arch:22s} {shape:12s} "
+                  f"dominant={r.get('dominant', '-'):10s} "
+                  f"mfu={r.get('mfu', 0):.3f}")
+            jax.clear_caches()
+            continue
+        res = run_cell(arch, shape, args.multi_pod, args.scheme,
+                       compile_=not args.no_compile, bidir=args.bidir,
+                       cfg_overrides=overrides or None,
+                       mesh_override=mesh_override, tag=args.tag)
+        fn.write_text(json.dumps(res, indent=1))
+        status = res["status"]
+        if status in ("lower_failed", "compile_failed"):
+            failures += 1
+            print(f"[FAIL] {arch:22s} {shape:12s} {status}: "
+                  f"{res.get('error', '')[:120]}")
+        elif status == "skipped":
+            print(f"[skip] {arch:22s} {shape:12s} {res['why'][:60]}")
+        else:
+            r = res.get("roofline", {})
+            print(f"[ ok ] {arch:22s} {shape:12s} "
+                  f"lower={res.get('lower_s', 0):6.1f}s "
+                  f"compile={res.get('compile_s', 0):6.1f}s "
+                  f"dominant={r.get('dominant', '-'):10s} "
+                  f"mfu={r.get('mfu', 0):.3f}")
+        jax.clear_caches()
+    if failures:
+        raise SystemExit(f"{failures} cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production mesh definitions.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets its 512-placeholder-device
+XLA flag before the first jax init.
+
+Mapping (DESIGN.md §4): ``model`` = TP/EP/SP, ``data`` = DP + ZeRO shards,
+``pod`` (multi-pod) = outer DP — cross-pod traffic is exactly the DP
+gradient reduction the paper compresses hardest, riding the slowest links.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import math
+    need = math.prod(shape)
+    return jax.make_mesh(
+        shape, axes,
+        devices=jax.devices()[:need],
+        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(dp: int, tp: int, pod: int = 1):
+    """Arbitrary mesh for tests / elastic restarts / smoke runs."""
+    if pod > 1:
+        return jax.make_mesh(
+            (pod, dp, tp), ("pod", "data", "model"),
+            axis_types=(jax.sharding.AxisType.Auto,) * 3)
+    return jax.make_mesh(
+        (dp, tp), ("data", "model"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,83 @@
+"""The 40 assigned (architecture x input-shape) dry-run cells.
+
+``input_specs(cfg, shape_name, mi)`` returns ShapeDtypeStruct stand-ins for
+every model input (weak-type-correct, shardable, no device allocation) plus
+the matching PartitionSpecs and which step they lower:
+
+  train_4k     seq 4096   gb 256  -> train_step
+  prefill_32k  seq 32768  gb 32   -> prefill (forward + cache emission)
+  decode_32k   seq 32768  gb 128  -> serve_step (1 token, 32k KV/state)
+  long_500k    seq 524288 gb 1    -> serve_step; KV seq-sharded over
+                                     (data, model); only for archs with a
+                                     sub-quadratic story (long_context_ok)
+
+Encoder-decoder (whisper) runs decode shapes on its decoder; pure
+full-attention archs skip long_500k (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig
+from repro.models.params import MeshInfo
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode_long", seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape_name: str) -> tuple[bool, str]:
+    if shape_name == "long_500k" and not cfg.long_context_ok:
+        return False, ("skipped: pure full-attention arch (quadratic "
+                       "long-context); see DESIGN.md §5")
+    return True, ""
+
+
+def _sds(shape, dtype=jnp.int32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape_name: str, mi: MeshInfo):
+    """-> dict(kind=..., inputs={name: ShapeDtypeStruct},
+               specs={name: PartitionSpec}, meta={...})"""
+    sh = SHAPES[shape_name]
+    S, B = sh["seq"], sh["batch"]
+    kind = sh["kind"]
+    act = jnp.dtype(cfg.dtype)
+
+    if kind in ("train", "prefill"):
+        inputs = {"tokens": _sds((B, S)), "labels": _sds((B, S))}
+        specs = {"tokens": P(mi.batch_axes, None),
+                 "labels": P(mi.batch_axes, None)}
+        if cfg.encoder_layers:
+            inputs["frames"] = _sds((B, S, cfg.d_model), act)
+            specs["frames"] = P(mi.batch_axes, mi.model_axis, None)
+        if cfg.mrope:
+            inputs["vision"] = _sds((B, S, cfg.d_model), act)
+            inputs["vis_mask"] = _sds((B, S), jnp.bool_)
+            inputs["pos3"] = _sds((B, S, 3))
+            specs["vision"] = P(mi.batch_axes, mi.model_axis, None)
+            specs["vis_mask"] = P(mi.batch_axes, mi.model_axis)
+            specs["pos3"] = P(mi.batch_axes, mi.model_axis, None)
+        return dict(kind=kind, inputs=inputs, specs=specs,
+                    meta=dict(seq=S, batch=B))
+
+    # decode shapes: one new token against an S-token cache
+    seq_axes = ("model",) if kind == "decode" else ("data", "model")
+    tok_sp = P(mi.batch_axes if (B > 1 and "data" not in seq_axes) else None,
+               None)
+    inputs = {"token": _sds((B, 1))}
+    specs = {"token": tok_sp}
+    s_enc = 0
+    if cfg.encoder_layers:
+        s_enc = 4096  # stub frame count for the cross cache
+    return dict(kind="decode", inputs=inputs, specs=specs,
+                meta=dict(seq=S, batch=B, seq_axes=seq_axes, s_enc=s_enc))

@@ -1,0 +1,120 @@
+"""Top-level model: init / train-loss / prefill / decode, per family.
+
+All methods here run *inside* shard_map (the train/serve steps wrap them);
+activations follow the layouts of DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import layers, transformer
+from repro.models.config import ArchConfig
+from repro.models.params import (MeshInfo, init_params, param_specs,
+                                 param_structs)
+
+_F32 = jnp.float32
+_LB_COEF = 0.01  # MoE load-balance aux weight
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig, mi: MeshInfo):
+        self.cfg = cfg
+        self.mi = mi
+        self.mode = cfg.attn_mode_for(mi.tp)
+        self.plan = transformer.model_plan(cfg, mi)
+
+    # -- params ----------------------------------------------------------
+    def init(self, key):
+        return init_params(self.plan, key)
+
+    def specs(self):
+        return param_specs(self.plan)
+
+    def structs(self):
+        return param_structs(self.plan)
+
+    # -- helpers ---------------------------------------------------------
+    def _positions(self, B, S_loc):
+        base = lax.axis_index(self.mi.model_axis) * S_loc
+        pos = base + jnp.arange(S_loc, dtype=jnp.int32)
+        return jnp.broadcast_to(pos[None], (B, S_loc))
+
+    def _dec_groups(self):
+        return [(i, g) for i, g in enumerate(self.cfg.layer_groups)
+                if g.kind != "enc_attn"]
+
+    def _enc_groups(self):
+        return [(i, g) for i, g in enumerate(self.cfg.layer_groups)
+                if g.kind == "enc_attn"]
+
+    def _encode(self, params, frames, phase):
+        """Whisper encoder stack over stub frame embeddings."""
+        cfg, mi = self.cfg, self.mi
+        x = frames.astype(jnp.dtype(cfg.dtype))
+        pos = self._positions(x.shape[0], x.shape[1])
+        for i, g in self._enc_groups():
+            x, _, _ = transformer.run_group(
+                params["groups"][i], x, g, cfg, mi, self.mode, pos,
+                "train")
+        return layers.norm(params["enc_norm"], x, cfg, mi), pos
+
+    def _embed_input(self, params, batch):
+        cfg, mi = self.cfg, self.mi
+        x = layers.embed(params["embed"], batch["tokens"], cfg, mi)
+        if cfg.mrope and "vision" in batch:
+            mask = batch["vis_mask"][..., None]
+            x = jnp.where(mask, batch["vision"].astype(x.dtype), x)
+        return x
+
+    # -- training forward + loss -----------------------------------------
+    def forward(self, params, batch, phase="train"):
+        """Returns (logits [B,S_loc,V_loc] f32, caches, aux)."""
+        cfg, mi = self.cfg, self.mi
+        cross = cross_pos = None
+        if cfg.encoder_layers:
+            cross, cross_pos = self._encode(params, batch["frames"], phase)
+        x = self._embed_input(params, batch)
+        B, S_loc = x.shape[:2]
+        pos = self._positions(B, S_loc)
+        pos3 = batch.get("pos3") if cfg.mrope else None
+
+        caches, aux_tot = [], transformer._zero_aux()
+        for i, g in enumerate(cfg.layer_groups):
+            if g.kind == "enc_attn":
+                caches.append(None)
+                continue
+            x, cache, aux = transformer.run_group(
+                params["groups"][i], x, g, cfg, mi, self.mode, pos, phase,
+                shared=params.get("shared"), cross=cross,
+                cross_pos=cross_pos, pos3=pos3)
+            caches.append(cache)
+            aux_tot = jax.tree.map(lambda a, b: a + b, aux_tot, aux)
+        x = layers.norm(params["final_norm"], x, cfg, mi)
+        logits = layers.lm_head_logits(params, x, cfg, mi)
+        return logits, caches, aux_tot
+
+    def loss_fn(self, params, batch):
+        """Global-mean token cross-entropy (+ MoE aux). Scalar, replicated."""
+        cfg, mi = self.cfg, self.mi
+        logits, _, aux = self.forward(params, batch, phase="train")
+        # logits cover the FULL sequence on every model shard (lm_head
+        # gathers seq), so the loss reduces over the batch axes only.
+        ltok, w = layers.vocab_parallel_xent(logits, batch["labels"], cfg, mi)
+        from repro.core import comms
+        num, den = comms.varying_all((jnp.sum(ltok), jnp.sum(w)), mi.all_axes)
+        num = lax.psum(num, mi.batch_axes)
+        den = lax.psum(den, mi.batch_axes)
+        # ltok is replicated over the model axis (full-seq logits on every
+        # model shard); pmean folds the replication into an invariant scalar.
+        num = lax.pmean(num, mi.model_axis)
+        den = lax.pmean(den, mi.model_axis)
+        loss = num / jnp.maximum(den, 1.0)
+        if cfg.n_experts:
+            loss = loss + _LB_COEF * lax.pmean(
+                aux["lb_loss"], (mi.model_axis,) + mi.batch_axes)
+        metrics = {"xent": num / jnp.maximum(den, 1.0),
+                   "tokens": den}
+        return loss, metrics

@@ -1,0 +1,197 @@
+"""Parameter plans: shapes, shardings, and initializers declared together.
+
+A *plan* is a pytree whose leaves are :class:`ParamDef`.  From one plan we
+derive (a) initialized global arrays, (b) ``PartitionSpec``s for the
+shard_map boundary, (c) ``ShapeDtypeStruct``s for the dry-run — guaranteeing
+the three never drift apart.
+
+Sharding conventions (DESIGN.md §4):
+  * dims tagged "model" implement tensor/expert/vocab parallelism;
+  * ZeRO-3/FSDP ("fsdp_params") additionally shards the largest untagged,
+    divisible dim of big leaves over "data" — those leaves are all-gathered
+    just-in-time inside the layer (tag ``zero``, compressed per scheme).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshInfo:
+    """Logical view of the device mesh the model code shards over."""
+
+    tp: int = 1
+    dp: int = 1
+    pod: int = 1
+    model_axis: str = "model"
+    data_axis: str = "data"
+    pod_axis: str | None = None
+
+    @property
+    def batch_axes(self):
+        """Mesh axes the global batch is sharded over."""
+        if self.pod_axis and self.pod > 1:
+            return (self.pod_axis, self.data_axis)
+        return (self.data_axis,)
+
+    @property
+    def batch_ways(self) -> int:
+        return self.dp * (self.pod if self.pod_axis else 1)
+
+    @property
+    def all_axes(self):
+        return self.batch_axes + (self.model_axis,)
+
+    @classmethod
+    def from_mesh(cls, mesh) -> "MeshInfo":
+        ax = dict(zip(mesh.axis_names, mesh.devices.shape))
+        return cls(tp=ax.get("model", 1), dp=ax.get("data", 1),
+                   pod=ax.get("pod", 1),
+                   pod_axis="pod" if "pod" in ax else None)
+
+
+@dataclasses.dataclass
+class Pv:
+    """A param leaf: the (local, inside shard_map) array plus its static
+    sharding spec.  Registered as a pytree with ``spec`` as metadata, so
+    gradients keep the spec and the optimizer/train-step can route each
+    leaf (fsdp re-gather, model-axis grad psum, dp reduce) without a
+    side-channel."""
+
+    v: object
+    spec: tuple = ()
+
+
+jax.tree_util.register_dataclass(Pv, data_fields=["v"], meta_fields=["spec"])
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: tuple
+    spec: tuple           # per-dim: None | "model" | "data" (fsdp)
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02
+    dtype: str = "bfloat16"
+    fsdp_ok: bool = True  # eligible for ZeRO-3 sharding over data
+
+    @property
+    def pspec(self) -> P:
+        return P(*self.spec)
+
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+
+def D(shape, spec=None, init="normal", scale=0.02, dtype="bfloat16",
+      fsdp_ok=True) -> ParamDef:
+    spec = spec if spec is not None else (None,) * len(shape)
+    assert len(spec) == len(shape), (shape, spec)
+    return ParamDef(tuple(shape), tuple(spec), init, scale, dtype, fsdp_ok)
+
+
+def _is_def(x):
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, plan):
+    return jax.tree_util.tree_map(fn, plan, is_leaf=_is_def)
+
+
+# --------------------------------------------------------------------------
+# FSDP annotation (ZeRO-3 over the data axis)
+# --------------------------------------------------------------------------
+
+_FSDP_MIN_SIZE = 1 << 20  # leaves below 1M elements stay replicated
+
+
+def apply_fsdp(plan, dp: int):
+    """Shard the largest free, divisible dim of each big leaf over 'data'."""
+
+    def annotate(d: ParamDef) -> ParamDef:
+        if not d.fsdp_ok or d.size() < _FSDP_MIN_SIZE or dp <= 1:
+            return d
+        best = None
+        for i, (s, sp) in enumerate(zip(d.shape, d.spec)):
+            if sp is None and s % dp == 0:
+                if best is None or s > d.shape[best]:
+                    best = i
+        if best is None:
+            return d
+        spec = list(d.spec)
+        spec[best] = "data"
+        return dataclasses.replace(d, spec=tuple(spec))
+
+    return tree_map_defs(annotate, plan)
+
+
+def fsdp_dim(spec: tuple) -> int | None:
+    """Which dim (if any) of a local leaf must be re-gathered over data."""
+    for i, s in enumerate(spec):
+        if s == "data":
+            return i
+    return None
+
+
+# --------------------------------------------------------------------------
+# materialization
+# --------------------------------------------------------------------------
+
+def init_params(plan, key):
+    """Materialize global arrays, wrapped in Pv(array, spec)."""
+    leaves, treedef = jax.tree_util.tree_flatten(plan, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for k, d in zip(keys, leaves):
+        dt = jnp.dtype(d.dtype)
+        if d.init == "zeros":
+            v = jnp.zeros(d.shape, dt)
+        elif d.init == "ones":
+            v = jnp.ones(d.shape, dt)
+        else:
+            v = (jax.random.normal(k, d.shape, jnp.float32)
+                 * d.scale).astype(dt)
+        out.append(Pv(v, d.spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_specs(plan):
+    """Same tree shape as init_params (Pv leaves flatten to the inner spec)."""
+    return tree_map_defs(lambda d: Pv(d.pspec, d.spec), plan)
+
+
+def param_structs(plan):
+    return tree_map_defs(
+        lambda d: Pv(jax.ShapeDtypeStruct(d.shape, jnp.dtype(d.dtype)),
+                     d.spec), plan)
+
+
+def local_param_structs(plan, mi: "MeshInfo"):
+    """Per-device (inside shard_map) shapes — for building serve caches etc."""
+    return tree_map_defs(
+        lambda d: Pv(jax.ShapeDtypeStruct(local_shape(d, mi),
+                                          jnp.dtype(d.dtype)), d.spec), plan)
+
+
+def local_shape(d: ParamDef, mi: MeshInfo) -> tuple:
+    """Shape of the per-device shard inside shard_map."""
+    out = []
+    for s, sp in zip(d.shape, d.spec):
+        if sp == "model":
+            out.append(s // mi.tp)
+        elif sp == "data":
+            out.append(s // mi.dp)
+        else:
+            out.append(s)
+    return tuple(out)
+
+
+def count_params(plan) -> int:
+    leaves = jax.tree_util.tree_leaves(
+        tree_map_defs(lambda d: d.size(), plan))
+    return int(sum(leaves))

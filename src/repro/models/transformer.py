@@ -1,0 +1,258 @@
+"""Block assembly: per-family layer bodies, scan-over-layers groups, remat.
+
+A model is a sequence of :class:`BlockGroup`s (config.py); each group's n
+identical layers are stacked on a leading axis and executed with
+``lax.scan`` (one traced body per group — compile time stays flat in depth).
+Three phases share the same bodies:
+
+  * train   — full activations, autodiff-ready
+  * prefill — train-shaped forward that also emits per-layer caches
+  * decode  — single token against sliced caches
+
+ZeRO-3 leaves are re-gathered inside the scan body (one layer in flight).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models import attention, layers, moe, ssm, xlstm
+from repro.models.config import ArchConfig, BlockGroup
+from repro.models.params import (D as Dd, MeshInfo, ParamDef, Pv, apply_fsdp,
+                                 tree_map_defs)
+
+
+# --------------------------------------------------------------------------
+# plans
+# --------------------------------------------------------------------------
+
+def block_plan(cfg: ArchConfig, kind: str, mode: str):
+    ln = lambda: layers.norm_plan(cfg, cfg.d_model)  # noqa: E731
+    if kind in ("attn", "enc_attn"):
+        p = {"ln1": ln(), "attn": attention.attn_plan(cfg, mode)}
+        if cfg.d_ff:
+            p.update(ln2=ln(), mlp=layers.mlp_plan(cfg))
+        return p
+    if kind == "dec_attn":
+        return {"ln1": ln(), "attn": attention.attn_plan(cfg, mode),
+                "lnx": ln(), "xattn": attention.attn_plan(cfg, mode),
+                "ln2": ln(), "mlp": layers.mlp_plan(cfg)}
+    if kind == "moe":
+        return {"ln1": ln(), "attn": attention.attn_plan(cfg, mode),
+                "ln2": ln(), "moe": moe.moe_plan(cfg)}
+    if kind == "mamba":
+        return {"ln1": ln(), "mamba": ssm.mamba_plan(cfg)}
+    if kind == "mlstm":
+        return {"ln1": ln(), "mlstm": xlstm.mlstm_plan(cfg)}
+    if kind == "slstm":
+        return {"ln1": ln(), "slstm": xlstm.slstm_plan(cfg)}
+    if kind == "shared_attn":
+        return {}  # weights live at the top level ("shared")
+    raise ValueError(kind)
+
+
+def _stack(plan, n: int):
+    return tree_map_defs(
+        lambda d: dataclasses.replace(d, shape=(n,) + d.shape,
+                                      spec=(None,) + d.spec), plan)
+
+
+def _unstack_pv(tree):
+    """After lax.scan slices a stacked group, drop the leading spec entry."""
+    return jax.tree_util.tree_map(
+        lambda pv: Pv(pv.v, pv.spec[1:]), tree,
+        is_leaf=lambda x: isinstance(x, Pv))
+
+
+def model_plan(cfg: ArchConfig, mi: MeshInfo):
+    mode = cfg.attn_mode_for(mi.tp)
+    plan = {"embed": layers.embed_plan(cfg)}
+    plan.update(layers.lm_head_plan(cfg))
+    plan["final_norm"] = layers.norm_plan(cfg, cfg.d_model)
+    groups = []
+    for g in cfg.layer_groups:
+        gp = block_plan(cfg, g.kind, mode)
+        if cfg.fsdp_params:
+            gp = apply_fsdp(gp, mi.dp)
+        groups.append(_stack(gp, g.n))
+    plan["groups"] = groups
+    if any(g.kind == "shared_attn" for g in cfg.layer_groups):
+        sp = block_plan(cfg, "attn", mode)
+        if cfg.fsdp_params:
+            sp = apply_fsdp(sp, mi.dp)
+        plan["shared"] = sp
+    if cfg.encoder_layers:
+        plan["enc_norm"] = layers.norm_plan(cfg, cfg.d_model)
+    return plan
+
+
+# --------------------------------------------------------------------------
+# per-kind bodies (train / prefill).  Return (x, cache_or_None, aux)
+# --------------------------------------------------------------------------
+
+def _zero_aux():
+    return {"lb_loss": jnp.float32(0.0), "drop_frac": jnp.float32(0.0)}
+
+
+def run_block(kind, p, x, cfg, mi, mode, g: BlockGroup, pos, phase,
+              cross=None, cross_pos=None, pos3=None):
+    want_cache = phase == "prefill"
+    cache, aux = None, _zero_aux()
+    if kind in ("attn", "enc_attn", "moe", "dec_attn"):
+        causal = cfg.causal and kind != "enc_attn"
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r = attention.attn_train(p["attn"], h, pos, cfg, mi, mode,
+                                 causal=causal, window=g.window, pos3=pos3,
+                                 want_cache=want_cache)
+        if want_cache:
+            r, cache = r
+            cache = {"k": cache[0], "v": cache[1]}
+        x = x + r
+        if kind == "dec_attn":
+            h = layers.norm(p["lnx"], x, cfg, mi)
+            r = attention.attn_train(p["xattn"], h, pos, cfg, mi, mode,
+                                     causal=False, window=0, cross=cross,
+                                     cross_pos=cross_pos,
+                                     want_cache=want_cache)
+            if want_cache:
+                r, xc = r
+                cache = {**cache, "xk": xc[0], "xv": xc[1]}
+            x = x + r
+        if kind == "moe":
+            h = layers.norm(p["ln2"], x, cfg, mi)
+            r, aux = moe.moe_block(p["moe"], h, cfg, mi, sp=True)
+            x = x + r
+        elif cfg.d_ff:
+            h = layers.norm(p["ln2"], x, cfg, mi)
+            x = x + layers.mlp(p["mlp"], h, cfg, mi, sp=True)
+        return x, cache, aux
+    if kind == "mamba":
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r = ssm.mamba_block(p["mamba"], h, cfg, mi, sp=True,
+                            want_cache=want_cache)
+        if want_cache:
+            r, cache = r
+        return x + r.astype(x.dtype), cache, aux
+    if kind == "mlstm":
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r = xlstm.mlstm_block(p["mlstm"], h, cfg, mi, sp=True,
+                              want_cache=want_cache)
+        if want_cache:
+            r, cache = r
+        return x + r.astype(x.dtype), cache, aux
+    if kind == "slstm":
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r = xlstm.slstm_block(p["slstm"], h, cfg, mi, sp=True,
+                              want_cache=want_cache)
+        if want_cache:
+            r, cache = r
+        return x + r.astype(x.dtype), cache, aux
+    raise ValueError(kind)
+
+
+def run_group(gp, x, g: BlockGroup, cfg, mi, mode, pos, phase,
+              shared=None, cross=None, cross_pos=None, pos3=None):
+    """Scan the group's n layers. Returns (x, stacked_caches, aux_sum)."""
+    if g.kind == "shared_attn":
+        # zamba2: the *same* block weights applied at each insertion point
+        outs = []
+        for _ in range(g.n):
+            x, cache, aux = run_block("attn", shared, x, cfg, mi, mode, g,
+                                      pos, phase, pos3=pos3)
+            outs.append(cache)
+        caches = outs[0] if phase == "prefill" else None
+        return x, caches, aux
+
+    from repro.core import comms
+
+    def body(carry, pslice):
+        xc, aux_acc = carry
+        p = _unstack_pv(pslice)
+        xc, cache, aux = run_block(g.kind, p, xc, cfg, mi, mode, g, pos,
+                                   phase, cross=cross, cross_pos=cross_pos,
+                                   pos3=pos3)
+        aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc, aux)
+        # keep the carry's varying-axes type stable across iterations
+        return comms.varying_all((xc, aux_acc), mi.all_axes), cache
+
+    remat = cfg.remat and phase == "train"
+    if remat:
+        body = jax.checkpoint(body)
+    carry0 = comms.varying_all((x, _zero_aux()), mi.all_axes)
+    # ledger: body traced once, runs g.n times (x2 fwd under remat)
+    with comms.scope_mult(g.n, remat=remat):
+        (x, aux), caches = lax.scan(body, carry0, gp)
+    return x, caches, aux
+
+
+# --------------------------------------------------------------------------
+# decode bodies
+# --------------------------------------------------------------------------
+
+def decode_block(kind, p, x, cache, index, cfg, mi, mode, g: BlockGroup,
+                 seq_axes, pos3=None):
+    if kind in ("attn", "enc_attn", "moe", "dec_attn"):
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r, cache_sa = attention.attn_decode(
+            p["attn"], h, {"k": cache["k"], "v": cache["v"]}, index, cfg, mi,
+            mode, window=g.window, seq_axes=seq_axes, pos3=pos3)
+        x = x + r
+        new_cache = {"k": cache_sa["k"], "v": cache_sa["v"]}
+        if kind == "dec_attn":
+            h = layers.norm(p["lnx"], x, cfg, mi)
+            r, _ = attention.attn_decode(
+                p["xattn"], h,
+                {"k": cache["xk"], "v": cache["xv"], "len": cache["xlen"]},
+                index, cfg, mi, mode, window=0, seq_axes=seq_axes, cross=True)
+            x = x + r
+            new_cache.update(xk=cache["xk"], xv=cache["xv"],
+                             xlen=cache["xlen"])
+        if kind == "moe":
+            h = layers.norm(p["ln2"], x, cfg, mi)
+            r, _ = moe.moe_block(p["moe"], h, cfg, mi, sp=False)
+            x = x + r
+        elif cfg.d_ff:
+            h = layers.norm(p["ln2"], x, cfg, mi)
+            x = x + layers.mlp(p["mlp"], h, cfg, mi, sp=False)
+        return x, new_cache
+    if kind == "mamba":
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r, nc = ssm.mamba_decode(p["mamba"], h, cache, cfg, mi)
+        return x + r.astype(x.dtype), nc
+    if kind == "mlstm":
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r, nc = xlstm.mlstm_decode(p["mlstm"], h, cache, cfg, mi)
+        return x + r.astype(x.dtype), nc
+    if kind == "slstm":
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r, nc = xlstm.slstm_decode(p["slstm"], h, cache, cfg, mi)
+        return x + r.astype(x.dtype), nc
+    raise ValueError(kind)
+
+
+def decode_group(gp, x, caches, index, g: BlockGroup, cfg, mi, mode,
+                 seq_axes, shared=None, pos3=None):
+    if g.kind == "shared_attn":
+        for _ in range(g.n):
+            x, caches = decode_block("attn", shared, x, caches, index, cfg,
+                                     mi, mode, g, seq_axes, pos3=pos3)
+        return x, caches
+
+    from repro.core import comms
+
+    def body(xc, sl):
+        pslice, cache = sl
+        p = _unstack_pv(pslice)
+        xc, nc = decode_block(g.kind, p, xc, cache, index, cfg, mi, mode, g,
+                              seq_axes, pos3=pos3)
+        return comms.varying_all(xc, mi.all_axes), nc
+
+    with comms.scope_mult(g.n):
+        x, new_caches = lax.scan(body, comms.varying_all(x, mi.all_axes),
+                                 (gp, caches))
+    return x, new_caches

@@ -1,0 +1,149 @@
+"""Cache layouts per block kind (DESIGN.md §4, serving).
+
+Global shapes + PartitionSpecs; the serve step's shard_map slices them.
+
+  attn(ring)  k/v [L, B, S_max, KV, hd]   seq sharded over seq_axes
+              (flash-decoding: per-shard partial softmax + pmax/psum combine)
+  attn(head)  k/v [L, B, S_max, KV, hd]   heads sharded over model
+  dec_attn    adds xk/xv [L, B, S_enc, KV, hd] + xlen [L]
+  mamba       conv [L, B, K-1, d_inner] + state [L, B, H, P, N]
+              channels/heads sharded over model
+  mlstm       C [L, B, H, Pv, hd] (Pv sharded over model) + n [L, B, H, hd]
+  slstm       h/c/n/m [L, B, H, hd] replicated (small)
+
+``seq_axes`` is ("model",) for batched decode and ("data", "model") for
+long_500k (batch=1 can't use the data axis for batch)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ArchConfig, BlockGroup
+from repro.models.params import MeshInfo
+
+
+def _batch_spec(B: int, mi: MeshInfo, seq_axes):
+    if "data" in seq_axes or B == 1:
+        return None
+    return mi.batch_axes
+
+
+def group_cache(cfg: ArchConfig, mi: MeshInfo, g: BlockGroup, B: int,
+                s_max: int, seq_axes, mode: str, s_enc: int = 0,
+                dtype=None):
+    """-> (struct pytree, spec pytree) for one group's stacked caches."""
+    dt = jnp.dtype(dtype or cfg.dtype)
+    hd, KV = cfg.head_dim_, cfg.n_kv_heads
+    L = g.n
+    bs = _batch_spec(B, mi, seq_axes)
+    kind = "attn" if g.kind in ("shared_attn", "enc_attn") else g.kind
+
+    def sds(shape, d=dt):
+        return jax.ShapeDtypeStruct(shape, d)
+
+    if kind in ("attn", "moe", "dec_attn"):
+        if mode == "head":
+            kv_spec = P(None, bs, None, mi.model_axis, None)
+        else:
+            kv_spec = P(None, bs, tuple(seq_axes), None, None)
+        st = {"k": sds((L, B, s_max, KV, hd)), "v": sds((L, B, s_max, KV, hd))}
+        sp = {"k": kv_spec, "v": kv_spec}
+        if kind == "dec_attn":
+            st.update(xk=sds((L, B, s_enc, KV, hd)),
+                      xv=sds((L, B, s_enc, KV, hd)),
+                      xlen=sds((L,), jnp.int32))
+            sp.update(xk=kv_spec, xv=kv_spec, xlen=P(None))
+        if g.kind == "shared_attn":   # single insertion point, not scanned
+            st = jax.tree.map(lambda s: jax.ShapeDtypeStruct(
+                s.shape[1:], s.dtype), st)
+            sp = jax.tree.map(lambda p: P(*p[1:]), sp)
+        return st, sp
+    if kind == "mamba":
+        di = cfg.d_inner
+        H = di // cfg.ssm_head_dim
+        st = {"conv": sds((L, B, cfg.conv_kernel - 1, di)),
+              "state": sds((L, B, H, cfg.ssm_head_dim, cfg.ssm_state),
+                           jnp.float32)}
+        sp = {"conv": P(None, bs, None, mi.model_axis),
+              "state": P(None, bs, mi.model_axis, None, None)}
+        return st, sp
+    if kind == "mlstm":
+        H = cfg.n_heads
+        di = int(cfg.proj_factor * cfg.d_model)
+        Pv_ = di // H
+        st = {"C": sds((L, B, H, Pv_, hd), jnp.float32),
+              "n": sds((L, B, H, hd), jnp.float32)}
+        sp = {"C": P(None, bs, None, mi.model_axis, None),
+              "n": P(None, bs, None, None)}
+        return st, sp
+    if kind == "slstm":
+        H = cfg.n_heads
+        hd_s = cfg.d_model // H
+        st = {k: sds((L, B, H, hd_s), jnp.float32) for k in "hcnm"}
+        sp = {k: P(None, bs, None, None) for k in "hcnm"}
+        return st, sp
+    raise ValueError(kind)
+
+
+def cache_structs(cfg: ArchConfig, mi: MeshInfo, B: int, s_max: int,
+                  seq_axes=("model",), s_enc: int = 0):
+    """Full cache: list aligned with cfg.layer_groups (None for encoder)."""
+    mode = cfg.attn_mode_for(mi.tp)
+    structs, specs = [], []
+    for g in cfg.layer_groups:
+        if g.kind == "enc_attn":
+            structs.append(None)
+            specs.append(None)
+            continue
+        st, sp = group_cache(cfg, mi, g, B, s_max, seq_axes, mode,
+                             s_enc=s_enc)
+        structs.append(st)
+        specs.append(sp)
+    return structs, specs
+
+
+def zero_caches(structs):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs)
+
+
+def prefill_cache_specs(cfg: ArchConfig, mi: MeshInfo, B: int):
+    """Out-specs for Model.forward(phase='prefill') caches.
+
+    Prefill emits caches in the *training* layout: ring mode -> local seq
+    chunk per model shard (seq dim sharded over model); head mode -> full
+    seq, heads sharded.  Recurrent blocks emit no prefill cache (serve
+    decode for those starts from explicit state; see DESIGN.md)."""
+    mode = cfg.attn_mode_for(mi.tp)
+    bs = mi.batch_axes if B > 1 else None
+    if mode == "head":
+        kv = P(None, bs, None, mi.model_axis, None)
+    else:
+        kv = P(None, bs, mi.model_axis, None, None)
+    pos_sp = P(None, bs, mi.model_axis) if mode != "head" else P(None, bs, None)
+    del pos_sp
+    out = []
+    for g in cfg.layer_groups:
+        if g.kind in ("attn", "moe"):
+            out.append({"k": kv, "v": kv})
+        elif g.kind == "dec_attn":
+            out.append({"k": kv, "v": kv, "xk": kv, "xv": kv})
+        elif g.kind == "shared_attn":
+            out.append({"k": P(*kv[1:]), "v": P(*kv[1:])})
+        elif g.kind == "enc_attn":
+            out.append(None)
+        elif g.kind == "mamba":
+            out.append({"conv": P(None, bs, None, mi.model_axis),
+                        "state": P(None, bs, mi.model_axis, None, None)})
+        elif g.kind == "mlstm":
+            di = int(cfg.proj_factor * cfg.d_model)
+            pv_sharded = (di // cfg.n_heads) % mi.tp == 0 and mi.tp > 1
+            out.append({"C": P(None, bs, None,
+                               mi.model_axis if pv_sharded else None, None),
+                        "n": P(None, bs, None, None)})
+        elif g.kind == "slstm":
+            out.append({k: P(None, bs, None, None) for k in "hcnm"})
+        else:
+            out.append(None)
+    return out

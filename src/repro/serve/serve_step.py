@@ -1,0 +1,111 @@
+"""Serving: jitted prefill and single-token decode steps.
+
+``decode`` is the `serve_step` the decode_32k / long_500k dry-run cells
+lower: one new token against a KV cache (or recurrent state) of the given
+context length.  Sampling is greedy with a vocab-shard-parallel argmax.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.core import comms, schemes
+from repro.models import layers, transformer
+from repro.models.model import Model
+from repro.models.params import MeshInfo
+from repro.serve import kv_cache
+
+
+def greedy_token(logits, cfg, mi: MeshInfo):
+    """logits [B, 1, V_loc] vocab-sharded -> [B] int32 global argmax."""
+    v_loc = logits.shape[-1]
+    lo = lax.axis_index(mi.model_axis) * v_loc
+    col = lo + jnp.arange(v_loc)
+    logits = jnp.where(col < cfg.vocab_size, logits[:, 0], -jnp.inf)
+    val = jnp.max(logits, axis=-1)                       # [B]
+    idx = lo + jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    gmax = comms.pmax(val, mi.model_axis)
+    cand = jnp.where(val >= gmax, idx, jnp.int32(2**31 - 1))
+    return -comms.pmax(-cand, mi.model_axis)             # pmin of candidates
+
+
+class Server:
+    def __init__(self, model: Model, mesh, scheme="baseline",
+                 seq_axes=("model",), ring_bidir: bool = False):
+        self.model = model
+        self.mesh = mesh
+        self.scheme = schemes.get(scheme)
+        self.seq_axes = tuple(seq_axes)
+        self.ring_bidir = ring_bidir
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        model, mi, cfg = self.model, self.model.mi, self.model.cfg
+        pspecs = model.specs()
+
+        def prefill_fn(params, batch):
+            with schemes.use(self.scheme), \
+                    comms.ring_options(self.ring_bidir):
+                logits, caches, _ = model.forward(params, batch,
+                                                  phase="prefill")
+                tok = greedy_token(logits[:, -1:], cfg, mi)
+            return tok, caches
+
+        def decode_fn(params, token, caches, index):
+            with schemes.use(self.scheme), comms.vma_mode(False), \
+                    comms.ring_options(self.ring_bidir):
+                x = layers.embed(params["embed"], token, cfg, mi, sp=False)
+                pos3 = None
+                if cfg.mrope:
+                    B = token.shape[0]
+                    pos3 = jnp.broadcast_to(index.astype(jnp.int32),
+                                            (B, 1, 3))
+                new_caches = []
+                for i, g in enumerate(cfg.layer_groups):
+                    if g.kind == "enc_attn":
+                        new_caches.append(None)
+                        continue
+                    x, nc = transformer.decode_group(
+                        params["groups"][i], x, caches[i], index, g, cfg, mi,
+                        model.mode, self.seq_axes,
+                        shared=params.get("shared"), pos3=pos3)
+                    new_caches.append(nc)
+                x = layers.norm(params["final_norm"], x, cfg, mi)
+                logits = layers.lm_head_logits(params, x, cfg, mi, sp=False)
+                tok = greedy_token(logits, cfg, mi)
+            return tok, new_caches
+
+        self.decode_inner = decode_fn
+        self.prefill_inner = prefill_fn
+
+    # ------------------------------------------------------------------
+    def decode_step(self, B: int, s_max: int, s_enc: int = 0):
+        """Jitted serve_step: (params, token [B,1], caches, index) ->
+        (next_token [B], caches)."""
+        model, mi, cfg = self.model, self.model.mi, self.model.cfg
+        structs, cspecs = kv_cache.cache_structs(
+            cfg, mi, B, s_max, self.seq_axes, s_enc=s_enc)
+        tok_spec = P(None if (B == 1 or "data" in self.seq_axes)
+                     else mi.batch_axes, None)
+        out_tok_spec = P(tok_spec[0])
+        fn = jax.shard_map(
+            self.decode_inner, mesh=self.mesh,
+            in_specs=(model.specs(), tok_spec, cspecs, P()),
+            out_specs=(out_tok_spec, cspecs), check_vma=False)
+        return jax.jit(fn, donate_argnums=(2,)), structs, cspecs
+
+    def prefill_step(self, bspecs, B: int):
+        model, mi, cfg = self.model, self.model.mi, self.model.cfg
+        cache_specs = kv_cache.prefill_cache_specs(cfg, mi, B)
+        tok_spec = P(mi.batch_axes if B > 1 else None)
+        fn = jax.shard_map(
+            self.prefill_inner, mesh=self.mesh,
+            in_specs=(model.specs(), bspecs),
+            out_specs=(tok_spec, cache_specs), check_vma=False)
+        return jax.jit(fn)

@@ -1,0 +1,234 @@
+"""Adam with ZeRO-1 sharded optimizer states and compressed gradient sync.
+
+Gradient classes, routed by each leaf's sharding spec (Pv metadata):
+
+  A. fsdp ("data" in spec, ZeRO-3 leaves): the all-gather VJP already
+     reduce-scattered these over data (ZeRO codec) — update the local shard
+     directly; optimizer state lives at the same sharding.
+  B. model-sharded (TP/EP/vocab): per-data-shard partial grads -> flat
+     reduce-scatter over data under the *DP* codec (the paper's aggressive
+     compression target), ZeRO-1 chunk update, all-gather params back under
+     the *ZeRO* codec.
+  C. replicated (norms, ring-mode attention weights, mamba/xlstm
+     projections, routers): first psum over the model axis under the
+     *tp_bwd* codec (paper §III-A: MP-backward gradients take the MP codec,
+     never the DP one — no double compression, challenge C3), then join
+     class B's flat DP path.
+
+Multi-pod: the flat chunk is additionally psum'd over the 'pod' axis with
+the DP codec — the cross-pod hop is the slowest-link traffic the paper
+compresses hardest.
+
+Optional 8-bit optimizer state (paper future-work [42]): m/v stored as
+bq8 blocks, decode -> update -> re-encode each step.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import comms
+from repro.kernels import ops as kops
+from repro.kernels.ref import BLOCK
+from repro.models.params import MeshInfo, Pv
+
+_F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    state_bits: int = 32            # 8 -> bq8-quantized m/v (ZeRO-1 path)
+    warmup: int = 10
+
+
+def _is_pv(x):
+    return isinstance(x, Pv)
+
+
+def _leaf_class(spec: tuple) -> str:
+    if "data" in spec:
+        return "A"
+    if "model" in spec:
+        return "B"
+    return "C"
+
+
+def _split_classes(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_pv)
+    classes = [_leaf_class(l.spec) for l in leaves]
+    return leaves, treedef, classes
+
+
+def _flat_concat(arrs):
+    return jnp.concatenate([a.reshape(-1).astype(_F32) for a in arrs]) \
+        if arrs else jnp.zeros((0,), _F32)
+
+
+def _lr_at(cfg: AdamConfig, step):
+    warm = jnp.minimum(step.astype(_F32) / max(cfg.warmup, 1), 1.0)
+    return cfg.lr * warm
+
+
+class Adam:
+    """Functional optimizer; init/apply run INSIDE shard_map."""
+
+    def __init__(self, cfg: AdamConfig, mi: MeshInfo):
+        self.cfg = cfg
+        self.mi = mi
+
+    # ------------------------------------------------------------------
+    def init(self, params):
+        leaves, _, classes = _split_classes(params)
+        mi = self.mi
+        fsdp_state = [
+            {"master": l.v.astype(_F32), "m": jnp.zeros_like(l.v, _F32),
+             "v": jnp.zeros_like(l.v, _F32)}
+            if c == "A" else None
+            for l, c in zip(leaves, classes)]
+        flat = _flat_concat([l.v for l, c in zip(leaves, classes)
+                             if c != "A"])
+        n = flat.shape[0]
+        chunk_len = self._chunk_len(n)
+        # master chunk holds this data-shard's slice of the flat params
+        idx = lax.axis_index(mi.data_axis) * chunk_len
+        master = lax.dynamic_slice_in_dim(
+            jnp.pad(flat, (0, chunk_len * mi.dp - n)), idx, chunk_len, 0)
+        zc = jnp.zeros((chunk_len,), _F32)
+        if self.cfg.state_bits == 8:
+            m = kops.bq_encode_blocks(zc.reshape(-1, BLOCK), 8)
+            v = kops.bq_encode_blocks(zc.reshape(-1, BLOCK), 8)
+        else:
+            m, v = zc, zc
+        return {"fsdp": fsdp_state, "master": master, "m": m, "v": v,
+                "step": jnp.zeros((), jnp.int32)}
+
+    def _chunk_len(self, n: int) -> int:
+        """Length of this shard's ZeRO-1 flat chunk (matches
+        comms.reduce_scatter_flat's padding)."""
+        per = -(-n // self.mi.dp)
+        return kops.padded_rows(per) * BLOCK
+
+    @staticmethod
+    def flat_size(params) -> int:
+        leaves, _, classes = _split_classes(params)
+        return sum(l.v.size for l, c in zip(leaves, classes) if c != "A")
+
+    # ------------------------------------------------------------------
+    def _adam_update(self, g, m, v, master, step):
+        c = self.cfg
+        m = c.b1 * m + (1 - c.b1) * g
+        v = c.b2 * v + (1 - c.b2) * g * g
+        t = step.astype(_F32) + 1.0
+        mh = m / (1 - c.b1 ** t)
+        vh = v / (1 - c.b2 ** t)
+        upd = mh / (jnp.sqrt(vh) + c.eps)
+        if c.weight_decay:
+            upd = upd + c.weight_decay * master
+        return master - _lr_at(c, step) * upd, m, v
+
+    def _state_decode(self, s):
+        if self.cfg.state_bits == 8:
+            return kops.bq_decode_blocks(s, 8).reshape(-1)
+        return s
+
+    def _state_encode(self, x):
+        if self.cfg.state_bits == 8:
+            return kops.bq_encode_blocks(x.reshape(-1, BLOCK), 8)
+        return x
+
+    # ------------------------------------------------------------------
+    def apply(self, params, grads, state):
+        """Returns (new_params, new_state, stats).  Inside shard_map."""
+        mi, cfg = self.mi, self.cfg
+        leaves, treedef, classes = _split_classes(params)
+        gleaves, _, _ = _split_classes(grads)
+        step = state["step"]
+
+        # -- class C: fold model-axis partial grads (MP codec, paper C3)
+        c_vals = [g.v for g, c in zip(gleaves, classes) if c == "C"]
+        if c_vals and mi.tp > 1:
+            cflat = _flat_concat(c_vals)
+            cflat = comms.psum(cflat, mi.model_axis, "tp_bwd")
+            out, off = [], 0
+            for g, c in zip(gleaves, classes):
+                if c == "C":
+                    n = g.v.size
+                    out.append(cflat[off:off + n].reshape(g.v.shape))
+                    off += n
+            it = iter(out)
+            gleaves = [Pv(next(it), g.spec) if c == "C" else g
+                       for g, c in zip(gleaves, classes)]
+
+        # -- global grad-norm clip.  Each class's squared sum is divided by
+        # its replication factor so the psum over all axes counts every
+        # parameter exactly once.  (Cross-pod partials are approximated by
+        # the sum-of-squares of per-pod partial grads; exact to within the
+        # usual sqrt(pods) factor and deterministic.)
+        pod = mi.pod if mi.pod_axis else 1
+        rep = {"A": pod,
+               "B": mi.dp * pod,
+               "C": mi.dp * mi.tp * pod}
+        sq = jnp.float32(0.0)
+        for g, c in zip(gleaves, classes):
+            sq = sq + jnp.sum(g.v.astype(_F32) ** 2) / rep[c]
+        sq = comms.varying_all(sq, mi.all_axes)
+        sq = lax.psum(sq, mi.all_axes)
+        gnorm = jnp.sqrt(sq)
+        scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+        # -- class A (fsdp): local update
+        new_fsdp, new_leaves = [], [None] * len(leaves)
+        for i, (l, g, c) in enumerate(zip(leaves, gleaves, classes)):
+            if c != "A":
+                new_fsdp.append(None)
+                continue
+            gv = g.v.astype(_F32)
+            if "model" not in g.spec:
+                gv = comms.psum(gv, mi.model_axis, "tp_bwd")
+            if mi.pod_axis:
+                gv = comms.psum(gv, mi.pod_axis, "dp")
+            st = state["fsdp"][i]
+            master, m, v = self._adam_update(gv * scale, st["m"], st["v"],
+                                             st["master"], step)
+            new_fsdp.append({"master": master, "m": m, "v": v})
+            new_leaves[i] = Pv(master.astype(l.v.dtype), l.spec)
+
+        # -- classes B + C: flat compressed DP reduce-scatter (ZeRO-1)
+        bc = [g.v * jnp.asarray(scale, g.v.dtype)
+              for g, c in zip(gleaves, classes) if c != "A"]
+        gflat = _flat_concat(bc)
+        gchunk = comms.reduce_scatter_flat(gflat, mi.data_axis, "dp")
+        if mi.pod_axis:
+            gchunk = comms.psum(gchunk, mi.pod_axis, "dp")
+        m = self._state_decode(state["m"])
+        v = self._state_decode(state["v"])
+        master, m, v = self._adam_update(gchunk, m, v, state["master"], step)
+        flat_new = comms.all_gather_flat(master, mi.data_axis,
+                                         self.flat_size(params), "zero")
+        off = 0
+        for i, (l, c) in enumerate(zip(leaves, classes)):
+            if c == "A":
+                continue
+            n = l.v.size
+            new_leaves[i] = Pv(
+                flat_new[off:off + n].reshape(l.v.shape).astype(l.v.dtype),
+                l.spec)
+            off += n
+
+        new_params = jax.tree_util.tree_unflatten(treedef, new_leaves)
+        new_state = {"fsdp": new_fsdp, "master": master,
+                     "m": self._state_encode(m), "v": self._state_encode(v),
+                     "step": step + 1}
+        return new_params, new_state, {"grad_norm": gnorm,
+                                       "lr": _lr_at(cfg, step)}

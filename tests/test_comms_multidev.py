@@ -1,0 +1,57 @@
+"""Multi-device comms-layer tests.
+
+These need >1 XLA host device, and ``xla_force_host_platform_device_count``
+locks on first jax init — so each check runs in a subprocess with its own
+flag, keeping the main pytest process single-device (per the smoke-test
+contract).
+"""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPTS = pathlib.Path(__file__).parent / "multidev"
+_SRC = pathlib.Path(__file__).parent.parent / "src"
+
+
+def run_script(name: str, timeout=900):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(_SRC)
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(_SCRIPTS / name)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"{name} failed (rc={proc.returncode})\n"
+            f"--- stdout ---\n{proc.stdout[-4000:]}\n"
+            f"--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout
+
+
+@pytest.mark.slow
+def test_compressed_collectives_all_schemes():
+    out = run_script("comms_check.py")
+    assert "comms validated" in out
+
+
+@pytest.mark.slow
+def test_arch_parallel_consistency():
+    """Every arch: same loss on (1,1) and (2,4) meshes; compressed close."""
+    out = run_script("arch_parallel_check.py", timeout=1800)
+    assert "PARALLEL CONSISTENCY OK" in out
+
+
+@pytest.mark.slow
+def test_train_loop_and_elastic_restart():
+    out = run_script("train_loop_check.py", timeout=1800)
+    assert "TRAIN LOOP + ELASTIC RESTART OK" in out
+
+
+@pytest.mark.slow
+def test_serve_prefill_decode_equivalence():
+    out = run_script("serve_check.py", timeout=1800)
+    assert "SERVE DECODE OK" in out

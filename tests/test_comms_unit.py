@@ -1,0 +1,76 @@
+"""Single-device-safe comms/scheme/codec unit tests."""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core import codecs, comms, schemes
+
+
+def test_scheme_registry_matches_paper_tables():
+    # Table II: MZHybrid = lossless MPC on MP, lossy ZFP on DP
+    mz = schemes.get("mzhybrid8")
+    assert mz.dp == "bq8"
+    for t in ("tp_fwd", "tp_bwd", "pp_fwd", "pp_bwd", "zero", "ep_fwd"):
+        assert getattr(mz, t) == "mpc"
+    # Table III: ZHybrid = high-rate on MP, low-rate on DP
+    z = schemes.get("zhybrid_24_8")
+    assert z.dp == "bq8"
+    for t in ("tp_fwd", "tp_bwd", "pp_fwd", "pp_bwd", "zero"):
+        assert getattr(z, t) == "bq24"
+    base = schemes.get("baseline")
+    assert all(getattr(base, f) == "none"
+               for f in ("dp", "tp_fwd", "pp_bwd", "zero"))
+
+
+def test_scheme_context():
+    assert schemes.current().name == "baseline"
+    with schemes.use("naive_zfp8"):
+        assert schemes.current().name == "naive_zfp8"
+        with schemes.use("mzhybrid8"):
+            assert schemes.current().name == "mzhybrid8"
+        assert schemes.current().name == "naive_zfp8"
+    assert schemes.current().name == "baseline"
+
+
+def test_codec_pair_resolution():
+    with schemes.use("zhybrid_16_8"):
+        f, b = comms._codec_pair("tp")
+        assert f.name == b.name == "bq16"
+        f, b = comms._codec_pair("dp")
+        assert f.name == "bq8"
+        f, b = comms._codec_pair("tp_bwd")  # explicit direction
+        assert f.name == b.name == "bq16"
+    with pytest.raises(KeyError):
+        schemes.get("nope")
+
+
+def test_ledger_event_bytes_formulas():
+    from repro.analysis import roofline as rl
+    ev = dict(op="all_gather", tag="tp", axis="model", n=4, elems=1000,
+              dtype="bfloat16", codec_fwd="none", codec_bwd="none",
+              bwd_op="reduce_scatter", mult=2, remat=False)
+    b = rl.event_bytes(ev, train=True)
+    # fwd: (n-1) * E * 2B * mult; the transpose moves the same bytes (the
+    # RS cotangent is the n*E gather output), so bwd == fwd formula
+    assert b["fwd"] == 3 * 1000 * 2 * 2
+    assert b["bwd"] == 3 * 1000 * 2 * 2
+    # bidirectional rings halve per-link bytes
+    b_bi = rl.event_bytes({**ev, "bidir": True}, train=True)
+    assert b_bi["fwd"] == b["fwd"] / 2
+    ev["codec_fwd"] = "bq8"
+    b = rl.event_bytes(ev, train=True)
+    assert abs(b["fwd"] - 3 * 1000 * (8.25 / 8) * 2) < 1e-6
+    # remat doubles the fwd only
+    ev["remat"] = True
+    b2 = rl.event_bytes(ev, train=True)
+    assert abs(b2["fwd"] - 2 * b["fwd"]) < 1e-6
+    assert b2["bwd"] == b["bwd"]
+    # serve: no bwd
+    b3 = rl.event_bytes(ev, train=False)
+    assert b3["bwd"] == 0.0
+
+
+def test_wire_bits_per_value():
+    assert codecs.get("bq8").wire_bits_per_value() == 8.25
+    assert codecs.get("bq24").wire_bits_per_value() == 24.25
+    assert codecs.get("none").wire_bits_per_value(jnp.bfloat16) == 16

@@ -1,0 +1,109 @@
+"""Analytic cost model + dry-run cell-spec units."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.analysis import costmodel, roofline as rl
+from repro.launch import specs as speclib
+from repro.models.config import ArchConfig
+from repro.models.params import MeshInfo
+
+
+MI = MeshInfo(tp=16, dp=16)
+MI_POD = MeshInfo(tp=16, dp=16, pod=2, pod_axis="pod")
+
+
+def test_all_cells_defined_and_divisible():
+    """Every supported cell's shapes divide the production mesh."""
+    for arch in configs.ARCH_IDS:
+        cfg = configs.get(arch)
+        for shape in speclib.SHAPES:
+            ok, why = speclib.cell_supported(cfg, shape)
+            if not ok:
+                assert "full-attention" in why
+                continue
+            spec = speclib.input_specs(cfg, shape, MI)
+            meta = spec["meta"]
+            if spec["kind"] in ("train", "prefill"):
+                assert meta["seq"] % MI.tp == 0
+                assert meta["batch"] % MI.dp == 0
+            else:
+                shards = 1
+                for ax in meta["seq_axes"]:
+                    shards *= {"model": MI.tp, "data": MI.dp}[ax]
+                assert meta["seq"] % shards == 0
+
+
+def test_skip_list_matches_design():
+    skipped = [a for a in configs.ARCH_IDS
+               if not speclib.cell_supported(configs.get(a), "long_500k")[0]]
+    assert sorted(skipped) == sorted([
+        "qwen2-72b", "minitron-4b", "whisper-base",
+        "kimi-k2-1t-a32b", "qwen3-moe-235b-a22b", "qwen2-vl-72b"])
+
+
+def test_train_cost_scaling():
+    cfg = configs.get("qwen2-72b")
+    c1 = costmodel.train_cost(cfg, MI, B=256, S=4096,
+                              n_active=72e9, n_total=72e9)
+    c2 = costmodel.train_cost(cfg, MI, B=512, S=4096,
+                              n_active=72e9, n_total=72e9)
+    # flops scale with tokens; weight traffic does not
+    assert 1.9 < c2.flops / c1.flops < 2.1
+    assert c2.hbm_bytes < 2 * c1.hbm_bytes
+    # remat adds a 4th pass
+    c3 = costmodel.train_cost(cfg.replace(remat=False), MI, B=256, S=4096,
+                              n_active=72e9, n_total=72e9)
+    assert abs(c1.flops / c3.flops - 4 / 3) < 0.01
+
+
+def test_decode_cost_weight_stationary():
+    cfg = configs.get("kimi-k2-1t-a32b")
+    base = costmodel.decode_cost(cfg, MI, B=128, S_ctx=32768,
+                                 n_active=32e9, n_total=1.04e12)
+    ws = costmodel.decode_cost(cfg.replace(moe_ws=True), MI, B=128,
+                               S_ctx=32768, n_active=32e9, n_total=1.04e12)
+    # 2-D-sharded experts slash the per-chip weight reads
+    assert ws.hbm_bytes < base.hbm_bytes / 3
+
+
+def test_moe_active_params():
+    cfg = configs.get("qwen3-moe-235b-a22b")
+    total = 235e9
+    act = rl.active_params(cfg, int(total))
+    assert act < total / 5  # top-8 of 128 experts
+
+
+def test_roofline_dominant_and_mfu():
+    r = rl.roofline({"flops": 197e12, "bytes accessed": 819e9 / 2},
+                    coll_bytes_per_device=25e9, n_chips=1,
+                    model_flops_total=98.5e12)
+    assert r.compute_s == pytest.approx(1.0)
+    assert r.memory_s == pytest.approx(0.5)
+    assert r.collective_s == pytest.approx(0.5)
+    assert r.dominant == "compute"
+    assert r.mfu == pytest.approx(0.5)
+    assert r.useful_ratio == pytest.approx(0.5)
+
+
+def test_hlo_collective_counter():
+    text = """
+  %ag.1 = bf16[8,16]{1,0} all-gather(%p0), replica_groups={}
+  %ar = f32[4] all-reduce(%x), to_apply=%sum
+  %cp.2 = u8[4] collective-permute(%y), source_target_pairs={{0,1}}
+  %cp.3 = u8[4] collective-permute-start(%y), source_target_pairs={{0,1}}
+"""
+    counts = rl.hlo_collective_counts(text)
+    assert counts["all-gather"] == 1
+    assert counts["all-reduce"] == 1
+    assert counts["collective-permute"] == 2
+
+
+def test_param_traffic_bytes_modes():
+    cfg = configs.get("kimi-k2-1t-a32b")
+    full = costmodel.param_traffic_bytes(cfg, MI, decode=False)
+    ws = costmodel.param_traffic_bytes(cfg.replace(moe_ws=True), MI,
+                                       decode=True)
+    assert ws < full / 3
