@@ -4,13 +4,20 @@ Paper analog: Fig 1 (communication breakdown) + the core message-size
 reduction mechanism of §III.  We trace one training step of a small dense
 and a small MoE model on a (2, 4) mesh and read the comms ledger: bytes per
 tag (dp / tp / pp / ep / zero) under every scheme, and the reduction vs the
-uncompressed baseline."""
+uncompressed baseline.
+
+Second sweep: flat vs hierarchical collectives.  The same all-reduce
+payload is traced through the flat ring (whole volume rides the slow
+inter-node links at the bottleneck) and the two-level decomposition
+(only the 1/n_local outer stage is inter-node), per level-aware scheme —
+reporting fast/slow link bytes and the roofline collective seconds."""
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
 from repro import configs
 from repro.analysis import roofline as rl
 from repro.core import comms, schemes
@@ -34,9 +41,76 @@ def _trace_step_bytes(arch, scheme, mesh):
     return rl.ledger_summary(events, train=True)
 
 
+def _trace_payload_events(scheme, hier: bool, elems: int):
+    """Trace one all-reduce of ``elems`` f32 per device, flat vs two-level."""
+    mesh = compat.make_mesh((2, 4), ("node", "data"))
+    if hier:
+        fn = lambda a: comms.hier_all_reduce(a, "data", "node", "dp")  # noqa: E731
+    else:
+        fn = lambda a: comms.psum(a, ("node", "data"), "dp")           # noqa: E731
+    sm = jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(P(("node", "data")),),
+        out_specs=P(("node", "data")), check_vma=False))
+    with schemes.use(scheme), comms.record_traffic() as events:
+        sm.lower(jax.ShapeDtypeStruct((8, elems), jnp.float32))
+    jax.clear_caches()
+    return events
+
+
+def _hier_sweep(rows):
+    """Flat ring vs two-level decomposition on the same DP payload."""
+    elems = 1 << 20                                      # 4 MiB f32 / device
+    flat_axes = ((("node", "data"),))
+    base_slow = None
+    for scheme, hier in (("baseline", False), ("zhybrid_16_8", False),
+                         ("hier_zpp_8_16", True), ("hier_zpp_4_16", True),
+                         ("hier_mzpp_8", True)):
+        events = _trace_payload_events(scheme, hier, elems)
+        lb = rl.link_bytes(events, train=True,
+                           slow_axes=flat_axes if not hier else ())
+        secs = rl.collective_seconds(events, train=True,
+                                     slow_axes=flat_axes if not hier else ())
+        if base_slow is None:
+            base_slow = lb["slow"]
+        kind = "hier" if hier else "flat"
+        rows.append((f"allreduce_4MiB_{kind}_{scheme}",
+                     secs * 1e6,                         # roofline us
+                     f"slow={lb['slow']/1e6:.2f}MB fast={lb['fast']/1e6:.2f}MB"
+                     f" slow_vs_flat_baseline={lb['slow']/max(base_slow,1):.3f}"))
+    return rows
+
+
+def _hier_step_sweep(rows):
+    """Full train step: flat (4,2) mesh vs node-factored (2,2,2) mesh."""
+    arch = "gemma3-1b"
+    flat_mesh = compat.make_mesh((4, 2), ("data", "model"))
+    hier_mesh = compat.make_mesh((2, 2, 2), ("node", "data", "model"))
+    for name, mesh, scheme, slow_axes in (
+            ("flat", flat_mesh, "zhybrid_16_8", ("data",)),
+            ("hier", hier_mesh, "hier_zpp_8_16", ("node",))):
+        mi = MeshInfo.from_mesh(mesh)
+        cfg = configs.get(arch).reduced()
+        model = Model(cfg, mi)
+        trainer = Trainer(model, mesh, scheme=scheme)
+        pstructs = model.structs()
+        ostructs = jax.eval_shape(trainer.opt_init, pstructs)
+        binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                   "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        with comms.record_traffic() as events:
+            trainer.step.lower(pstructs, ostructs, binputs)
+        lb = rl.link_bytes(events, train=True, slow_axes=slow_axes)
+        led = rl.ledger_summary(events, train=True)
+        per_level = ",".join(f"{k}:{v/1e6:.2f}MB"
+                             for k, v in sorted(led["per_level"].items()))
+        rows.append((f"train_step_{arch}_{name}_{scheme}",
+                     led["total_bytes"] / 1e6,
+                     f"slow={lb['slow']/1e6:.2f}MB {per_level}"))
+        jax.clear_caches()
+    return rows
+
+
 def run():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     rows = []
     for arch in ("gemma3-1b", "qwen3-moe-235b-a22b"):
         base = None
@@ -52,4 +126,6 @@ def run():
                          tot / 1e6,  # "us" column reused as MB
                          f"vs_baseline={tot/max(base,1):.3f} {per_tag}"))
             jax.clear_caches()
+    _hier_sweep(rows)
+    _hier_step_sweep(rows)
     return rows

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro.core import compat
 from repro import configs
 from repro.data.pipeline import DataConfig, SyntheticCorpus
 from repro.models.model import Model
@@ -59,8 +60,7 @@ def run(verbose=False):
         rope_theta_global=0.0)
     data = SyntheticCorpus(DataConfig(vocab_size=128, seq_len=32,
                                       global_batch=8, noise=0.05))
-    mesh = jax.make_mesh((4, 2), ("data", "model"),  # 3 DP ring hops
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     rows = []
     finals = {}
     curves = {}

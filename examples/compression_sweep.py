@@ -16,6 +16,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro.core import compat
 from repro import configs
 from repro.analysis import roofline as rl
 from repro.core import comms, schemes as schemes_lib
@@ -31,8 +32,7 @@ def main():
     ap.add_argument("--steps", type=int, default=80)
     args = ap.parse_args()
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((4, 2), ("data", "model"))
     mi = MeshInfo.from_mesh(mesh)
     cfg = configs.get("gemma3-1b").reduced().replace(vocab_size=128)
     data = SyntheticCorpus(DataConfig(vocab_size=128, seq_len=32,
@@ -49,9 +49,9 @@ def main():
         params, ostate = trainer.init_all(jax.random.key(0))
         with comms.record_traffic() as events:
             trainer.step.lower(
-                jax.tree.map(jax.typeof, params),
-                jax.tree.map(jax.typeof, ostate),
-                {k: jax.typeof(jax.numpy.asarray(v))
+                jax.tree.map(compat.typeof, params),
+                jax.tree.map(compat.typeof, ostate),
+                {k: compat.typeof(jax.numpy.asarray(v))
                  for k, v in data.batch(0).items()})
         led = rl.ledger_summary(events, train=True)
         if scheme == "baseline":

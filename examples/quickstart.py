@@ -14,6 +14,7 @@ import jax
 import numpy as np
 from jax.sharding import NamedSharding
 
+from repro.core import compat
 from repro import configs
 from repro.analysis import roofline as rl
 from repro.core import comms
@@ -24,8 +25,7 @@ from repro.train.train_step import Trainer, batch_specs
 
 
 def main():
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     mi = MeshInfo.from_mesh(mesh)
     cfg = configs.get("gemma3-1b").reduced()
     model = Model(cfg, mi)
@@ -41,9 +41,9 @@ def main():
         # trace once under the ledger to see what crosses the wire
         with comms.record_traffic() as events:
             trainer.step.lower(
-                jax.tree.map(lambda x: jax.typeof(x), params),
-                jax.tree.map(lambda x: jax.typeof(x), ostate),
-                jax.tree.map(lambda x: jax.typeof(x), batch))
+                jax.tree.map(lambda x: compat.typeof(x), params),
+                jax.tree.map(lambda x: compat.typeof(x), ostate),
+                jax.tree.map(lambda x: compat.typeof(x), batch))
         led = rl.ledger_summary(events, train=True)
         # and actually run a few steps
         losses = []

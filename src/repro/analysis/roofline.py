@@ -22,7 +22,8 @@ from repro.core import codecs
 
 PEAK_FLOPS = 197e12      # bf16 / chip
 HBM_BW = 819e9           # bytes/s / chip
-ICI_BW = 50e9            # bytes/s / link
+ICI_BW = 50e9            # bytes/s / link (fast, intra-node NVLink/ICI class)
+DCN_BW = 25e9            # bytes/s / link (slow, inter-node IB/DCN class)
 
 
 # --------------------------------------------------------------------------
@@ -75,17 +76,51 @@ def event_bytes(ev: dict, train: bool) -> dict:
 
 
 def ledger_summary(events, train: bool) -> dict:
-    """Aggregate bytes per tag and per axis + grand total (per device)."""
-    per_tag, per_axis = {}, {}
+    """Aggregate bytes per tag / axis / link level + grand total (per device).
+
+    ``per_level`` splits by the hierarchy stage a collective rode: "flat"
+    (single-stage op over an unfactored axis), "inner" (intra-node stage of
+    a hierarchical op, fast links), "outer" (inter-node stage, slow links)."""
+    per_tag, per_axis, per_level = {}, {}, {}
     total = 0.0
     for ev in events:
         b = event_bytes(ev, train)
         tot = b["fwd"] + b["bwd"]
         tag = ev["tag"].split("@")[0]
+        lvl = ev.get("level", "flat")
         per_tag[tag] = per_tag.get(tag, 0.0) + tot
         per_axis[ev["axis"]] = per_axis.get(ev["axis"], 0.0) + tot
+        per_level[lvl] = per_level.get(lvl, 0.0) + tot
         total += tot
-    return {"total_bytes": total, "per_tag": per_tag, "per_axis": per_axis}
+    return {"total_bytes": total, "per_tag": per_tag, "per_axis": per_axis,
+            "per_level": per_level}
+
+
+def link_bytes(events, train: bool, slow_axes=()) -> dict:
+    """Split per-device collective bytes into fast vs slow link classes.
+
+    Hierarchical stage events carry an explicit level ("inner" = fast,
+    "outer" = slow).  A *flat* event is priced on the slow link iff its
+    axis is in ``slow_axes``: a flat ring over an axis that spans nodes is
+    bottlenecked by its inter-node links, which carry the same per-link
+    bytes as every other link in the ring."""
+    fast = slow = 0.0
+    for ev in events:
+        b = event_bytes(ev, train)
+        tot = b["fwd"] + b["bwd"]
+        lvl = ev.get("level", "flat")
+        if lvl == "outer" or (lvl == "flat" and ev["axis"] in slow_axes):
+            slow += tot
+        else:
+            fast += tot
+    return {"fast": fast, "slow": slow}
+
+
+def collective_seconds(events, train: bool, slow_axes=()) -> float:
+    """Link-hierarchy-aware collective time: stages are sequential, so the
+    fast- and slow-link byte pools add (no overlap credit across stages)."""
+    lb = link_bytes(events, train, slow_axes)
+    return lb["fast"] / ICI_BW + lb["slow"] / DCN_BW
 
 
 # --------------------------------------------------------------------------

@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import codecs, schemes
+from repro.core import codecs, compat, schemes
 from repro.kernels import ops
 from repro.kernels.ref import BLOCK
 
@@ -102,20 +102,33 @@ class scope_mult:
         return False
 
 
-def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None):
+def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None, level="flat",
+             elems=None):
+    """Append one ledger event.
+
+    ``level`` distinguishes the link class a collective rides: "flat" for
+    single-stage collectives over an unfactored axis, "inner" for the
+    intra-node stage of a hierarchical collective (fast links), "outer"
+    for its inter-node stage (slow links).  ``elems`` overrides the local
+    payload element count for stages that operate on a sub-chunk."""
     events = getattr(_rec, "events", None)
     if events is None:
         return
+    if level == "flat" and tag.endswith(("_inner", "_outer")):
+        # a level-tagged single-stage call (e.g. the optimizer's staged
+        # flat-vector sync) is itself one stage of a hierarchical op
+        level = tag.rsplit("_", 1)[1]
     leaves = jax.tree_util.tree_leaves(x)
-    elems = sum(l.size for l in leaves)
+    if elems is None:
+        elems = sum(l.size for l in leaves)
     dt = leaves[0].dtype if leaves else jnp.float32
     events.append(dict(
-        op=op, tag=tag, axis=axis, n=int(lax.axis_size(axis)),
+        op=op, tag=tag, axis=axis, n=int(compat.axis_size(axis)),
         elems=int(elems), dtype=str(dt),
         codec_fwd=c_fwd.name, codec_bwd=c_bwd.name,
         bwd_op=bwd_op, mult=int(getattr(_rec, "mult", 1)),
         remat=bool(getattr(_rec, "remat", False)),
-        bidir=_bidir()))
+        bidir=_bidir(), level=level))
 
 
 def _log(op, tag, codec, payload_bytes, hops):
@@ -153,16 +166,18 @@ def _bidir() -> bool:
 
 def _codec_pair(tag: str):
     scheme = schemes.current()
-    if tag in ("dp", "zero") or tag.endswith(("_fwd", "_bwd")):
+    if tag in ("dp", "zero") \
+            or tag.endswith(("_fwd", "_bwd", "_inner", "_outer")):
         # explicit direction (e.g. "tp_bwd" for the optimizer's model-axis
-        # gradient fold) -> same codec both ways
+        # gradient fold) or explicit level (e.g. "dp_inner" for one stage
+        # of a hierarchical sync) -> same codec both ways
         c = scheme.codec(tag)
         return c, c
     return scheme.codec(f"{tag}_fwd"), scheme.codec(f"{tag}_bwd")
 
 
 def axis_size(axis: str) -> int:
-    return lax.axis_size(axis)
+    return compat.axis_size(axis)
 
 
 _vma = threading.local()
@@ -190,6 +205,8 @@ class vma_mode:
 
 
 def _vma_checked() -> bool:
+    if not compat.HAS_VMA:
+        return False
     return getattr(_vma, "checked", True)
 
 
@@ -197,10 +214,10 @@ def _ensure_varying(x, axis: str):
     """pvary iff not already varying over ``axis`` (pvary is not idempotent)."""
     if not _vma_checked():
         return x
-    vma = getattr(jax.typeof(x), "vma", frozenset())
+    vma = getattr(compat.typeof(x), "vma", frozenset())
     if axis in vma:
         return x
-    return lax.pvary(x, (axis,))
+    return compat.pvary(x, (axis,))
 
 
 # --------------------------------------------------------------------------
@@ -541,6 +558,209 @@ def psum_fwd_copy_bwd(x, axis: str, tag: str):
     return _f_vjp(x, axis, c_fwd)
 
 
+# --------------------------------------------------------------------------
+# hierarchical two-level collectives (ZeRO++-style, arXiv:2306.10209)
+#
+# A flat collective over one mesh axis is decomposed over a factored
+# (outer=node, inner=local) pair of sub-axes:
+#
+#   all-reduce      = RS(inner, mild) -> AR(outer, aggressive) -> AG(inner, mild)
+#   reduce-scatter  = RS(inner, mild) -> RS(outer, aggressive)
+#   all-gather      = AG(outer, aggressive) -> AG(inner, mild)
+#
+# The inner stages ride fast intra-node links (NVLink/ICI) under a mild
+# codec; the outer stage moves only a 1/n_inner chunk over the slow
+# inter-node links (IB/DCN) under an aggressive codec — which is where the
+# wire savings live.  Chunk assignment is linearized outer-major, so with
+# identity codecs each op is equivalent to the stock ``lax`` collective
+# over the joint ``(outer, inner)`` axis tuple.
+# --------------------------------------------------------------------------
+
+def _hier_codec_pairs(tag: str):
+    """((inner_fwd, inner_bwd), (outer_fwd, outer_bwd)) for ``tag``.
+
+    Level-aware tags fall back to the flat codec when the active scheme
+    carries no per-level override (schemes.Scheme.codec)."""
+    scheme = schemes.current()
+    if tag in ("dp", "zero") or tag.endswith(("_fwd", "_bwd")):
+        ci = scheme.codec(f"{tag}_inner")
+        co = scheme.codec(f"{tag}_outer")
+        return (ci, ci), (co, co)
+    return ((scheme.codec(f"{tag}_fwd_inner"), scheme.codec(f"{tag}_bwd_inner")),
+            (scheme.codec(f"{tag}_fwd_outer"), scheme.codec(f"{tag}_bwd_outer")))
+
+
+def _hier_psum_impl(x, inner, outer, c_in, c_out):
+    """RS(inner) -> AR(outer) -> AG(inner) on the flattened payload."""
+    n_i = axis_size(inner)
+    n_o = axis_size(outer)
+    if n_i == 1 and n_o == 1:
+        return x
+    if n_i == 1:
+        return _psum_impl(x, outer, c_out)
+    total = x.size
+    xb = _chunked_blocks(x.reshape(-1), n_i)            # [n_i, M, BLOCK] f32
+    # stage 1: intra-node reduce-scatter — rank i owns sum-chunk i
+    if c_in.is_identity:
+        chunk = lax.psum_scatter(xb, inner, scatter_dimension=0, tiled=False)
+    else:
+        chunk, _ = _ring_reduce_scatter(xb, inner, c_in)
+    # stage 2: inter-node all-reduce of the 1/n_i chunk
+    if n_o > 1:
+        chunk = _psum_impl(chunk, outer, c_out)
+    # stage 3: intra-node all-gather of the fully-reduced chunks
+    if c_in.is_identity:
+        full = lax.all_gather(chunk, inner, axis=0, tiled=False)
+    else:
+        wire = c_in.encode_blocks(chunk)
+        gathered = jax.tree.map(
+            lambda l: lax.all_gather(l, inner, axis=0, tiled=False), wire)
+        full = c_in.decode_blocks(gathered)             # [n_i, M, BLOCK]
+    return full.reshape(-1)[:total].reshape(x.shape).astype(x.dtype)
+
+
+def _hier_reduce_scatter_impl(x, inner, outer, axis_dim, c_in, c_out):
+    """Scatter dim ``axis_dim`` over the joint axis, outer-major chunks."""
+    n_i = axis_size(inner)
+    n_o = axis_size(outer)
+    n = n_i * n_o
+    if n == 1:
+        return x
+    s = x.shape[axis_dim]
+    assert s % n == 0, f"dim {axis_dim} of size {s} not divisible by {n}"
+    pre, post = x.shape[:axis_dim], x.shape[axis_dim + 1:]
+    xr = x.reshape(pre + (n_o, n_i, s // n) + post)
+    y = _reduce_scatter_impl(xr, inner, axis_dim + 1, c_in)
+    z = _reduce_scatter_impl(y, outer, axis_dim, c_out)
+    return z.reshape(pre + (s // n,) + post)
+
+
+def _hier_all_gather_impl(x, inner, outer, axis_dim, c_in, c_out):
+    """Exact transpose of :func:`_hier_reduce_scatter_impl`."""
+    n_i = axis_size(inner)
+    n_o = axis_size(outer)
+    if n_i * n_o == 1:
+        return x
+    s = x.shape[axis_dim]
+    pre, post = x.shape[:axis_dim], x.shape[axis_dim + 1:]
+    y = _all_gather_impl(x, outer, axis_dim, c_out)     # [..., n_o*s, ...]
+    yr = y.reshape(pre + (n_o, 1, s) + post)
+    z = _all_gather_impl(yr, inner, axis_dim + 1, c_in)  # [..., n_o, n_i, s, ...]
+    return z.reshape(pre + (n_o * n_i * s,) + post)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4))
+def _hier_psum_vjp(x, inner, outer, cs_in, cs_out):
+    return _hier_psum_impl(x, inner, outer, cs_in[0], cs_out[0])
+
+
+def _hier_psum_fwd(x, inner, outer, cs_in, cs_out):
+    return _hier_psum_impl(x, inner, outer, cs_in[0], cs_out[0]), None
+
+
+def _hier_psum_bwd(inner, outer, cs_in, cs_out, _, g):
+    out = _hier_psum_impl(g, inner, outer, cs_in[1], cs_out[1])
+    return (_ensure_varying(_ensure_varying(out, inner), outer),)
+
+
+_hier_psum_vjp.defvjp(_hier_psum_fwd, _hier_psum_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _hier_rs_vjp(x, inner, outer, axis_dim, cs_in, cs_out):
+    return _hier_reduce_scatter_impl(x, inner, outer, axis_dim,
+                                     cs_in[0], cs_out[0])
+
+
+def _hier_rs_fwd(x, inner, outer, axis_dim, cs_in, cs_out):
+    return _hier_reduce_scatter_impl(x, inner, outer, axis_dim,
+                                     cs_in[0], cs_out[0]), None
+
+
+def _hier_rs_bwd(inner, outer, axis_dim, cs_in, cs_out, _, g):
+    return (_hier_all_gather_impl(g, inner, outer, axis_dim,
+                                  cs_in[1], cs_out[1]),)
+
+
+_hier_rs_vjp.defvjp(_hier_rs_fwd, _hier_rs_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _hier_ag_vjp(x, inner, outer, axis_dim, cs_in, cs_out):
+    return _hier_all_gather_impl(x, inner, outer, axis_dim,
+                                 cs_in[0], cs_out[0])
+
+
+def _hier_ag_fwd(x, inner, outer, axis_dim, cs_in, cs_out):
+    return _hier_all_gather_impl(x, inner, outer, axis_dim,
+                                 cs_in[0], cs_out[0]), None
+
+
+def _hier_ag_bwd(inner, outer, axis_dim, cs_in, cs_out, _, g):
+    return (_hier_reduce_scatter_impl(g, inner, outer, axis_dim,
+                                      cs_in[1], cs_out[1]),)
+
+
+_hier_ag_vjp.defvjp(_hier_ag_fwd, _hier_ag_bwd)
+
+
+def _account_hier(stages, tag, x, c_pairs):
+    """Ledger the per-stage events of one hierarchical op.
+
+    ``stages`` is a list of (op, axis, level, elems, bwd_op); ``c_pairs``
+    the matching (fwd, bwd) codec per stage."""
+    for (op, axis, level, elems, bwd_op), (cf, cb) in zip(stages, c_pairs):
+        _account(op, tag, x, axis, cf, cb, bwd_op=bwd_op, level=level,
+                 elems=elems)
+
+
+def hier_all_reduce(x, inner_axis: str, outer_axis: str, tag: str):
+    """Two-level all-reduce-sum over the factored (outer, inner) axes.
+
+    Equivalent to ``psum`` over the joint axis; the inter-node stage moves
+    only ``1/n_inner`` of the payload under the (aggressive) outer codec."""
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    n_i = int(axis_size(inner_axis))
+    chunk = -(-x.size // n_i)
+    _account_hier(
+        [("reduce_scatter", inner_axis, "inner", x.size, "all_gather"),
+         ("all_reduce", outer_axis, "outer", chunk, "all_reduce"),
+         ("all_gather", inner_axis, "inner", chunk, "reduce_scatter")],
+        tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)])
+    return _hier_psum_vjp(x, inner_axis, outer_axis,
+                          (ci_f, ci_b), (co_f, co_b))
+
+
+# ZeRO++-style name kept alongside the lax-style one
+hier_psum = hier_all_reduce
+
+
+def hier_reduce_scatter(x, inner_axis: str, outer_axis: str, axis_dim: int,
+                        tag: str):
+    """Two-level reduce-scatter of dim ``axis_dim`` (outer-major chunks)."""
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    n_i = int(axis_size(inner_axis))
+    _account_hier(
+        [("reduce_scatter", inner_axis, "inner", x.size, "all_gather"),
+         ("reduce_scatter", outer_axis, "outer", x.size // n_i, "all_gather")],
+        tag, x, [(ci_f, ci_b), (co_f, co_b)])
+    return _hier_rs_vjp(x, inner_axis, outer_axis, axis_dim,
+                        (ci_f, ci_b), (co_f, co_b))
+
+
+def hier_all_gather(x, inner_axis: str, outer_axis: str, axis_dim: int,
+                    tag: str):
+    """Two-level all-gather of dim ``axis_dim`` (transpose of hier RS)."""
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    n_o = int(axis_size(outer_axis))
+    _account_hier(
+        [("all_gather", outer_axis, "outer", x.size, "reduce_scatter"),
+         ("all_gather", inner_axis, "inner", x.size * n_o, "reduce_scatter")],
+        tag, x, [(co_f, co_b), (ci_f, ci_b)])
+    return _hier_ag_vjp(x, inner_axis, outer_axis, axis_dim,
+                        (ci_f, ci_b), (co_f, co_b))
+
+
 def match_vma(x, like):
     """pvary pytree ``x`` so its varying-axes type matches ``like``'s leaves.
 
@@ -550,12 +770,12 @@ def match_vma(x, like):
         return x
     vma = frozenset()
     for l in jax.tree_util.tree_leaves(like):
-        vma = vma | getattr(jax.typeof(l), "vma", frozenset())
+        vma = vma | getattr(compat.typeof(l), "vma", frozenset())
 
     def f(l):
-        cur = getattr(jax.typeof(l), "vma", frozenset())
+        cur = getattr(compat.typeof(l), "vma", frozenset())
         need = tuple(vma - cur)
-        return lax.pvary(l, need) if need else l
+        return compat.pvary(l, need) if need else l
     return jax.tree.map(f, x)
 
 
@@ -604,6 +824,10 @@ def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag: str = "dp",
     _account("reduce_scatter", tag, flat, axis, c, c, bwd_op=None)
     n = axis_size(axis)
     if n == 1:
+        # still tile-pad: consumers (the ZeRO-1 master chunk) size their
+        # slice as padded_rows(ceil(n/axis)) * BLOCK even on a trivial axis
+        m = ops.padded_rows(flat.shape[0])
+        flat = jnp.pad(flat, (0, m * BLOCK - flat.shape[0]))
         return flat / n if mean else flat
     xb = _chunked_blocks(flat, n)
     if c.is_identity:

@@ -28,6 +28,17 @@ from repro.core import codecs
 
 @dataclasses.dataclass(frozen=True)
 class Scheme:
+    """Tag -> codec map, now over THREE axes of the scheme space:
+
+      dimension (dp/zero/tp/pp/ep) x direction (fwd/bwd) x level.
+
+    The *level* axis prices the link hierarchy of real clusters: the
+    intra-node stage of a hierarchical collective (``<tag>_inner``) rides
+    fast NVLink/ICI links, the inter-node stage (``<tag>_outer``) rides
+    slow IB/DCN links (ZeRO++, arXiv:2306.10209).  Level fields default to
+    ``None`` = inherit the flat codec for the tag, so every pre-existing
+    scheme keeps its exact behavior under the hierarchical collectives."""
+
     name: str
     dp: str = "none"
     zero: str = "none"
@@ -37,17 +48,26 @@ class Scheme:
     pp_bwd: str = "none"
     ep_fwd: str = "none"
     ep_bwd: str = "none"
+    # per-level overrides (hierarchical collectives); None -> flat codec
+    dp_inner: str | None = None
+    dp_outer: str | None = None
+    zero_inner: str | None = None
+    zero_outer: str | None = None
 
     def codec(self, tag: str) -> codecs.Codec:
-        try:
-            return codecs.get(getattr(self, tag))
-        except AttributeError:
-            raise KeyError(f"unknown comm tag {tag!r}") from None
+        val = getattr(self, tag, None)
+        if val is not None:
+            return codecs.get(val)
+        if tag.endswith(("_inner", "_outer")):
+            # level-aware tag with no explicit override (or no declared
+            # field at all, e.g. tp_fwd_inner): fall back to the flat codec
+            return self.codec(tag.rsplit("_", 1)[0])
+        raise KeyError(f"unknown comm tag {tag!r}")
 
     @classmethod
     def uniform(cls, name: str, codec_name: str) -> "Scheme":
         fields = {f.name: codec_name for f in dataclasses.fields(cls)
-                  if f.name != "name"}
+                  if f.name != "name" and f.default is not None}
         return cls(name=name, **fields)
 
     @classmethod
@@ -57,6 +77,16 @@ class Scheme:
         return cls(name=name, dp=dp, zero=z,
                    tp_fwd=mp, tp_bwd=mp, pp_fwd=mp, pp_bwd=mp,
                    ep_fwd=mp, ep_bwd=mp)
+
+    @classmethod
+    def hier(cls, name: str, base: "Scheme", inner: str, outer: str) -> "Scheme":
+        """Level-aware scheme: ``base``'s flat codecs, plus a mild ``inner``
+        codec for intra-node stages and an aggressive ``outer`` codec for
+        inter-node stages of the dp/zero hierarchical collectives."""
+        return dataclasses.replace(
+            base, name=name,
+            dp_inner=inner, dp_outer=outer,
+            zero_inner=inner, zero_outer=outer)
 
 
 BASELINE = Scheme(name="baseline")                                  # stock collectives
@@ -82,12 +112,21 @@ MZHYBRID_T8 = Scheme.hybrid("mzhybrid_t8", dp="tq8", mp="mpc")
 # setting is a no-op on bf16 traffic — halving both rates restores the
 # intended compression ratios (EXPERIMENTS.md §Perf)
 ZHYBRID_8_4 = Scheme.hybrid("zhybrid_8_4", dp="bq4", mp="bq8")
+# level-aware (hierarchical) schemes: <name>_<outer>_<inner> — mild codec
+# intra-node, aggressive codec on the inter-node stage (ZeRO++ qgZ-style)
+HIER_ZPP_8_16 = Scheme.hier("hier_zpp_8_16", ZHYBRID_16_8,
+                            inner="bq16", outer="bq8")
+HIER_ZPP_4_16 = Scheme.hier("hier_zpp_4_16", ZHYBRID_16_8,
+                            inner="bq16", outer="bq4")
+HIER_MZPP_8 = Scheme.hier("hier_mzpp_8", MZHYBRID8,
+                          inner="mpc", outer="bq8")
 
 _REGISTRY = {s.name: s for s in (
     BASELINE, NAIVE_ZFP8, NAIVE_ZFP16, NAIVE_MPC,
     MZHYBRID8, MZHYBRID16, ZHYBRID_16_8, ZHYBRID_24_8,
     NAIVE_ZFP4, ZHYBRID_16_4, NAIVE_GQ8, MZHYBRID_G8,
     NAIVE_TQ8, MZHYBRID_T8, ZHYBRID_8_4,
+    HIER_ZPP_8_16, HIER_ZPP_4_16, HIER_MZPP_8,
 )}
 
 

@@ -7,30 +7,68 @@ XLA flag before the first jax init.
 Mapping (DESIGN.md §4): ``model`` = TP/EP/SP, ``data`` = DP + ZeRO shards,
 ``pod`` (multi-pod) = outer DP — cross-pod traffic is exactly the DP
 gradient reduction the paper compresses hardest, riding the slowest links.
+
+Hierarchical meshes additionally factor the data axis into ``(node,
+data)`` sub-axes from a ``--nodes`` spec: ``node`` enumerates machines
+(slow inter-node links), ``data`` the local DP ranks inside one machine
+(fast NVLink/ICI).  The two-level collectives in :mod:`repro.core.comms`
+(``hier_all_reduce`` et al.) take exactly this (outer, inner) axis pair.
 """
 
 from __future__ import annotations
 
-import jax
+from repro.core import compat
+
+NODE_AXIS = "node"     # outer (inter-node, slow-link) DP sub-axis
+LOCAL_AXIS = "data"    # inner (intra-node, fast-link) DP sub-axis
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import jax
     import math
     need = math.prod(shape)
-    return jax.make_mesh(
-        shape, axes,
-        devices=jax.devices()[:need],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return compat.make_mesh(shape, axes, devices=jax.devices()[:need])
 
 
-def make_mesh(dp: int, tp: int, pod: int = 1):
-    """Arbitrary mesh for tests / elastic restarts / smoke runs."""
+def make_mesh(dp: int, tp: int, pod: int = 1, nodes: int = 1):
+    """Arbitrary mesh for tests / elastic restarts / smoke runs.
+
+    ``nodes > 1`` factors the dp ways into ``(nodes, dp // nodes)`` as the
+    ``(node, data)`` sub-axis pair for hierarchical collectives.  ``pod``
+    and ``nodes`` are mutually exclusive outer-DP notions."""
+    if nodes > 1:
+        assert pod == 1, "pod and nodes are mutually exclusive"
+        return make_hier_mesh(dp, tp, nodes)
     if pod > 1:
-        return jax.make_mesh(
-            (pod, dp, tp), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3)
-    return jax.make_mesh(
-        (dp, tp), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        return compat.make_mesh((pod, dp, tp), ("pod", "data", "model"))
+    return compat.make_mesh((dp, tp), ("data", "model"))
+
+
+def make_hier_mesh(dp: int, tp: int, nodes: int):
+    """(node, data, model) mesh with the dp ways factored over ``nodes``.
+
+    The total data-parallel degree stays ``dp``; the joint ``("node",
+    "data")`` axis pair is what a flat ``"data"`` axis of size dp would
+    be, linearized node-major — so flat and hierarchical collectives over
+    the pair are interchangeable rank-for-rank."""
+    assert dp % nodes == 0, f"dp={dp} not divisible by nodes={nodes}"
+    return compat.make_mesh((nodes, dp // nodes, tp),
+                            (NODE_AXIS, LOCAL_AXIS, "model"))
+
+
+def parse_nodes_spec(spec: str | int, dp: int) -> int:
+    """--nodes spec -> node count: an int, or "NxD" (nodes x dp-per-node)."""
+    if isinstance(spec, int):
+        nodes = spec
+    elif "x" in str(spec):
+        n, d = str(spec).lower().split("x")
+        nodes = int(n)
+        assert nodes * int(d) == dp, \
+            f"--nodes {spec} inconsistent with dp={dp}"
+    else:
+        nodes = int(spec)
+    assert nodes >= 1 and dp % nodes == 0, \
+        f"--nodes {nodes} must divide dp={dp}"
+    return nodes

@@ -22,6 +22,10 @@ def main():
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--pod", type=int, default=1)
+    ap.add_argument("--nodes", default="1",
+                    help="factor dp into (node, local) sub-axes for "
+                         "hierarchical two-level collectives; an int or "
+                         "'NxD' (N nodes x D dp-ranks-per-node)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N XLA host devices (set before jax init)")
     ap.add_argument("--steps", type=int, default=20)
@@ -48,7 +52,7 @@ def main():
 
     from repro import configs
     from repro.data.pipeline import DataConfig, SyntheticCorpus
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, parse_nodes_spec
     from repro.models.model import Model
     from repro.models.params import MeshInfo
     from repro.train import checkpoint, fault
@@ -58,7 +62,8 @@ def main():
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = make_mesh(args.dp, args.tp, args.pod)
+    nodes = parse_nodes_spec(args.nodes, args.dp)
+    mesh = make_mesh(args.dp, args.tp, args.pod, nodes=nodes)
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
     trainer = Trainer(model, mesh, scheme=args.scheme,

@@ -22,7 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import comms
+from repro.core import comms, compat
 from repro.models import layers
 from repro.models.params import D as Dd, MeshInfo
 from repro.models.layers import use, apply_rope, apply_mrope, rms_norm
@@ -317,5 +317,5 @@ def _shard_index(mi, seq_axes):
     """Linear shard index over the (possibly multi-axis) seq sharding."""
     idx = jnp.int32(0)
     for ax in seq_axes:
-        idx = idx * lax.axis_size(ax) + lax.axis_index(ax)
+        idx = idx * compat.axis_size(ax) + lax.axis_index(ax)
     return idx

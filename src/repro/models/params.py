@@ -29,20 +29,26 @@ class MeshInfo:
     tp: int = 1
     dp: int = 1
     pod: int = 1
+    node: int = 1
     model_axis: str = "model"
     data_axis: str = "data"
     pod_axis: str | None = None
+    node_axis: str | None = None
 
     @property
     def batch_axes(self):
         """Mesh axes the global batch is sharded over."""
+        axes = (self.data_axis,)
+        if self.node_axis and self.node > 1:
+            axes = (self.node_axis,) + axes
         if self.pod_axis and self.pod > 1:
-            return (self.pod_axis, self.data_axis)
-        return (self.data_axis,)
+            axes = (self.pod_axis,) + axes
+        return axes
 
     @property
     def batch_ways(self) -> int:
-        return self.dp * (self.pod if self.pod_axis else 1)
+        return self.dp * (self.pod if self.pod_axis else 1) \
+            * (self.node if self.node_axis else 1)
 
     @property
     def all_axes(self):
@@ -52,8 +58,9 @@ class MeshInfo:
     def from_mesh(cls, mesh) -> "MeshInfo":
         ax = dict(zip(mesh.axis_names, mesh.devices.shape))
         return cls(tp=ax.get("model", 1), dp=ax.get("data", 1),
-                   pod=ax.get("pod", 1),
-                   pod_axis="pod" if "pod" in ax else None)
+                   pod=ax.get("pod", 1), node=ax.get("node", 1),
+                   pod_axis="pod" if "pod" in ax else None,
+                   node_axis="node" if "node" in ax else None)
 
 
 @dataclasses.dataclass

@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import comms
+from repro.core import comms, compat
 from repro.models import layers
 from repro.models.params import D as Dd, MeshInfo
 from repro.models.layers import use, rms_norm
@@ -96,7 +96,7 @@ def cross_shard_prefix(decay, state, mi: MeshInfo, axis: str):
     Returns s_in [B,H,P,N]: the state entering this shard.
     Hillis-Steele over (compressed tag 'pp') ppermute: O(log tp) hops.
     """
-    tp = lax.axis_size(axis)
+    tp = compat.axis_size(axis)
     if tp == 1:
         return jnp.zeros_like(state)
     i = lax.axis_index(axis)

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import comms, schemes
+from repro.core import comms, compat, schemes
 from repro.models import layers, transformer
 from repro.models.model import Model
 from repro.models.params import MeshInfo
@@ -94,7 +94,7 @@ class Server:
         tok_spec = P(None if (B == 1 or "data" in self.seq_axes)
                      else mi.batch_axes, None)
         out_tok_spec = P(tok_spec[0])
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             self.decode_inner, mesh=self.mesh,
             in_specs=(model.specs(), tok_spec, cspecs, P()),
             out_specs=(out_tok_spec, cspecs), check_vma=False)
@@ -104,7 +104,7 @@ class Server:
         model, mi, cfg = self.model, self.model.mi, self.model.cfg
         cache_specs = kv_cache.prefill_cache_specs(cfg, mi, B)
         tok_spec = P(mi.batch_axes if B > 1 else None)
-        fn = jax.shard_map(
+        fn = compat.shard_map(
             self.prefill_inner, mesh=self.mesh,
             in_specs=(model.specs(), bspecs),
             out_specs=(tok_spec, cache_specs), check_vma=False)

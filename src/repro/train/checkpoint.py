@@ -21,7 +21,22 @@ import threading
 
 import jax
 import numpy as np
-import orjson
+
+try:
+    import orjson as _json_impl
+
+    def _json_dumps(obj) -> bytes:
+        return _json_impl.dumps(obj)
+except ModuleNotFoundError:  # stdlib fallback: same bytes-in/bytes-out contract
+    import json as _json_impl
+
+    def _json_dumps(obj) -> bytes:
+        return _json_impl.dumps(obj).encode("utf-8")
+
+
+def _json_loads(data: bytes):
+    return _json_impl.loads(data)
+
 
 from repro.models.params import Pv
 
@@ -58,7 +73,7 @@ def save(ckpt_dir, step: int, tree, extra: dict | None = None,
             np.save(tmp / "leaves" / f"{i}.npy", a)
         manifest = {"step": step, "n_leaves": len(host), "meta": meta,
                     "extra": extra or {}}
-        (tmp / "manifest.json").write_bytes(orjson.dumps(manifest))
+        (tmp / "manifest.json").write_bytes(_json_dumps(manifest))
         if final.exists():
             import shutil
             shutil.rmtree(final)
@@ -82,7 +97,7 @@ def latest_step(ckpt_dir) -> int | None:
     p = pathlib.Path(ckpt_dir) / "latest"
     if not p.exists():
         return None
-    manifest = orjson.loads((p / "manifest.json").read_bytes())
+    manifest = _json_loads((p / "manifest.json").read_bytes())
     return manifest["step"]
 
 
@@ -95,7 +110,7 @@ def restore(ckpt_dir, tree_like, step: int | None = None,
     """
     ckpt_dir = pathlib.Path(ckpt_dir)
     src = ckpt_dir / ("latest" if step is None else f"step_{step}")
-    manifest = orjson.loads((src / "manifest.json").read_bytes())
+    manifest = _json_loads((src / "manifest.json").read_bytes())
     leaves, treedef = _flatten(tree_like)
     assert manifest["n_leaves"] == len(leaves), \
         f"checkpoint has {manifest['n_leaves']} leaves, tree has {len(leaves)}"

@@ -17,7 +17,7 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import schemes
+from repro.core import compat, schemes
 from repro.models.model import Model
 from repro.models.params import MeshInfo
 from repro.train.optimizer import Adam, AdamConfig, _split_classes
@@ -89,14 +89,14 @@ class Trainer:
             with comms.vma_mode(False):
                 return opt.init(params)
 
-        self.opt_init = jax.jit(jax.shard_map(
+        self.opt_init = jax.jit(compat.shard_map(
             opt_init_fn, mesh=self.mesh, in_specs=(pspecs,),
             out_specs=ospecs, check_vma=False))
         self.step = jax.jit(
-            jax.shard_map(step_fn, mesh=self.mesh,
-                          in_specs=(pspecs, ospecs, bspecs),
-                          out_specs=(pspecs, ospecs, METRIC_SPECS),
-                          check_vma=False),
+            compat.shard_map(step_fn, mesh=self.mesh,
+                             in_specs=(pspecs, ospecs, bspecs),
+                             out_specs=(pspecs, ospecs, METRIC_SPECS),
+                             check_vma=False),
             donate_argnums=(0, 1))
 
     def init_all(self, key):

@@ -8,7 +8,7 @@ from jax.sharding import PartitionSpec as P
 from repro import configs
 from repro.models.model import Model
 from repro.models.params import MeshInfo
-from repro.core import schemes
+from repro.core import compat, schemes
 
 rng = np.random.default_rng(0)
 
@@ -29,15 +29,17 @@ def make_batch(cfg, B=4, S=16):
     return batch, specs
 
 def loss_on_mesh(cfg, shape, scheme, batch_and_specs, params_src=None):
-    mesh = jax.make_mesh(shape, ("data", "model"))
+    mesh = compat.make_mesh(shape, ("data", "model"))
     mi = MeshInfo.from_mesh(mesh)
     m = Model(cfg, mi)
     params = m.init(jax.random.key(1))
     batch, bspecs = batch_and_specs
     def step(params, batch):
         return m.loss_fn(params, batch)
-    sm = jax.jit(jax.shard_map(step, mesh=mesh, in_specs=(m.specs(), bspecs),
-                               out_specs=(P(), {"xent": P(), "tokens": P()})))
+    sm = jax.jit(compat.shard_map(step, mesh=mesh,
+                                  in_specs=(m.specs(), bspecs),
+                                  out_specs=(P(), {"xent": P(), "tokens": P()}),
+                                  check_vma=True))
     with schemes.use(scheme):
         loss, met = sm(params, batch)
     return float(loss)

@@ -2,13 +2,14 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from repro.core import comms, schemes, codecs
+from repro.core import codecs, comms, compat, schemes
 
-mesh = jax.make_mesh((8,), ("x",))
+mesh = compat.make_mesh((8,), ("x",))
 rng = np.random.default_rng(0)
 
 def smap(f, in_specs, out_specs):
-    return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs))
+    return jax.jit(compat.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                    out_specs=out_specs, check_vma=True))
 
 x = jnp.asarray(rng.normal(size=(8, 4, 256)).astype(np.float32))  # leading dim -> devices
 

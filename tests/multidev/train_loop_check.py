@@ -5,6 +5,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import numpy as np, jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro import configs
+from repro.core import compat
 from repro.models.model import Model
 from repro.models.params import MeshInfo, Pv
 from repro.train.train_step import Trainer, batch_specs
@@ -23,7 +24,7 @@ def put_batch(mesh, cfg, np_batch):
     return out
 
 def run(mesh_shape, steps, resume_from=None, ckpt_dir=None, lr=3e-3, scheme="zhybrid_24_8"):
-    mesh = jax.make_mesh(mesh_shape, ("data", "model"))
+    mesh = compat.make_mesh(mesh_shape, ("data", "model"))
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
     tr = Trainer(model, mesh, scheme=scheme, opt_cfg=AdamConfig(lr=lr, warmup=5))
@@ -55,7 +56,7 @@ with tempfile.TemporaryDirectory() as d:
     checkpoint.save(d, 30, params)
     p2, man = checkpoint.restore(d, model.structs())
     # elastic: restore onto (4,2) mesh
-    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    mesh2 = compat.make_mesh((4, 2), ("data", "model"))
     mi2 = MeshInfo.from_mesh(mesh2)
     model2 = Model(cfg, mi2)
     sh2 = checkpoint.resharded_specs(model2.structs(), mesh2)

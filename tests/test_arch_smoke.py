@@ -12,7 +12,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.core import comms, schemes
+from repro.core import comms, compat, schemes
 from repro.models.model import Model
 from repro.models.params import MeshInfo, count_params
 
@@ -22,8 +22,7 @@ _MESH = None
 def mesh1():
     global _MESH
     if _MESH is None:
-        _MESH = jax.make_mesh((1, 1), ("data", "model"),
-                              axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        _MESH = compat.make_mesh((1, 1), ("data", "model"))
     return _MESH
 
 
@@ -68,7 +67,7 @@ def test_reduced_forward_and_grad(arch):
                           ("data", "model"))
         return loss, met["xent"], gn
 
-    sm = jax.jit(jax.shard_map(
+    sm = jax.jit(compat.shard_map(
         step, mesh=mesh, in_specs=(model.specs(), bspecs),
         out_specs=(P(), P(), P())))
     with schemes.use("baseline"):

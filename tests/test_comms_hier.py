@@ -1,0 +1,43 @@
+"""Hierarchical two-level collective tests (8-device subprocess).
+
+The equivalence matrix lives in ``tests/multidev/hier_check.py`` (the
+``xla_force_host_platform_device_count`` flag locks on first jax init, so
+it runs in its own process like the other multidev checks):
+
+  * identity codecs: hier all-reduce / reduce-scatter / all-gather are
+    bit-exact vs the flat ``lax`` collectives over the joint axis pair;
+  * lossy level-aware schemes: results within codec error bounds;
+  * backward rules: ``jax.grad`` through each hier primitive, exact under
+    identity codecs;
+  * ledger: ``hier_zpp_8_16`` reports strictly fewer inter-node
+    (outer-stage) bytes than the flat ``zhybrid_16_8`` baseline.
+"""
+
+import functools
+
+import pytest
+
+from test_comms_multidev import run_script
+
+
+@functools.lru_cache(maxsize=1)
+def _hier_out() -> str:
+    return run_script("hier_check.py")
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_hierarchical_collectives():
+    out = _hier_out()
+    assert "identity hier == flat lax: bit-exact" in out
+    assert "identity hier grads == flat lax grads: bit-exact" in out
+    assert "hier comms validated" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_hier_outer_bytes_below_flat_baseline():
+    """Acceptance: the inter-node byte reduction is visible in the ledger."""
+    out = _hier_out()
+    assert "inter-node bytes: hier_zpp_8_16=" in out
+    assert "< flat zhybrid_16_8=" in out

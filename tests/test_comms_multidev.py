@@ -33,12 +33,14 @@ def run_script(name: str, timeout=900):
 
 
 @pytest.mark.slow
+@pytest.mark.multidev
 def test_compressed_collectives_all_schemes():
     out = run_script("comms_check.py")
     assert "comms validated" in out
 
 
 @pytest.mark.slow
+@pytest.mark.multidev
 def test_arch_parallel_consistency():
     """Every arch: same loss on (1,1) and (2,4) meshes; compressed close."""
     out = run_script("arch_parallel_check.py", timeout=1800)
@@ -46,12 +48,14 @@ def test_arch_parallel_consistency():
 
 
 @pytest.mark.slow
+@pytest.mark.multidev
 def test_train_loop_and_elastic_restart():
     out = run_script("train_loop_check.py", timeout=1800)
     assert "TRAIN LOOP + ELASTIC RESTART OK" in out
 
 
 @pytest.mark.slow
+@pytest.mark.multidev
 def test_serve_prefill_decode_equivalence():
     out = run_script("serve_check.py", timeout=1800)
     assert "SERVE DECODE OK" in out

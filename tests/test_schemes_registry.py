@@ -1,0 +1,170 @@
+"""Property-style registry tests: every scheme resolves every tag
+(including level-aware tags) to a valid codec, codec wire rates are
+monotone in bits, and the ledger byte-accounting matches the roofline
+formulas for flat and hierarchical collectives."""
+
+import numpy as np
+import pytest
+
+from repro.analysis import roofline as rl
+from repro.core import codecs, comms, schemes
+
+# the full tag cross-product: dimension x direction x level
+_DIMS = ("dp", "zero", "tp", "pp", "ep")
+_FLAT_TAGS = ["dp", "zero"] + [f"{d}_{io}" for d in ("tp", "pp", "ep")
+                               for io in ("fwd", "bwd")]
+_LEVEL_TAGS = [f"{t}_{lvl}" for t in _FLAT_TAGS for lvl in ("inner", "outer")]
+
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_every_scheme_resolves_every_tag(name):
+    s = schemes.get(name)
+    for tag in _FLAT_TAGS + _LEVEL_TAGS:
+        c = s.codec(tag)
+        assert isinstance(c, codecs.Codec), (name, tag)
+        assert c.wire_bits_per_value() > 0
+    with pytest.raises(KeyError):
+        s.codec("not_a_tag")
+
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_level_tags_default_to_flat_codec(name):
+    """Back-compat: without explicit per-level fields, hierarchical stages
+    ride the same codec the flat collective would."""
+    s = schemes.get(name)
+    for tag in _FLAT_TAGS:
+        flat = s.codec(tag).name
+        inner = s.codec(f"{tag}_inner").name
+        outer = s.codec(f"{tag}_outer").name
+        explicit_in = getattr(s, f"{tag}_inner", None)
+        explicit_out = getattr(s, f"{tag}_outer", None)
+        assert inner == (explicit_in or flat), (name, tag)
+        assert outer == (explicit_out or flat), (name, tag)
+
+
+def test_hier_schemes_are_level_aware():
+    s = schemes.get("hier_zpp_8_16")
+    # mild codec intra-node, aggressive codec inter-node, for dp and zero
+    assert s.codec("dp_inner").name == "bq16"
+    assert s.codec("dp_outer").name == "bq8"
+    assert s.codec("zero_inner").name == "bq16"
+    assert s.codec("zero_outer").name == "bq8"
+    # non-level traffic keeps the zhybrid_16_8 base behavior
+    base = schemes.get("zhybrid_16_8")
+    for tag in ("dp", "zero", "tp_fwd", "tp_bwd", "pp_fwd", "ep_bwd"):
+        assert s.codec(tag).name == base.codec(tag).name
+    # outer stage must be at least as aggressive as the inner stage
+    for name in ("hier_zpp_8_16", "hier_zpp_4_16", "hier_mzpp_8"):
+        h = schemes.get(name)
+        assert h.codec("dp_outer").wire_bits_per_value() \
+            <= h.codec("dp_inner").wire_bits_per_value(), name
+
+
+def test_codec_pair_level_tags():
+    with schemes.use("hier_zpp_8_16"):
+        f, b = comms._codec_pair("dp_inner")
+        assert f.name == b.name == "bq16"
+        f, b = comms._codec_pair("dp_outer")
+        assert f.name == b.name == "bq8"
+    with schemes.use("zhybrid_16_8"):   # no level overrides -> flat dp
+        f, b = comms._codec_pair("dp_inner")
+        assert f.name == b.name == "bq8"
+
+
+def test_wire_bits_monotone_in_bits():
+    """wire_bits_per_value must be strictly monotone in the codec rate."""
+    for family in (codecs.BqCodec, codecs.GqCodec, codecs.TqCodec):
+        rates = [family(bits=b).wire_bits_per_value() for b in (4, 8, 16, 24)]
+        assert all(a < b for a, b in zip(rates, rates[1:])), family
+    # and every lossy codec beats the uncompressed f32 wire
+    for name in ("bq4", "bq8", "bq16", "bq24", "gq8", "tq8"):
+        assert codecs.get(name).wire_bits_per_value() < 32.0
+
+
+# --------------------------------------------------------------------------
+# ledger byte-accounting vs the roofline formulas
+# --------------------------------------------------------------------------
+
+def _ev(op, n, elems, codec="none", level="flat", bwd_op=None, axis="data",
+        tag="dp", mult=1, remat=False, bidir=False):
+    return dict(op=op, tag=tag, axis=axis, n=n, elems=elems, dtype="float32",
+                codec_fwd=codec, codec_bwd=codec, bwd_op=bwd_op, mult=mult,
+                remat=remat, bidir=bidir, level=level)
+
+
+def _bpv(codec):
+    return codecs.get(codec).wire_bits_per_value() / 8.0
+
+
+def test_flat_event_bytes_match_formulas():
+    E, n = 4096, 8
+    for op, factor in (("all_gather", n - 1),
+                       ("reduce_scatter", (n - 1) / n),
+                       ("all_reduce", 2 * (n - 1) / n),
+                       ("ppermute", 1.0),
+                       ("all_to_all", (n - 1) / n)):
+        for codec in ("none", "bq8", "bq16"):
+            b = rl.event_bytes(_ev(op, n, E, codec), train=False)
+            want = E * _bpv(codec) * factor if codec != "none" else \
+                E * 4.0 * factor
+            assert abs(b["fwd"] - want) < 1e-6, (op, codec)
+            assert b["bwd"] == 0.0
+
+
+def _hier_ar_events(E, n_i, n_o, c_in, c_out):
+    """The exact event set comms.hier_all_reduce ledgers for payload E."""
+    chunk = -(-E // n_i)
+    return [
+        _ev("reduce_scatter", n_i, E, c_in, "inner", "all_gather"),
+        _ev("all_reduce", n_o, chunk, c_out, "outer", "all_reduce",
+            axis="node"),
+        _ev("all_gather", n_i, chunk, c_in, "inner", "reduce_scatter"),
+    ]
+
+
+def test_hier_event_bytes_match_staged_formulas():
+    E, n_i, n_o = 8192, 4, 2
+    c_in, c_out = "bq16", "bq8"
+    events = _hier_ar_events(E, n_i, n_o, c_in, c_out)
+    chunk = E // n_i
+    want_inner = (n_i - 1) / n_i * E * _bpv(c_in) \
+        + (n_i - 1) * chunk * _bpv(c_in)           # RS + AG stages
+    want_outer = 2 * (n_o - 1) / n_o * chunk * _bpv(c_out)
+    summary = rl.ledger_summary(events, train=False)
+    assert abs(summary["per_level"]["inner"] - want_inner) < 1e-6
+    assert abs(summary["per_level"]["outer"] - want_outer) < 1e-6
+    assert abs(summary["total_bytes"]
+               - (want_inner + want_outer)) < 1e-6
+    # training doubles every stage through its backward twin
+    train = rl.ledger_summary(events, train=True)
+    assert abs(train["total_bytes"] - 2 * summary["total_bytes"]) < 1e-6
+
+
+def test_link_bytes_split_and_seconds():
+    E, n_i, n_o = 8192, 4, 2
+    events = _hier_ar_events(E, n_i, n_o, "bq16", "bq8")
+    flat = [_ev("all_reduce", n_i * n_o, E, "bq8", bwd_op="all_reduce")]
+    lb_h = rl.link_bytes(events, train=True)
+    lb_f = rl.link_bytes(flat, train=True, slow_axes=("data",))
+    # all flat bytes price as slow when the axis spans nodes
+    assert lb_f["fast"] == 0.0 and lb_f["slow"] > 0
+    # the hier outer stage moves strictly fewer slow-link bytes
+    assert 0 < lb_h["slow"] < lb_f["slow"]
+    # seconds: fast pool at ICI_BW + slow pool at DCN_BW
+    want_s = lb_h["fast"] / rl.ICI_BW + lb_h["slow"] / rl.DCN_BW
+    assert abs(rl.collective_seconds(events, train=True) - want_s) < 1e-12
+
+
+def test_hier_outer_bytes_beat_flat_for_any_payload():
+    """Sweep: the outer-stage byte win holds across payload sizes and
+    node factorizations (the hier_zpp_8_16 vs zhybrid_16_8 comparison)."""
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        E = int(rng.integers(1024, 1 << 20))
+        n_i = int(rng.choice([2, 4, 8]))
+        n_o = int(rng.choice([2, 4]))
+        hier = _hier_ar_events(E, n_i, n_o, "bq16", "bq8")
+        flat = [_ev("all_reduce", n_i * n_o, E, "bq8", bwd_op="all_reduce")]
+        h_slow = rl.link_bytes(hier, train=True)["slow"]
+        f_slow = rl.link_bytes(flat, train=True, slow_axes=("data",))["slow"]
+        assert 0 < h_slow < f_slow, (E, n_i, n_o)
