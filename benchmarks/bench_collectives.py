@@ -10,7 +10,13 @@ Second sweep: flat vs hierarchical collectives.  The same all-reduce
 payload is traced through the flat ring (whole volume rides the slow
 inter-node links at the bottleneck) and the two-level decomposition
 (only the 1/n_local outer stage is inter-node), per level-aware scheme —
-reporting fast/slow link bytes and the roofline collective seconds."""
+reporting fast/slow link bytes and the roofline collective seconds.
+
+Third sweep (model layer): the same TP all-reduce and EP all-to-all
+payloads through the flat joint-axis collective vs the hierarchical
+decomposition on a tp-node-factored mesh, plus full train-step traces on
+flat vs node-factored meshes with the per-dimension x level byte
+breakdown (which dimension's traffic moved off the slow links)."""
 
 import jax
 import jax.numpy as jnp
@@ -80,14 +86,79 @@ def _hier_sweep(rows):
     return rows
 
 
+def _trace_model_payload(scheme, hier: bool, op: str, elems: int):
+    """One TP all-reduce / EP all-to-all over the (joint) model axis,
+    flat vs the two-level decomposition on a tp-node-factored mesh."""
+    from repro.core.compat import AxisPair
+    mesh = compat.make_mesh((2, 4), ("tpnode", "model"))
+    axis = AxisPair("tpnode", "model") if hier else ("tpnode", "model")
+    if op == "tp_allreduce":
+        fn = lambda a: comms.psum(a, axis, "tp")                   # noqa: E731
+        shape = (8, elems)
+    else:  # ep_all_to_all
+        fn = lambda a: comms.all_to_all(a, axis, 0, 0, "ep")       # noqa: E731
+        shape = (64, elems // 8)
+    sm = jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(P(("tpnode", "model")),),
+        out_specs=P(("tpnode", "model")), check_vma=False))
+    with schemes.use(scheme), comms.record_traffic() as events:
+        sm.lower(jax.ShapeDtypeStruct(shape, jnp.float32))
+    jax.clear_caches()
+    return events
+
+
+def _hier_tp_sweep(rows):
+    """Model-layer flat vs two-level on the same TP/EP payloads."""
+    elems = 1 << 18                                  # 1 MiB f32 / device
+    flat_axes = ((("tpnode", "model"),))
+    for op in ("tp_allreduce", "ep_all_to_all"):
+        base_slow = None
+        for scheme, hier in (("baseline", False), ("zhybrid_16_8", False),
+                             ("hier_tpp_8_16", True),
+                             ("hier_tpp_4_16", True), ("hier_mtpp_8", True)):
+            events = _trace_model_payload(scheme, hier, op, elems)
+            slow_ax = flat_axes if not hier else ()
+            lb = rl.link_bytes(events, train=True, slow_axes=slow_ax)
+            secs = rl.collective_seconds(events, train=True,
+                                         slow_axes=slow_ax)
+            if base_slow is None:
+                base_slow = lb["slow"]
+            kind = "hier" if hier else "flat"
+            rows.append((f"{op}_1MiB_{kind}_{scheme}",
+                         secs * 1e6,                 # roofline us
+                         f"slow={lb['slow']/1e6:.2f}MB"
+                         f" fast={lb['fast']/1e6:.2f}MB"
+                         f" slow_vs_flat_baseline="
+                         f"{lb['slow']/max(base_slow,1):.3f}"))
+    return rows
+
+
+def _dim_level_str(led) -> str:
+    """per-dimension x level byte breakdown for the printed summary."""
+    return ",".join(f"{k}:{v/1e6:.2f}MB"
+                    for k, v in sorted(led["per_dim_level"].items()))
+
+
 def _hier_step_sweep(rows):
-    """Full train step: flat (4,2) mesh vs node-factored (2,2,2) mesh."""
+    """Full train step: flat (4,2) mesh vs node-factored meshes.
+
+    Three points: flat baseline, dp-node-factored (PR 1's optimizer-only
+    hierarchy), and dp+tp-node-factored (model-layer TP/EP/PP collectives
+    also two-level).  The note column carries the per-dimension x level
+    breakdown — not just the DP payload."""
     arch = "gemma3-1b"
     flat_mesh = compat.make_mesh((4, 2), ("data", "model"))
-    hier_mesh = compat.make_mesh((2, 2, 2), ("node", "data", "model"))
+    dp_mesh = compat.make_mesh((2, 2, 2), ("node", "data", "model"))
+    # tp=8 over two 4-device nodes: the flat model axis spans nodes (its
+    # whole ring prices slow); factoring it into (tpnode=2, model=4) keeps
+    # only the outer stage inter-node
+    tpflat_mesh = compat.make_mesh((1, 8), ("data", "model"))
+    tp_mesh = compat.make_mesh((1, 2, 4), ("data", "tpnode", "model"))
     for name, mesh, scheme, slow_axes in (
             ("flat", flat_mesh, "zhybrid_16_8", ("data",)),
-            ("hier", hier_mesh, "hier_zpp_8_16", ("node",))):
+            ("dpnode", dp_mesh, "hier_zpp_8_16", ("node",)),
+            ("tpflat", tpflat_mesh, "zhybrid_16_8", ("model",)),
+            ("tpnode", tp_mesh, "hier_tpp_8_16", ())):
         mi = MeshInfo.from_mesh(mesh)
         cfg = configs.get(arch).reduced()
         model = Model(cfg, mi)
@@ -100,11 +171,9 @@ def _hier_step_sweep(rows):
             trainer.step.lower(pstructs, ostructs, binputs)
         lb = rl.link_bytes(events, train=True, slow_axes=slow_axes)
         led = rl.ledger_summary(events, train=True)
-        per_level = ",".join(f"{k}:{v/1e6:.2f}MB"
-                             for k, v in sorted(led["per_level"].items()))
         rows.append((f"train_step_{arch}_{name}_{scheme}",
                      led["total_bytes"] / 1e6,
-                     f"slow={lb['slow']/1e6:.2f}MB {per_level}"))
+                     f"slow={lb['slow']/1e6:.2f}MB {_dim_level_str(led)}"))
         jax.clear_caches()
     return rows
 
@@ -127,5 +196,6 @@ def run():
                          f"vs_baseline={tot/max(base,1):.3f} {per_tag}"))
             jax.clear_caches()
     _hier_sweep(rows)
+    _hier_tp_sweep(rows)
     _hier_step_sweep(rows)
     return rows

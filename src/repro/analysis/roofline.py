@@ -75,25 +75,39 @@ def event_bytes(ev: dict, train: bool) -> dict:
     return {"fwd": fwd * ev["mult"], "bwd": bwd * ev["mult"]}
 
 
+def tag_dim(tag: str) -> str:
+    """Communication tag -> parallelism dimension (tp_fwd_inner -> tp)."""
+    return tag.split("@")[0].split("_")[0]
+
+
 def ledger_summary(events, train: bool) -> dict:
     """Aggregate bytes per tag / axis / link level + grand total (per device).
 
     ``per_level`` splits by the hierarchy stage a collective rode: "flat"
     (single-stage op over an unfactored axis), "inner" (intra-node stage of
-    a hierarchical op, fast links), "outer" (inter-node stage, slow links)."""
-    per_tag, per_axis, per_level = {}, {}, {}
+    a hierarchical op, fast links), "outer" (inter-node stage, slow links).
+    ``per_dim`` folds directed tags into their dimension (tp_fwd + tp_bwd
+    -> tp); ``per_dim_level`` crosses that with the stage level
+    ("<dim>/<level>") — the table the flat-vs-hier benchmark sweeps print,
+    showing which dimension's traffic moved off the slow links."""
+    per_tag, per_axis, per_level, per_dim, per_dim_level = {}, {}, {}, {}, {}
     total = 0.0
     for ev in events:
         b = event_bytes(ev, train)
         tot = b["fwd"] + b["bwd"]
         tag = ev["tag"].split("@")[0]
+        dim = tag_dim(tag)
         lvl = ev.get("level", "flat")
         per_tag[tag] = per_tag.get(tag, 0.0) + tot
         per_axis[ev["axis"]] = per_axis.get(ev["axis"], 0.0) + tot
         per_level[lvl] = per_level.get(lvl, 0.0) + tot
+        per_dim[dim] = per_dim.get(dim, 0.0) + tot
+        key = f"{dim}/{lvl}"
+        per_dim_level[key] = per_dim_level.get(key, 0.0) + tot
         total += tot
     return {"total_bytes": total, "per_tag": per_tag, "per_axis": per_axis,
-            "per_level": per_level}
+            "per_level": per_level, "per_dim": per_dim,
+            "per_dim_level": per_dim_level}
 
 
 def link_bytes(events, train: bool, slow_axes=()) -> dict:

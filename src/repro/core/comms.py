@@ -23,8 +23,19 @@ gradients crossing MP collectives in the backward pass get the MP codec).
 Compression itself is straight-through for gradients — it is a wire-level,
 semantically-identity transform.
 
+Hierarchy: every public entry point accepts ``axis`` as a plain name, a
+plain tuple of names (stock single-stage collective over the joint axis),
+or a :class:`repro.core.compat.AxisPair` ``(outer, inner)``.  An
+``AxisPair`` routes the call through the two-level hierarchical
+decomposition (``hier_*`` below): the inner stage rides fast intra-node
+links under the ``<tag>_inner`` codec, the outer stage rides slow
+inter-node links under ``<tag>_outer`` (ZeRO++-style, arXiv:2306.10209).
+Model code never hard-codes this — it passes ``MeshInfo.tp_axes`` (or
+``launch.mesh.comm_axes``), which resolves a logical axis to the flat name
+or the factored pair depending on the mesh.
+
 All functions must be called inside ``shard_map`` over a mesh that defines
-the named axis.
+the named axis (or both sub-axes of an ``AxisPair``).
 """
 
 from __future__ import annotations
@@ -176,8 +187,19 @@ def _codec_pair(tag: str):
     return scheme.codec(f"{tag}_fwd"), scheme.codec(f"{tag}_bwd")
 
 
-def axis_size(axis: str) -> int:
+AxisPair = compat.AxisPair
+
+
+def _is_pair(axis) -> bool:
+    return isinstance(axis, compat.AxisPair)
+
+
+def axis_size(axis) -> int:
     return compat.axis_size(axis)
+
+
+def axis_index(axis):
+    return compat.axis_index(axis)
 
 
 _vma = threading.local()
@@ -210,14 +232,18 @@ def _vma_checked() -> bool:
     return getattr(_vma, "checked", True)
 
 
-def _ensure_varying(x, axis: str):
-    """pvary iff not already varying over ``axis`` (pvary is not idempotent)."""
+def _ensure_varying(x, axis):
+    """pvary iff not already varying over ``axis`` (pvary is not idempotent).
+
+    ``axis`` may be a name or a tuple of names (joint / factored axes)."""
     if not _vma_checked():
         return x
+    axes = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
     vma = getattr(compat.typeof(x), "vma", frozenset())
-    if axis in vma:
+    need = tuple(ax for ax in axes if ax not in vma)
+    if not need:
         return x
-    return compat.pvary(x, (axis,))
+    return compat.pvary(x, need)
 
 
 # --------------------------------------------------------------------------
@@ -508,51 +534,109 @@ _f_vjp.defvjp(_f_fwd, _f_bwd)
 
 
 # --------------------------------------------------------------------------
-# public, tag-resolving entry points
+# public, tag-resolving entry points.
+#
+# ``axis`` may be a name, a plain tuple (flat collective over the joint
+# axis), or an AxisPair (outer, inner) — which routes through the two-level
+# hierarchical decomposition with per-level codecs (hier_* below).
 # --------------------------------------------------------------------------
 
-def psum(x, axis: str, tag: str):
-    """All-reduce-sum over ``axis`` under the active scheme's codec for ``tag``."""
+def psum(x, axis, tag: str):
+    """All-reduce-sum over ``axis`` under the active scheme's codec for ``tag``.
+
+    AxisPair axes route to :func:`hier_all_reduce`."""
+    if _is_pair(axis):
+        return hier_all_reduce(x, axis.inner, axis.outer, tag)
     c_fwd, c_bwd = _codec_pair(tag)
     _account("all_reduce", tag, x, axis, c_fwd, c_bwd, bwd_op="all_reduce")
     return _psum_vjp(x, axis, c_fwd, c_bwd)
 
 
-def all_gather(x, axis: str, axis_dim: int, tag: str):
+def all_gather(x, axis, axis_dim: int, tag: str):
+    """All-gather dim ``axis_dim`` over ``axis`` (bwd: reduce-scatter under
+    the ``tag`` bwd codec).  AxisPair axes route to :func:`hier_all_gather`."""
+    if _is_pair(axis):
+        return hier_all_gather(x, axis.inner, axis.outer, axis_dim, tag)
     c_fwd, c_bwd = _codec_pair(tag)
     _account("all_gather", tag, x, axis, c_fwd, c_bwd,
              bwd_op="reduce_scatter")
     return _ag_vjp(x, axis, axis_dim, c_fwd, c_bwd)
 
 
-def reduce_scatter(x, axis: str, axis_dim: int, tag: str):
+def reduce_scatter(x, axis, axis_dim: int, tag: str):
+    """Sum-reduce-scatter dim ``axis_dim`` over ``axis`` (bwd: all-gather).
+    AxisPair axes route to :func:`hier_reduce_scatter`."""
+    if _is_pair(axis):
+        return hier_reduce_scatter(x, axis.inner, axis.outer, axis_dim, tag)
     c_fwd, c_bwd = _codec_pair(tag)
     _account("reduce_scatter", tag, x, axis, c_fwd, c_bwd,
              bwd_op="all_gather")
     return _rs_vjp(x, axis, axis_dim, c_fwd, c_bwd)
 
 
-def ppermute(x, axis: str, perm, tag: str):
+def ppermute(x, axis, perm, tag: str):
+    """Point-to-point permutation over ``axis`` (bwd: inverse perm under the
+    ``tag`` bwd codec).  With an AxisPair axis, ``perm`` indexes the joint
+    (outer-major) rank space and routes to :func:`hier_ppermute`, which
+    sends intra-node edges under the ``<tag>_inner`` codec and node-crossing
+    edges under ``<tag>_outer``."""
+    if _is_pair(axis):
+        return hier_ppermute(x, axis.inner, axis.outer, perm, tag)
     c_fwd, c_bwd = _codec_pair(tag)
-    _account("ppermute", tag, x, axis, c_fwd, c_bwd, bwd_op="ppermute")
-    return _pp_vjp(x, axis, tuple(perm), c_fwd, c_bwd)
+    perm = tuple(perm)
+    # pro-rate partial permutations: only len(perm)/n ranks send, so the
+    # average per-device bytes scale by the edge fraction (matches the
+    # per-edge-class accounting of hier_ppermute; full rings unchanged)
+    n = int(axis_size(axis))
+    _account("ppermute", tag, x, axis, c_fwd, c_bwd, bwd_op="ppermute",
+             elems=x.size * len(perm) // n)
+    return _pp_vjp(x, axis, perm, c_fwd, c_bwd)
 
 
-def all_to_all(x, axis: str, split_axis: int, concat_axis: int, tag: str):
+def all_to_all(x, axis, split_axis: int, concat_axis: int, tag: str):
+    """All-to-all over ``axis`` (bwd: all-to-all with split/concat swapped).
+    AxisPair axes route to :func:`hier_all_to_all`."""
+    if _is_pair(axis):
+        return hier_all_to_all(x, axis.inner, axis.outer, split_axis,
+                               concat_axis, tag)
     c_fwd, c_bwd = _codec_pair(tag)
     _account("all_to_all", tag, x, axis, c_fwd, c_bwd, bwd_op="all_to_all")
     return _a2a_vjp(x, axis, split_axis, concat_axis, c_fwd, c_bwd)
 
 
-def copy_fwd_psum_bwd(x, axis: str, tag: str):
-    """Megatron 'g': identity forward, (compressed) all-reduce backward."""
+def copy_fwd_psum_bwd(x, axis, tag: str):
+    """Megatron 'g': identity forward, (compressed) all-reduce backward.
+
+    AxisPair axes make the backward a two-level :func:`hier_all_reduce`
+    under the ``<tag>_bwd_inner`` / ``<tag>_bwd_outer`` codecs."""
+    if _is_pair(axis):
+        (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+        n_i = int(axis_size(axis.inner))
+        _account_hier(
+            [("none", axis.inner, "inner", x.size, "all_reduce"),
+             ("none", axis.outer, "outer", -(-x.size // n_i), "all_reduce")],
+            tag, x, [(ci_f, ci_b), (co_f, co_b)])
+        return _hier_g_vjp(x, axis.inner, axis.outer, (ci_b, co_b))
     _, c_bwd = _codec_pair(tag)
     _account("none", tag, x, axis, c_bwd, c_bwd, bwd_op="all_reduce")
     return _g_vjp(x, axis, c_bwd)
 
 
-def psum_fwd_copy_bwd(x, axis: str, tag: str):
-    """Megatron 'f': (compressed) all-reduce forward, identity backward."""
+def psum_fwd_copy_bwd(x, axis, tag: str):
+    """Megatron 'f': (compressed) all-reduce forward, identity backward.
+
+    AxisPair axes make the forward a two-level :func:`hier_all_reduce`
+    under the ``<tag>_fwd_inner`` / ``<tag>_fwd_outer`` codecs."""
+    if _is_pair(axis):
+        (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+        n_i = int(axis_size(axis.inner))
+        chunk = -(-x.size // n_i)
+        _account_hier(
+            [("reduce_scatter", axis.inner, "inner", x.size, None),
+             ("all_reduce", axis.outer, "outer", chunk, None),
+             ("all_gather", axis.inner, "inner", chunk, None)],
+            tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)])
+        return _hier_f_vjp(x, axis.inner, axis.outer, (ci_f, co_f))
     c_fwd, _ = _codec_pair(tag)
     _account("all_reduce", tag, x, axis, c_fwd, c_fwd, bwd_op=None)
     return _f_vjp(x, axis, c_fwd)
@@ -715,10 +799,19 @@ def _account_hier(stages, tag, x, c_pairs):
 
 
 def hier_all_reduce(x, inner_axis: str, outer_axis: str, tag: str):
-    """Two-level all-reduce-sum over the factored (outer, inner) axes.
+    """Two-level all-reduce-sum over the factored ``(outer, inner)`` axes.
 
-    Equivalent to ``psum`` over the joint axis; the inter-node stage moves
-    only ``1/n_inner`` of the payload under the (aggressive) outer codec."""
+    Stage decomposition: ``RS(inner)`` of the flattened payload under the
+    ``<tag>_inner`` codec (for directed tags: ``<tag>_fwd_inner``), then
+    ``AR(outer)`` of the resulting ``1/n_inner`` chunk under
+    ``<tag>_outer``, then ``AG(inner)`` of the fully-reduced chunks.  With
+    identity codecs, bit-exact against ``lax.psum`` over the joint axis
+    pair; the inter-node stage moves only ``1/n_inner`` of the payload
+    under the (aggressive) outer codec — the slow-link saving.
+
+    Backward: the same decomposition applied to the cotangent under the
+    ``_bwd`` codecs (psum is self-transpose up to replication typing).
+    Ledger: "inner" RS + "outer" AR + "inner" AG events."""
     (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
     n_i = int(axis_size(inner_axis))
     chunk = -(-x.size // n_i)
@@ -737,7 +830,14 @@ hier_psum = hier_all_reduce
 
 def hier_reduce_scatter(x, inner_axis: str, outer_axis: str, axis_dim: int,
                         tag: str):
-    """Two-level reduce-scatter of dim ``axis_dim`` (outer-major chunks)."""
+    """Two-level reduce-scatter of dim ``axis_dim`` (outer-major chunks).
+
+    Stages: ``RS(inner)`` under ``<tag>_inner`` (full payload, fast
+    links), then ``RS(outer)`` of the surviving ``1/n_inner`` chunk under
+    ``<tag>_outer`` (slow links).  Chunk assignment is linearized
+    outer-major, so with identity codecs the result is bit-exact against
+    ``lax.psum_scatter`` over the joint axis pair.  Backward:
+    :func:`hier_all_gather` under the ``_bwd`` codecs."""
     (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
     n_i = int(axis_size(inner_axis))
     _account_hier(
@@ -750,7 +850,14 @@ def hier_reduce_scatter(x, inner_axis: str, outer_axis: str, axis_dim: int,
 
 def hier_all_gather(x, inner_axis: str, outer_axis: str, axis_dim: int,
                     tag: str):
-    """Two-level all-gather of dim ``axis_dim`` (transpose of hier RS)."""
+    """Two-level all-gather of dim ``axis_dim`` (transpose of hier RS).
+
+    Stages: ``AG(outer)`` of the full local shard on slow links under
+    ``<tag>_outer``, then ``AG(inner)`` of the node-gathered block on fast
+    links under ``<tag>_inner``.  With identity codecs, bit-exact against
+    ``lax.all_gather`` over the joint ``(outer, inner)`` axis pair
+    (outer-major shard order).  Backward: :func:`hier_reduce_scatter`
+    under the ``_bwd`` codecs.  Ledger: one "outer" + one "inner" event."""
     (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
     n_o = int(axis_size(outer_axis))
     _account_hier(
@@ -759,6 +866,208 @@ def hier_all_gather(x, inner_axis: str, outer_axis: str, axis_dim: int,
         tag, x, [(co_f, co_b), (ci_f, ci_b)])
     return _hier_ag_vjp(x, inner_axis, outer_axis, axis_dim,
                         (ci_f, ci_b), (co_f, co_b))
+
+
+# --------------------------------------------------------------------------
+# hierarchical all-to-all (EP token routing) and point-to-point permutation
+# (PP handoffs / ring hops) over a factored axis pair
+# --------------------------------------------------------------------------
+
+def _hier_all_to_all_impl(x, inner, outer, split_axis, concat_axis,
+                          c_in, c_out):
+    """Two-stage decomposition of the joint tiled all-to-all.
+
+    Chunks along ``split_axis`` are indexed outer-major ``(co, ci)``;
+    stage 1 exchanges the ``ci`` sub-index over ``inner`` (intra-node),
+    stage 2 the ``co`` sub-index over ``outer`` (inter-node).  The result
+    holds chunks in joint source-rank order — identical to the stock
+    ``lax.all_to_all`` over the ``(outer, inner)`` axis tuple."""
+    n_i = axis_size(inner)
+    n_o = axis_size(outer)
+    n = n_i * n_o
+    if n == 1:
+        return x
+    if n_o == 1:
+        return _all_to_all_impl(x, inner, split_axis, concat_axis, c_in)
+    if n_i == 1:
+        return _all_to_all_impl(x, outer, split_axis, concat_axis, c_out)
+    s = x.shape[split_axis]
+    assert s % n == 0, f"dim {split_axis} of size {s} not divisible by {n}"
+    pre, post = x.shape[:split_axis], x.shape[split_axis + 1:]
+    sa = split_axis
+    xr = x.reshape(pre + (n_o, n_i, s // n) + post)
+    y = _all_to_all_impl(xr, inner, sa + 1, sa + 1, c_in)   # swap ci intra-node
+    z = _all_to_all_impl(y, outer, sa, sa, c_out)           # swap co inter-node
+    z = z.reshape(pre + (n, s // n) + post)                 # joint source order
+    if concat_axis == split_axis:
+        return z.reshape(pre + (s,) + post)
+    chunk_shape = pre + (s // n,) + post
+    parts = jnp.moveaxis(z, sa, 0)                          # [n, *chunk_shape]
+    out = jnp.moveaxis(parts, 0, concat_axis)
+    shape = list(chunk_shape)
+    shape[concat_axis] *= n
+    return out.reshape(shape)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _hier_a2a_vjp(x, inner, outer, split_axis, concat_axis, cs_in, cs_out):
+    return _hier_all_to_all_impl(x, inner, outer, split_axis, concat_axis,
+                                 cs_in[0], cs_out[0])
+
+
+def _hier_a2a_fwd(x, inner, outer, split_axis, concat_axis, cs_in, cs_out):
+    return _hier_all_to_all_impl(x, inner, outer, split_axis, concat_axis,
+                                 cs_in[0], cs_out[0]), None
+
+
+def _hier_a2a_bwd(inner, outer, split_axis, concat_axis, cs_in, cs_out, _, g):
+    return (_hier_all_to_all_impl(g, inner, outer, concat_axis, split_axis,
+                                  cs_in[1], cs_out[1]),)
+
+
+_hier_a2a_vjp.defvjp(_hier_a2a_fwd, _hier_a2a_bwd)
+
+
+def hier_all_to_all(x, inner_axis: str, outer_axis: str, split_axis: int,
+                    concat_axis: int, tag: str):
+    """Two-stage all-to-all over the factored ``(outer, inner)`` axis pair.
+
+    Stage decomposition (2D all-to-all, DeepSpeed-TED style): the chunk
+    index splits outer-major into ``(co, ci)``; stage 1 exchanges ``ci``
+    over the intra-node ``inner`` axis under the ``<tag>_fwd_inner`` codec,
+    stage 2 exchanges ``co`` over the inter-node ``outer`` axis under
+    ``<tag>_fwd_outer``.  With identity codecs, bit-exact against the stock
+    tiled ``lax.all_to_all`` over the joint axis pair.  The inter-node
+    byte volume equals the flat op's node-crossing fraction, so the
+    slow-link savings come from the aggressive ``_outer`` codec.
+
+    Backward: the transpose all-to-all (split/concat swapped) under the
+    ``<tag>_bwd_inner`` / ``<tag>_bwd_outer`` codecs.
+    Ledger: one "inner" event over ``inner_axis`` and one "outer" event
+    over ``outer_axis``, each of the full local payload (per-device bytes
+    scale by the usual (n-1)/n all-to-all factor per stage)."""
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    _account_hier(
+        [("all_to_all", inner_axis, "inner", x.size, "all_to_all"),
+         ("all_to_all", outer_axis, "outer", x.size, "all_to_all")],
+        tag, x, [(ci_f, ci_b), (co_f, co_b)])
+    return _hier_a2a_vjp(x, inner_axis, outer_axis, split_axis, concat_axis,
+                         (ci_f, ci_b), (co_f, co_b))
+
+
+def _hier_ppermute_impl(x, inner, outer, perm, c_in, c_out):
+    """Edge-classified joint permutation.
+
+    ``perm`` indexes the joint (outer-major) rank space.  Edges that stay
+    inside a node ride the ``c_in`` codec; node-crossing edges the
+    ``c_out`` codec.  Each rank receives along at most one edge (perm is a
+    partial permutation), so the two classes merge with a per-rank
+    select."""
+    n_i = int(axis_size(inner))
+    n_o = int(axis_size(outer))
+    n = n_i * n_o
+    if n == 1:
+        return x
+    if n_o == 1:
+        return _ppermute_impl(x, inner, perm, c_in)
+    if n_i == 1:
+        return _ppermute_impl(x, outer, perm, c_out)
+    joint = (outer, inner)
+    intra = tuple((s, d) for s, d in perm if s // n_i == d // n_i)
+    inter = tuple((s, d) for s, d in perm if s // n_i != d // n_i)
+    if not inter:
+        return _ppermute_impl(x, joint, intra, c_in)
+    if not intra:
+        return _ppermute_impl(x, joint, inter, c_out)
+    y_in = _ppermute_impl(x, joint, intra, c_in)
+    y_out = _ppermute_impl(x, joint, inter, c_out)
+    recv_intra = [False] * n
+    for _, d in intra:
+        recv_intra[d] = True
+    mask = jnp.asarray(recv_intra)[compat.axis_index(joint)]
+    return jnp.where(mask, y_in, y_out)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5))
+def _hier_pp_vjp(x, inner, outer, perm, cs_in, cs_out):
+    return _hier_ppermute_impl(x, inner, outer, perm, cs_in[0], cs_out[0])
+
+
+def _hier_pp_fwd(x, inner, outer, perm, cs_in, cs_out):
+    return _hier_ppermute_impl(x, inner, outer, perm, cs_in[0], cs_out[0]), \
+        None
+
+
+def _hier_pp_bwd(inner, outer, perm, cs_in, cs_out, _, g):
+    out = _hier_ppermute_impl(g, inner, outer, _invert_perm(perm),
+                              cs_in[1], cs_out[1])
+    return (_ensure_varying(out, (inner, outer)),)
+
+
+_hier_pp_vjp.defvjp(_hier_pp_fwd, _hier_pp_bwd)
+
+
+def hier_ppermute(x, inner_axis: str, outer_axis: str, perm, tag: str):
+    """Edge-classified point-to-point permutation over the factored
+    ``(outer, inner)`` axis pair.
+
+    ``perm`` is ``[(src, dst), ...]`` in the *joint* (outer-major) rank
+    space — exactly the perm a flat ``ppermute`` over the joint axis tuple
+    would take.  Stage decomposition: edges whose endpoints share a node
+    ride fast intra-node links under the ``<tag>_fwd_inner`` codec;
+    node-crossing edges ride slow links under ``<tag>_fwd_outer``.  With
+    identity codecs, bit-exact against ``lax.ppermute`` over the joint
+    axis tuple.  Backward: the inverse permutation under the
+    ``<tag>_bwd_*`` codecs (node-crossing-ness is preserved by inversion).
+    Ledger: an "inner" event scaled by the intra-node edge fraction and an
+    "outer" event scaled by the node-crossing fraction."""
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    n_i = int(axis_size(inner_axis))
+    n = n_i * int(axis_size(outer_axis))
+    perm = tuple((int(s), int(d)) for s, d in perm)
+    k_in = sum(1 for s, d in perm if s // n_i == d // n_i)
+    k_out = len(perm) - k_in
+    _account_hier(
+        [("ppermute", inner_axis, "inner", x.size * k_in // n, "ppermute"),
+         ("ppermute", outer_axis, "outer", x.size * k_out // n, "ppermute")],
+        tag, x, [(ci_f, ci_b), (co_f, co_b)])
+    return _hier_pp_vjp(x, inner_axis, outer_axis, perm,
+                        (ci_f, ci_b), (co_f, co_b))
+
+
+# ---- hierarchical Megatron conjugate pair (decode-path f/g) --------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _hier_g_vjp(x, inner, outer, c_bwds):
+    return x
+
+
+def _hier_g_fwd(x, inner, outer, c_bwds):
+    return x, None
+
+
+def _hier_g_bwd(inner, outer, c_bwds, _, g):
+    out = _hier_psum_impl(g, inner, outer, c_bwds[0], c_bwds[1])
+    return (_ensure_varying(out, (inner, outer)),)
+
+
+_hier_g_vjp.defvjp(_hier_g_fwd, _hier_g_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3))
+def _hier_f_vjp(x, inner, outer, c_fwds):
+    return _hier_psum_impl(x, inner, outer, c_fwds[0], c_fwds[1])
+
+
+def _hier_f_fwd(x, inner, outer, c_fwds):
+    return _hier_psum_impl(x, inner, outer, c_fwds[0], c_fwds[1]), None
+
+
+def _hier_f_bwd(inner, outer, c_fwds, _, g):
+    return (_ensure_varying(g, (inner, outer)),)
+
+
+_hier_f_vjp.defvjp(_hier_f_fwd, _hier_f_bwd)
 
 
 def match_vma(x, like):
@@ -794,8 +1103,12 @@ def varying_all(x, axes):
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(1,))
-def pmax(x, axis: str):
+def pmax(x, axis):
     """Max-reduce (never compressed: tiny softmax-stat payloads).
+
+    ``axis`` may be a name or an AxisPair/tuple — max has no useful
+    two-level codec treatment, so a factored axis reduces as the joint
+    flat axis.
 
     Carries a zero VJP — its only use is as a numerics stabilizer (shift-
     invariant logsumexp), where the gradient contribution is exactly zero."""

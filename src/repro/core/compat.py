@@ -22,10 +22,31 @@ Semantics of the fallbacks:
 
 from __future__ import annotations
 
+import typing
+
 import jax
 from jax import lax
 
 HAS_VMA = hasattr(lax, "pvary")
+
+
+class AxisPair(typing.NamedTuple):
+    """A node-factored mesh axis: ``(outer, inner)`` sub-axis names.
+
+    ``outer`` enumerates nodes (slow inter-node links), ``inner`` the ranks
+    inside one node (fast intra-node links); the joint axis is linearized
+    outer-major, matching mesh construction order.  Because ``AxisPair`` IS
+    a tuple, it can be passed anywhere a flat tuple of axis names is
+    accepted (``PartitionSpec`` entries, ``lax.psum``/``lax.pmax`` etc.) and
+    behaves as the joint axis.  The collectives in :mod:`repro.core.comms`
+    additionally *dispatch* on it: an ``AxisPair`` axis routes through the
+    hierarchical two-level decomposition with per-level codecs, while a
+    plain tuple keeps the stock single-stage collective over the joint
+    axis.  Resolution from logical axis names lives in
+    ``launch.mesh.comm_axes`` and ``models.params.MeshInfo.tp_axes``."""
+
+    outer: str
+    inner: str
 
 
 def make_mesh(shape, axes, *, devices=None):
@@ -64,6 +85,24 @@ def pvary(x, axes):
 
 
 def axis_size(axis) -> int:
+    """Size of a named axis; tuples (incl. AxisPair) give the joint size."""
+    if isinstance(axis, (tuple, list)):
+        n = 1
+        for ax in axis:
+            n *= axis_size(ax)
+        return n
     if hasattr(lax, "axis_size"):
         return lax.axis_size(axis)
     return lax.psum(1, axis)
+
+
+def axis_index(axis):
+    """Rank along a named axis; tuples give the linearized joint index
+    (outer-major, matching AxisPair and mesh construction order)."""
+    if isinstance(axis, (tuple, list)):
+        idx = None
+        for ax in axis:
+            i = lax.axis_index(ax)
+            idx = i if idx is None else idx * axis_size(ax) + i
+        return idx
+    return lax.axis_index(axis)

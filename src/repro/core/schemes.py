@@ -15,6 +15,19 @@ collective carries) to a codec:
 Each tag has a fwd and bwd codec — the paper's §III-A rule that gradients
 flowing through MP collectives in the backward pass must also be covered by
 the MP codec (and never double-compressed more aggressively than DP).
+
+The full tag grammar (``docs/ARCHITECTURE.md``) is
+
+    <dimension>[_<direction>][_<level>]
+
+with dimension in {dp, zero, tp, pp, ep}, direction in {fwd, bwd} (dp and
+zero are direction-free — the optimizer's sync has no autodiff twin), and
+level in {inner, outer} naming the stage of a hierarchical collective.
+Unset level fields resolve through ``Scheme.codec``'s fallback chain:
+``tp_fwd_inner`` -> ``tp_fwd`` -> KeyError for an unknown dimension.
+
+``python -m repro.core.schemes`` regenerates ``docs/SCHEMES.md`` from the
+registry below (``--check`` verifies it is current, used by CI).
 """
 
 from __future__ import annotations
@@ -25,10 +38,26 @@ import threading
 
 from repro.core import codecs
 
+# parallelism dimensions, in ledger/table order
+DIMS = ("dp", "zero", "tp", "pp", "ep")
+# dimensions whose tags carry an explicit fwd/bwd direction
+DIRECTED_DIMS = ("tp", "pp", "ep")
+
+
+def flat_tags() -> list[str]:
+    """Every flat (level-free) tag the comms layer can emit."""
+    return ["dp", "zero"] + [f"{d}_{io}" for d in DIRECTED_DIMS
+                             for io in ("fwd", "bwd")]
+
+
+def level_tags() -> list[str]:
+    """Every level-aware tag: flat tags x {inner, outer}."""
+    return [f"{t}_{lvl}" for t in flat_tags() for lvl in ("inner", "outer")]
+
 
 @dataclasses.dataclass(frozen=True)
 class Scheme:
-    """Tag -> codec map, now over THREE axes of the scheme space:
+    """Tag -> codec map over THREE axes of the scheme space:
 
       dimension (dp/zero/tp/pp/ep) x direction (fwd/bwd) x level.
 
@@ -37,7 +66,12 @@ class Scheme:
     fast NVLink/ICI links, the inter-node stage (``<tag>_outer``) rides
     slow IB/DCN links (ZeRO++, arXiv:2306.10209).  Level fields default to
     ``None`` = inherit the flat codec for the tag, so every pre-existing
-    scheme keeps its exact behavior under the hierarchical collectives."""
+    scheme keeps its exact behavior under the hierarchical collectives.
+    PR 1 added per-level fields for the optimizer's dp/zero sync; the
+    model-layer dimensions (tp/pp/ep, with direction) now carry them too,
+    so TP all-reduce/all-gather, EP all-to-all, and PP point-to-point hops
+    over a node-factored mesh axis get the same inner-mild/outer-aggressive
+    treatment."""
 
     name: str
     dp: str = "none"
@@ -53,19 +87,33 @@ class Scheme:
     dp_outer: str | None = None
     zero_inner: str | None = None
     zero_outer: str | None = None
+    tp_fwd_inner: str | None = None
+    tp_fwd_outer: str | None = None
+    tp_bwd_inner: str | None = None
+    tp_bwd_outer: str | None = None
+    pp_fwd_inner: str | None = None
+    pp_fwd_outer: str | None = None
+    pp_bwd_inner: str | None = None
+    pp_bwd_outer: str | None = None
+    ep_fwd_inner: str | None = None
+    ep_fwd_outer: str | None = None
+    ep_bwd_inner: str | None = None
+    ep_bwd_outer: str | None = None
 
     def codec(self, tag: str) -> codecs.Codec:
         val = getattr(self, tag, None)
         if val is not None:
             return codecs.get(val)
         if tag.endswith(("_inner", "_outer")):
-            # level-aware tag with no explicit override (or no declared
-            # field at all, e.g. tp_fwd_inner): fall back to the flat codec
+            # level-aware tag with no explicit override: fall back to the
+            # flat codec (tp_fwd_inner -> tp_fwd; dp_outer -> dp)
             return self.codec(tag.rsplit("_", 1)[0])
         raise KeyError(f"unknown comm tag {tag!r}")
 
     @classmethod
     def uniform(cls, name: str, codec_name: str) -> "Scheme":
+        """One codec on every flat tag; level fields stay ``None``
+        (hierarchical stages inherit the flat codec)."""
         fields = {f.name: codec_name for f in dataclasses.fields(cls)
                   if f.name != "name" and f.default is not None}
         return cls(name=name, **fields)
@@ -79,14 +127,24 @@ class Scheme:
                    ep_fwd=mp, ep_bwd=mp)
 
     @classmethod
-    def hier(cls, name: str, base: "Scheme", inner: str, outer: str) -> "Scheme":
+    def hier(cls, name: str, base: "Scheme", inner: str, outer: str,
+             dims: tuple = ("dp", "zero")) -> "Scheme":
         """Level-aware scheme: ``base``'s flat codecs, plus a mild ``inner``
         codec for intra-node stages and an aggressive ``outer`` codec for
-        inter-node stages of the dp/zero hierarchical collectives."""
-        return dataclasses.replace(
-            base, name=name,
-            dp_inner=inner, dp_outer=outer,
-            zero_inner=inner, zero_outer=outer)
+        inter-node stages of the hierarchical collectives of every
+        dimension in ``dims``.  Directed dimensions (tp/pp/ep) get both
+        their fwd and bwd level fields set; dimensions NOT in ``dims``
+        keep their level fields at ``None`` (flat-codec fallback)."""
+        fields = {}
+        for d in dims:
+            if d in DIRECTED_DIMS:
+                for io in ("fwd", "bwd"):
+                    fields[f"{d}_{io}_inner"] = inner
+                    fields[f"{d}_{io}_outer"] = outer
+            else:
+                fields[f"{d}_inner"] = inner
+                fields[f"{d}_outer"] = outer
+        return dataclasses.replace(base, name=name, **fields)
 
 
 BASELINE = Scheme(name="baseline")                                  # stock collectives
@@ -113,13 +171,25 @@ MZHYBRID_T8 = Scheme.hybrid("mzhybrid_t8", dp="tq8", mp="mpc")
 # intended compression ratios (EXPERIMENTS.md §Perf)
 ZHYBRID_8_4 = Scheme.hybrid("zhybrid_8_4", dp="bq4", mp="bq8")
 # level-aware (hierarchical) schemes: <name>_<outer>_<inner> — mild codec
-# intra-node, aggressive codec on the inter-node stage (ZeRO++ qgZ-style)
+# intra-node, aggressive codec on the inter-node stage (ZeRO++ qgZ-style).
+# hier_zpp_*: optimizer sync (dp/zero) only, as in PR 1.
 HIER_ZPP_8_16 = Scheme.hier("hier_zpp_8_16", ZHYBRID_16_8,
                             inner="bq16", outer="bq8")
 HIER_ZPP_4_16 = Scheme.hier("hier_zpp_4_16", ZHYBRID_16_8,
                             inner="bq16", outer="bq4")
 HIER_MZPP_8 = Scheme.hier("hier_mzpp_8", MZHYBRID8,
                           inner="mpc", outer="bq8")
+# hier_tpp_*: EVERY dimension level-aware — the model-layer TP/EP/PP
+# collectives over a node-factored mesh axis also stage inner-mild /
+# outer-aggressive (Demystifying Communication Characteristics,
+# arXiv:2408.10197: TP AR/AG and EP all-to-all dominate wire volume once a
+# mesh axis spans nodes).
+HIER_TPP_8_16 = Scheme.hier("hier_tpp_8_16", ZHYBRID_16_8,
+                            inner="bq16", outer="bq8", dims=DIMS)
+HIER_TPP_4_16 = Scheme.hier("hier_tpp_4_16", ZHYBRID_16_8,
+                            inner="bq16", outer="bq4", dims=DIMS)
+HIER_MTPP_8 = Scheme.hier("hier_mtpp_8", MZHYBRID8,
+                          inner="mpc", outer="bq8", dims=DIMS)
 
 _REGISTRY = {s.name: s for s in (
     BASELINE, NAIVE_ZFP8, NAIVE_ZFP16, NAIVE_MPC,
@@ -127,6 +197,7 @@ _REGISTRY = {s.name: s for s in (
     NAIVE_ZFP4, ZHYBRID_16_4, NAIVE_GQ8, MZHYBRID_G8,
     NAIVE_TQ8, MZHYBRID_T8, ZHYBRID_8_4,
     HIER_ZPP_8_16, HIER_ZPP_4_16, HIER_MZPP_8,
+    HIER_TPP_8_16, HIER_TPP_4_16, HIER_MTPP_8,
 )}
 
 
@@ -141,6 +212,84 @@ def get(name) -> Scheme:
 
 def names() -> list[str]:
     return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# generated scheme table (docs/SCHEMES.md) — regenerate with
+#   python -m repro.core.schemes
+# so the documented table can never drift from the registry.
+# --------------------------------------------------------------------------
+
+def scheme_table_md() -> str:
+    """Markdown doc with one row per registered scheme and one column per
+    flat tag, each cell ``flat(inner/outer)`` when level overrides exist."""
+    tags = flat_tags()
+    lines = [
+        "# Registered compression schemes",
+        "",
+        "<!-- GENERATED FILE — do not edit by hand. "
+        "Regenerate with: python -m repro.core.schemes -->",
+        "",
+        "One row per scheme in `repro.core.schemes`; one column per flat",
+        "communication tag (see [ARCHITECTURE.md](ARCHITECTURE.md) for the",
+        "tag grammar).  A cell shows the flat codec, and, when the scheme",
+        "carries per-level overrides for that tag, the hierarchical stage",
+        "codecs as `flat (inner/outer)`.  Unset level fields fall back to",
+        "the flat codec, so a plain cell also describes the hierarchical",
+        "behavior.",
+        "",
+        "| scheme | " + " | ".join(tags) + " |",
+        "|---" * (len(tags) + 1) + "|",
+    ]
+    for name in names():
+        s = get(name)
+        cells = []
+        for tag in tags:
+            flat = s.codec(tag).name
+            inner = getattr(s, f"{tag}_inner", None)
+            outer = getattr(s, f"{tag}_outer", None)
+            if inner or outer:
+                cells.append(f"{flat} ({inner or flat}/{outer or flat})")
+            else:
+                cells.append(flat)
+        lines.append(f"| `{name}` | " + " | ".join(cells) + " |")
+    lines += [
+        "",
+        "Level-aware tags resolve through the fallback chain",
+        "`<dim>[_<dir>]_<level>` → `<dim>[_<dir>]` → `KeyError`, so every",
+        "scheme answers every tag in the grammar.",
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def _main(argv=None) -> int:
+    import argparse
+    import pathlib
+    import sys
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.core.schemes",
+        description="(Re)generate docs/SCHEMES.md from the scheme registry.")
+    ap.add_argument("--out", default=None,
+                    help="output path (default: <repo>/docs/SCHEMES.md)")
+    ap.add_argument("--check", action="store_true",
+                    help="exit 1 if the file on disk is stale vs the registry")
+    args = ap.parse_args(argv)
+    out = pathlib.Path(args.out) if args.out else \
+        pathlib.Path(__file__).resolve().parents[3] / "docs" / "SCHEMES.md"
+    text = scheme_table_md()
+    if args.check:
+        if not out.exists() or out.read_text() != text:
+            print(f"{out} is stale — regenerate with "
+                  "`python -m repro.core.schemes`", file=sys.stderr)
+            return 1
+        print(f"{out} is current ({len(names())} schemes)")
+        return 0
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(text)
+    print(f"wrote {out} ({len(names())} schemes)")
+    return 0
 
 
 # --------------------------------------------------------------------------
@@ -166,3 +315,7 @@ def use(scheme) -> "Scheme":
             del _ctx.scheme
         else:
             _ctx.scheme = prev
+
+
+if __name__ == "__main__":  # pragma: no cover - exercised via subprocess in CI
+    raise SystemExit(_main())

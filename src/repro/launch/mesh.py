@@ -8,19 +8,29 @@ Mapping (DESIGN.md §4): ``model`` = TP/EP/SP, ``data`` = DP + ZeRO shards,
 ``pod`` (multi-pod) = outer DP — cross-pod traffic is exactly the DP
 gradient reduction the paper compresses hardest, riding the slowest links.
 
-Hierarchical meshes additionally factor the data axis into ``(node,
-data)`` sub-axes from a ``--nodes`` spec: ``node`` enumerates machines
-(slow inter-node links), ``data`` the local DP ranks inside one machine
-(fast NVLink/ICI).  The two-level collectives in :mod:`repro.core.comms`
-(``hier_all_reduce`` et al.) take exactly this (outer, inner) axis pair.
+Hierarchical meshes factor a logical axis into ``(node, local)``
+sub-axes so the two-level collectives in :mod:`repro.core.comms` can
+stage intra-node (fast links) and inter-node (slow links) separately:
+
+* ``--nodes`` factors the **data** axis into ``(node, data)`` — the
+  optimizer's DP/ZeRO sync (PR 1, ZeRO++ hpZ-style);
+* ``--tp-nodes`` factors the **model** axis into ``(tpnode, model)`` —
+  the model-layer TP/EP/PP collectives (this PR).
+
+Model code never names sub-axes directly: it goes through
+:func:`comm_axes` (or ``MeshInfo.tp_axes``), which resolves a logical
+axis name to either the flat axis or the :class:`~repro.core.compat.
+AxisPair` the hierarchical collectives dispatch on.
 """
 
 from __future__ import annotations
 
 from repro.core import compat
 
-NODE_AXIS = "node"     # outer (inter-node, slow-link) DP sub-axis
-LOCAL_AXIS = "data"    # inner (intra-node, fast-link) DP sub-axis
+NODE_AXIS = "node"       # outer (inter-node, slow-link) DP sub-axis
+LOCAL_AXIS = "data"      # inner (intra-node, fast-link) DP sub-axis
+TP_NODE_AXIS = "tpnode"  # outer (inter-node, slow-link) model sub-axis
+MODEL_AXIS = "model"     # inner model sub-axis / flat model axis
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -32,43 +42,85 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes, devices=jax.devices()[:need])
 
 
-def make_mesh(dp: int, tp: int, pod: int = 1, nodes: int = 1):
+def make_mesh(dp: int, tp: int, pod: int = 1, nodes: int = 1,
+              tp_nodes: int = 1):
     """Arbitrary mesh for tests / elastic restarts / smoke runs.
 
     ``nodes > 1`` factors the dp ways into ``(nodes, dp // nodes)`` as the
-    ``(node, data)`` sub-axis pair for hierarchical collectives.  ``pod``
+    ``(node, data)`` sub-axis pair; ``tp_nodes > 1`` factors the tp ways
+    into ``(tp_nodes, tp // tp_nodes)`` as ``(tpnode, model)``.  ``pod``
     and ``nodes`` are mutually exclusive outer-DP notions."""
-    if nodes > 1:
-        assert pod == 1, "pod and nodes are mutually exclusive"
-        return make_hier_mesh(dp, tp, nodes)
+    if nodes > 1 or tp_nodes > 1:
+        assert pod == 1 or nodes == 1, "pod and nodes are mutually exclusive"
+        return make_hier_mesh(dp, tp, nodes, tp_nodes=tp_nodes, pod=pod)
     if pod > 1:
         return compat.make_mesh((pod, dp, tp), ("pod", "data", "model"))
     return compat.make_mesh((dp, tp), ("data", "model"))
 
 
-def make_hier_mesh(dp: int, tp: int, nodes: int):
-    """(node, data, model) mesh with the dp ways factored over ``nodes``.
+def make_hier_mesh(dp: int, tp: int, nodes: int = 1, tp_nodes: int = 1,
+                   pod: int = 1):
+    """Node-factored mesh: any of the data / model axes split in two.
 
-    The total data-parallel degree stays ``dp``; the joint ``("node",
-    "data")`` axis pair is what a flat ``"data"`` axis of size dp would
-    be, linearized node-major — so flat and hierarchical collectives over
-    the pair are interchangeable rank-for-rank."""
+    The total parallel degree of each logical axis is unchanged; a joint
+    ``(node, data)`` (resp. ``(tpnode, model)``) axis pair is what the
+    flat axis of size dp (resp. tp) would be, linearized node-major — so
+    flat and hierarchical collectives over the pair are interchangeable
+    rank-for-rank."""
     assert dp % nodes == 0, f"dp={dp} not divisible by nodes={nodes}"
-    return compat.make_mesh((nodes, dp // nodes, tp),
-                            (NODE_AXIS, LOCAL_AXIS, "model"))
+    assert tp % tp_nodes == 0, f"tp={tp} not divisible by tp_nodes={tp_nodes}"
+    shape, axes = [], []
+    if pod > 1:
+        shape.append(pod)
+        axes.append("pod")
+    if nodes > 1:
+        shape += [nodes, dp // nodes]
+        axes += [NODE_AXIS, LOCAL_AXIS]
+    else:
+        shape.append(dp)
+        axes.append(LOCAL_AXIS)
+    if tp_nodes > 1:
+        shape += [tp_nodes, tp // tp_nodes]
+        axes += [TP_NODE_AXIS, MODEL_AXIS]
+    else:
+        shape.append(tp)
+        axes.append(MODEL_AXIS)
+    return compat.make_mesh(tuple(shape), tuple(axes))
 
 
-def parse_nodes_spec(spec: str | int, dp: int) -> int:
-    """--nodes spec -> node count: an int, or "NxD" (nodes x dp-per-node)."""
+def comm_axes(mesh, logical: str):
+    """Axis resolution helper: logical parallelism axis -> comms axis.
+
+    Maps ``"data"`` / ``"model"`` to the flat axis name on an unfactored
+    mesh, or to the ``AxisPair(outer, inner)`` the hierarchical
+    collectives dispatch on when the mesh factors that axis over nodes.
+    Call this (or ``MeshInfo.tp_axes``, which this delegates to — one
+    source of truth for the resolution) instead of hard-coding sub-axis
+    names."""
+    from repro.models.params import MeshInfo
+    mi = MeshInfo.from_mesh(mesh)
+    if logical == "model":
+        return mi.tp_axes
+    if logical == "data":
+        if mi.node_axis and mi.node > 1:
+            return compat.AxisPair(mi.node_axis, mi.data_axis)
+        return mi.data_axis
+    assert logical in tuple(mesh.axis_names), (logical, mesh.axis_names)
+    return logical
+
+
+def parse_nodes_spec(spec: str | int, ways: int, flag: str = "--nodes") -> int:
+    """--nodes / --tp-nodes spec -> node count: an int, or "NxD"
+    (nodes x ranks-per-node); ``ways`` is the parallel degree factored."""
     if isinstance(spec, int):
         nodes = spec
     elif "x" in str(spec):
         n, d = str(spec).lower().split("x")
         nodes = int(n)
-        assert nodes * int(d) == dp, \
-            f"--nodes {spec} inconsistent with dp={dp}"
+        assert nodes * int(d) == ways, \
+            f"{flag} {spec} inconsistent with degree {ways}"
     else:
         nodes = int(spec)
-    assert nodes >= 1 and dp % nodes == 0, \
-        f"--nodes {nodes} must divide dp={dp}"
+    assert nodes >= 1 and ways % nodes == 0, \
+        f"{flag} {nodes} must divide {ways}"
     return nodes

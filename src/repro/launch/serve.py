@@ -22,6 +22,9 @@ def main():
     ap.add_argument("--gen", type=int, default=8)
     ap.add_argument("--max-len", type=int, default=0)
     ap.add_argument("--scheme", default="baseline")
+    ap.add_argument("--tp-nodes", default="1",
+                    help="factor tp into (tpnode, model) sub-axes; the "
+                         "serve-path TP/EP collectives run two-level")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -37,7 +40,7 @@ def main():
     from jax.sharding import NamedSharding, PartitionSpec as P
 
     from repro import configs
-    from repro.launch.mesh import make_mesh
+    from repro.launch.mesh import make_mesh, parse_nodes_spec
     from repro.models.model import Model
     from repro.models.params import MeshInfo
     from repro.serve import kv_cache
@@ -47,7 +50,8 @@ def main():
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
-    mesh = make_mesh(args.dp, args.tp)
+    tp_nodes = parse_nodes_spec(args.tp_nodes, args.tp, flag="--tp-nodes")
+    mesh = make_mesh(args.dp, args.tp, tp_nodes=tp_nodes)
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
     params = model.init(jax.random.key(args.seed))

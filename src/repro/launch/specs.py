@@ -59,14 +59,14 @@ def input_specs(cfg: ArchConfig, shape_name: str, mi: MeshInfo):
                  "labels": P(mi.batch_axes, None)}
         if cfg.encoder_layers:
             inputs["frames"] = _sds((B, S, cfg.d_model), act)
-            specs["frames"] = P(mi.batch_axes, mi.model_axis, None)
+            specs["frames"] = P(mi.batch_axes, mi.tp_axes, None)
         if cfg.mrope:
             inputs["vision"] = _sds((B, S, cfg.d_model), act)
             inputs["vis_mask"] = _sds((B, S), jnp.bool_)
             inputs["pos3"] = _sds((B, S, 3))
-            specs["vision"] = P(mi.batch_axes, mi.model_axis, None)
-            specs["vis_mask"] = P(mi.batch_axes, mi.model_axis)
-            specs["pos3"] = P(mi.batch_axes, mi.model_axis, None)
+            specs["vision"] = P(mi.batch_axes, mi.tp_axes, None)
+            specs["vis_mask"] = P(mi.batch_axes, mi.tp_axes)
+            specs["pos3"] = P(mi.batch_axes, mi.tp_axes, None)
         return dict(kind=kind, inputs=inputs, specs=specs,
                     meta=dict(seq=S, batch=B))
 

@@ -26,6 +26,10 @@ def main():
                     help="factor dp into (node, local) sub-axes for "
                          "hierarchical two-level collectives; an int or "
                          "'NxD' (N nodes x D dp-ranks-per-node)")
+    ap.add_argument("--tp-nodes", default="1",
+                    help="factor tp into (tpnode, model) sub-axes so the "
+                         "model-layer TP/EP/PP collectives run their "
+                         "two-level decompositions; an int or 'NxD'")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N XLA host devices (set before jax init)")
     ap.add_argument("--steps", type=int, default=20)
@@ -63,7 +67,9 @@ def main():
     if args.reduced:
         cfg = cfg.reduced()
     nodes = parse_nodes_spec(args.nodes, args.dp)
-    mesh = make_mesh(args.dp, args.tp, args.pod, nodes=nodes)
+    tp_nodes = parse_nodes_spec(args.tp_nodes, args.tp, flag="--tp-nodes")
+    mesh = make_mesh(args.dp, args.tp, args.pod, nodes=nodes,
+                     tp_nodes=tp_nodes)
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
     trainer = Trainer(model, mesh, scheme=args.scheme,

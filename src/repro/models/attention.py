@@ -166,12 +166,15 @@ def ring_attention(q, k, v, q_pos, k_pos, mi: MeshInfo, causal, window,
         bias = _mask_bias(q_pos, pb, causal, window, vlb)
         acc = _combine(acc, _attn_part(q, kb, vb, bias, scale))
         if t < tp - 1:
-            kb = comms.ppermute(kb, mi.model_axis, perm, "pp")
-            vb = comms.ppermute(vb, mi.model_axis, perm, "pp")
+            # ring hops over the (possibly node-factored) joint model axis:
+            # an AxisPair routes intra-node hops under pp_*_inner and the
+            # node-crossing hop under pp_*_outer
+            kb = comms.ppermute(kb, mi.tp_axes, perm, "pp")
+            vb = comms.ppermute(vb, mi.tp_axes, perm, "pp")
             # positions/validity are tiny int/bool payloads: rotate uncompressed
-            pb = lax.ppermute(pb, mi.model_axis, perm)
+            pb = lax.ppermute(pb, mi.tp_axes, perm)
             if vlb is not None:
-                vlb = lax.ppermute(vlb, mi.model_axis, perm)
+                vlb = lax.ppermute(vlb, mi.tp_axes, perm)
     return _finish(*acc, q.dtype)
 
 
@@ -227,10 +230,10 @@ def attn_train(p, x, pos, cfg, mi: MeshInfo, mode: str, causal=True, window=0,
     xkv = cross if cross is not None else x
     pos_kv = cross_pos if cross is not None else pos
     if mode == "head":
-        xg = comms.all_gather(x, mi.model_axis, 1, "tp")
+        xg = comms.all_gather(x, mi.tp_axes, 1, "tp")
         pos_q_g = _gather_pos(pos, mi)
         if cross is not None:
-            kvg = comms.all_gather(cross, mi.model_axis, 1, "tp")
+            kvg = comms.all_gather(cross, mi.tp_axes, 1, "tp")
             pos_kv_g = _gather_pos(cross_pos, mi)
         else:
             kvg, pos_kv_g = xg, pos_q_g
@@ -239,7 +242,7 @@ def attn_train(p, x, pos, cfg, mi: MeshInfo, mode: str, causal=True, window=0,
         o = full_attention(q, k, v, pos_q_g, pos_kv_g, causal, window)
         y = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
                        use(p["wo"], mi))
-        out = comms.reduce_scatter(y, mi.model_axis, 1, "tp")
+        out = comms.reduce_scatter(y, mi.tp_axes, 1, "tp")
         cache = (k, v, pos_kv_g)      # full seq, local heads
     else:  # ring
         q, k, v = _project_qkv(p, x, xkv, pos, pos_kv, cfg, mi, theta, pos3)
@@ -253,7 +256,7 @@ def attn_train(p, x, pos, cfg, mi: MeshInfo, mode: str, causal=True, window=0,
 
 
 def _gather_pos(pos, mi):
-    return comms.all_gather(pos, mi.model_axis, 1, "tp") \
+    return comms.all_gather(pos, mi.tp_axes, 1, "tp") \
         if mi.tp > 1 else pos
 
 
@@ -284,7 +287,7 @@ def attn_decode(p, x, cache, index, cfg, mi: MeshInfo, mode: str, window=0,
         o = full_attention(q, k, v, pos_q, k_pos,
                            causal=False, window=window, k_valid=valid)
         y = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, -1), use(p["wo"], mi))
-        out = comms.psum(y, mi.model_axis, "tp")
+        out = comms.psum(y, mi.tp_axes, "tp")
         return out, {**cache, "k": k, "v": v}
 
     # ring mode: cache seq-sharded over seq_axes; all heads local
@@ -314,8 +317,11 @@ def attn_decode(p, x, cache, index, cfg, mi: MeshInfo, mode: str, window=0,
 
 
 def _shard_index(mi, seq_axes):
-    """Linear shard index over the (possibly multi-axis) seq sharding."""
+    """Linear shard index over the (possibly multi-axis) seq sharding.
+
+    Entries may themselves be AxisPairs (node-factored model axis);
+    compat.axis_index linearizes those outer-major."""
     idx = jnp.int32(0)
     for ax in seq_axes:
-        idx = idx * compat.axis_size(ax) + lax.axis_index(ax)
+        idx = idx * compat.axis_size(ax) + compat.axis_index(ax)
     return idx

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import comms
+from repro.core import comms, compat
 from repro.models.params import Pv, fsdp_dim, MeshInfo
 
 _F32 = jnp.float32
@@ -127,15 +127,15 @@ def embed(p, tokens, cfg, mi, sp: bool = True):
     """
     table = use(p["table"], mi)                    # [V_loc, D]
     v_loc = table.shape[0]
-    lo = lax.axis_index(mi.model_axis) * v_loc
+    lo = compat.axis_index(mi.tp_axes) * v_loc
     local = tokens - lo
     ok = (local >= 0) & (local < v_loc)
     e = jnp.take(table, jnp.clip(local, 0, v_loc - 1), axis=0)
     e = e * ok[..., None].astype(e.dtype)
     if sp and mi.tp > 1:
-        e = comms.reduce_scatter(e, mi.model_axis, 1, "tp")
+        e = comms.reduce_scatter(e, mi.tp_axes, 1, "tp")
     else:
-        e = comms.psum(e, mi.model_axis, "tp")
+        e = comms.psum(e, mi.tp_axes, "tp")
     if cfg.scale_embed:
         e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
     return e
@@ -148,7 +148,7 @@ def lm_head_logits(params, x, cfg, mi, sp: bool = True):
     scores the full sequence against its vocab slice (required for the
     vocab-parallel cross-entropy psums to be token-consistent)."""
     if sp and mi.tp > 1:
-        x = comms.all_gather(x, mi.model_axis, 1, "tp")
+        x = comms.all_gather(x, mi.tp_axes, 1, "tp")
     if cfg.tie_embeddings:
         w = use(params["embed"]["table"], mi)      # [V_loc, D]
         return jnp.einsum("bsd,vd->bsv", x.astype(_F32), w.astype(_F32))
@@ -171,7 +171,7 @@ def vocab_parallel_xent(logits, labels, cfg, mi):
     Returns per-token loss [B, S] and weight mask [B, S].
     """
     v_loc = logits.shape[-1]
-    lo = lax.axis_index(mi.model_axis) * v_loc
+    lo = compat.axis_index(mi.tp_axes) * v_loc
     # guard padded vocab tail: tokens >= vocab_size never occur as labels,
     # but padded logit columns exist — mask them out of the lse.
     col = lo + jnp.arange(v_loc)
@@ -181,16 +181,16 @@ def vocab_parallel_xent(logits, labels, cfg, mi):
     # stabilizer is gradient-free (lse is shift-invariant); comms.pmax
     # carries a zero VJP
     m = comms.pmax(jnp.max(lax.stop_gradient(logits), axis=-1),
-                   mi.model_axis)                                  # [B,S]
+                   mi.tp_axes)                                     # [B,S]
     z = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
-    z = comms.psum(z, mi.model_axis, "tp")
+    z = comms.psum(z, mi.tp_axes, "tp")
     lse = m + jnp.log(z)
 
     local = labels - lo
     ok = (local >= 0) & (local < v_loc)
     tl = jnp.take_along_axis(
         logits, jnp.clip(local, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
-    tl = comms.psum(jnp.where(ok, tl, 0.0), mi.model_axis, "tp")
+    tl = comms.psum(jnp.where(ok, tl, 0.0), mi.tp_axes, "tp")
     w = (labels >= 0).astype(_F32)
     return (lse - tl) * w, w
 
@@ -230,9 +230,9 @@ def mlp(p, x, cfg, mi, sp: bool = True):
     sp=False (decode):        f/g conjugate psum pair, x replicated over model.
     """
     if sp:
-        xg = comms.all_gather(x, mi.model_axis, 1, "tp")
+        xg = comms.all_gather(x, mi.tp_axes, 1, "tp")
     else:
-        xg = comms.copy_fwd_psum_bwd(x, mi.model_axis, "tp")
+        xg = comms.copy_fwd_psum_bwd(x, mi.tp_axes, "tp")
     w1 = use(p["w1"], mi)
     h = jnp.einsum("bsd,df->bsf", xg, w1)
     h = _act(h, cfg.mlp_kind)
@@ -240,5 +240,5 @@ def mlp(p, x, cfg, mi, sp: bool = True):
         h = h * jnp.einsum("bsd,df->bsf", xg, use(p["w3"], mi))
     y = jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), use(p["w2"], mi))
     if sp:
-        return comms.reduce_scatter(y, mi.model_axis, 1, "tp")
-    return comms.psum_fwd_copy_bwd(y, mi.model_axis, "tp")
+        return comms.reduce_scatter(y, mi.tp_axes, 1, "tp")
+    return comms.psum_fwd_copy_bwd(y, mi.tp_axes, "tp")

@@ -10,6 +10,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import compat
 from repro.models import layers, transformer
 from repro.models.config import ArchConfig
 from repro.models.params import (MeshInfo, init_params, param_specs,
@@ -31,14 +32,14 @@ class Model:
         return init_params(self.plan, key)
 
     def specs(self):
-        return param_specs(self.plan)
+        return param_specs(self.plan, self.mi)
 
     def structs(self):
         return param_structs(self.plan)
 
     # -- helpers ---------------------------------------------------------
     def _positions(self, B, S_loc):
-        base = lax.axis_index(self.mi.model_axis) * S_loc
+        base = compat.axis_index(self.mi.tp_axes) * S_loc
         pos = base + jnp.arange(S_loc, dtype=jnp.int32)
         return jnp.broadcast_to(pos[None], (B, S_loc))
 
@@ -107,14 +108,14 @@ class Model:
         num, den = comms.varying_all((jnp.sum(ltok), jnp.sum(w)), mi.all_axes)
         num = lax.psum(num, mi.batch_axes)
         den = lax.psum(den, mi.batch_axes)
-        # ltok is replicated over the model axis (full-seq logits on every
+        # ltok is replicated over the model axes (full-seq logits on every
         # model shard); pmean folds the replication into an invariant scalar.
-        num = lax.pmean(num, mi.model_axis)
-        den = lax.pmean(den, mi.model_axis)
+        num = lax.pmean(num, mi.mp_axes)
+        den = lax.pmean(den, mi.mp_axes)
         loss = num / jnp.maximum(den, 1.0)
         if cfg.n_experts:
             loss = loss + _LB_COEF * lax.pmean(
-                aux["lb_loss"], (mi.model_axis,) + mi.batch_axes)
+                aux["lb_loss"], mi.mp_axes + mi.batch_axes)
         metrics = {"xent": num / jnp.maximum(den, 1.0),
                    "tokens": den}
         return loss, metrics

@@ -109,9 +109,12 @@ def _moe_ffn(p, x, cfg, mi: MeshInfo, f_sliced: bool, sp: bool = False):
     w = keep.reshape(T * k, 1).astype(x.dtype)
     buf = buf.at[slot.reshape(T * k)].add(src * w)
 
-    # all-to-all: [E, C, D] -> experts receive their tokens from every shard
+    # all-to-all: [E, C, D] -> experts receive their tokens from every shard.
+    # On a tp-node-factored mesh this is the two-stage hierarchical
+    # all-to-all (intra-node exchange under ep_*_inner, inter-node under
+    # ep_*_outer); chunk order matches the joint outer-major rank order.
     buf = buf.reshape(ep, E_loc * C, Dm)
-    recv = comms.all_to_all(buf, mi.model_axis, 0, 0, "ep")         # [ep, E_loc*C, D]
+    recv = comms.all_to_all(buf, mi.tp_axes, 0, 0, "ep")            # [ep, E_loc*C, D]
     recv = recv.reshape(ep, E_loc, C, Dm)
     recv = jnp.moveaxis(recv, 1, 0).reshape(E_loc, ep * C, Dm)
 
@@ -128,7 +131,7 @@ def _moe_ffn(p, x, cfg, mi: MeshInfo, f_sliced: bool, sp: bool = False):
     # return route: inverse rearrangement + all-to-all back
     out = out.reshape(E_loc, ep, C, Dm)
     out = jnp.moveaxis(out, 0, 1).reshape(ep, E_loc * C, Dm)
-    back = comms.all_to_all(out, mi.model_axis, 0, 0, "ep")
+    back = comms.all_to_all(out, mi.tp_axes, 0, 0, "ep")
     back = back.reshape(E * C, Dm)
 
     # combine: gather each (token, choice) result, weight by gate

@@ -21,19 +21,30 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.core import compat
+
 
 @dataclasses.dataclass(frozen=True)
 class MeshInfo:
-    """Logical view of the device mesh the model code shards over."""
+    """Logical view of the device mesh the model code shards over.
+
+    ``tp`` is always the TOTAL tensor/expert-parallel degree.  On a
+    tp-node-factored mesh (``--tp-nodes``) the physical model axis splits
+    into ``(tp_node_axis, model_axis)`` sub-axes of sizes ``(tp_node,
+    tp // tp_node)``; model code addresses the joint axis through
+    :attr:`tp_axes`, which the collectives in :mod:`repro.core.comms`
+    dispatch on (AxisPair -> hierarchical two-level ops)."""
 
     tp: int = 1
     dp: int = 1
     pod: int = 1
     node: int = 1
+    tp_node: int = 1
     model_axis: str = "model"
     data_axis: str = "data"
     pod_axis: str | None = None
     node_axis: str | None = None
+    tp_node_axis: str | None = None
 
     @property
     def batch_axes(self):
@@ -51,16 +62,35 @@ class MeshInfo:
             * (self.node if self.node_axis else 1)
 
     @property
+    def tp_axes(self):
+        """The axis model code passes to comms collectives for TP/EP/PP
+        traffic: the flat model axis name, or the ``AxisPair(outer,
+        inner)`` of a tp-node-factored mesh (which routes hierarchical)."""
+        if self.tp_node_axis and self.tp_node > 1:
+            return compat.AxisPair(self.tp_node_axis, self.model_axis)
+        return self.model_axis
+
+    @property
+    def mp_axes(self) -> tuple:
+        """All physical mesh axes implementing model parallelism."""
+        if self.tp_node_axis and self.tp_node > 1:
+            return (self.tp_node_axis, self.model_axis)
+        return (self.model_axis,)
+
+    @property
     def all_axes(self):
-        return self.batch_axes + (self.model_axis,)
+        return self.batch_axes + self.mp_axes
 
     @classmethod
     def from_mesh(cls, mesh) -> "MeshInfo":
         ax = dict(zip(mesh.axis_names, mesh.devices.shape))
-        return cls(tp=ax.get("model", 1), dp=ax.get("data", 1),
+        return cls(tp=ax.get("model", 1) * ax.get("tpnode", 1),
+                   dp=ax.get("data", 1),
                    pod=ax.get("pod", 1), node=ax.get("node", 1),
+                   tp_node=ax.get("tpnode", 1),
                    pod_axis="pod" if "pod" in ax else None,
-                   node_axis="node" if "node" in ax else None)
+                   node_axis="node" if "node" in ax else None,
+                   tp_node_axis="tpnode" if "tpnode" in ax else None)
 
 
 @dataclasses.dataclass
@@ -167,9 +197,25 @@ def init_params(plan, key):
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
-def param_specs(plan):
-    """Same tree shape as init_params (Pv leaves flatten to the inner spec)."""
-    return tree_map_defs(lambda d: Pv(d.pspec, d.spec), plan)
+def physical_spec(spec: tuple, mi: "MeshInfo | None") -> P:
+    """Logical per-dim spec -> PartitionSpec on ``mi``'s physical mesh.
+
+    A ``"model"`` entry shards over the joint model axes (the
+    ``(tpnode, model)`` pair on a tp-node-factored mesh); ``"data"``
+    stays the inner data axis (ZeRO-3 shards intra-node by design — the
+    optimizer handles the node level explicitly)."""
+    if mi is None or not (mi.tp_node_axis and mi.tp_node > 1):
+        return P(*spec)
+    return P(*[tuple(mi.mp_axes) if e == "model" else e for e in spec])
+
+
+def param_specs(plan, mi: "MeshInfo | None" = None):
+    """Same tree shape as init_params (Pv leaves flatten to the inner spec).
+
+    Pass ``mi`` to translate logical "model" entries to the physical
+    (possibly factored) mesh axes."""
+    return tree_map_defs(lambda d: Pv(physical_spec(d.spec, mi), d.spec),
+                         plan)
 
 
 def param_structs(plan):

@@ -99,7 +99,7 @@ def cross_shard_prefix(decay, state, mi: MeshInfo, axis: str):
     tp = compat.axis_size(axis)
     if tp == 1:
         return jnp.zeros_like(state)
-    i = lax.axis_index(axis)
+    i = compat.axis_index(axis)
     d, s = decay.astype(_F32), state.astype(_F32)
     step = 1
     while step < tp:
@@ -164,7 +164,7 @@ def mamba_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     H = di // cfg.ssm_head_dim
     P = cfg.ssm_head_dim
     N = cfg.ssm_state
-    ax = mi.model_axis
+    ax = mi.tp_axes
 
     xi_raw = jnp.einsum("bsd,de->bse", x, use(p["w_x"], mi))
     z = jnp.einsum("bsd,de->bse", x, use(p["w_z"], mi))
@@ -175,7 +175,8 @@ def mamba_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     if sp and mi.tp > 1:
         perm = [(j, j + 1) for j in range(mi.tp - 1)]
         halo = comms.ppermute(tail, ax, perm, "pp")
-        halo = jnp.where(lax.axis_index(ax) > 0, halo, jnp.zeros_like(halo))
+        halo = jnp.where(compat.axis_index(ax) > 0, halo,
+                         jnp.zeros_like(halo))
     else:
         halo = jnp.zeros_like(tail)
     xi = jax.nn.silu(_causal_conv(xi_raw, use(p["conv_w"], mi),
@@ -212,7 +213,7 @@ def mamba_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     incl = S_fin if s_in is None else s_in * _bexp(d_tot) + S_fin
     state, conv_tail = _broadcast_final(incl, tail, mi, sp)
     tp = mi.tp
-    i = lax.axis_index(ax)
+    i = compat.axis_index(ax)
     H_loc, di_loc = H // tp, di // tp
     state = lax.dynamic_slice_in_dim(state, i * H_loc, H_loc, axis=1)
     conv_tail = lax.dynamic_slice_in_dim(conv_tail, i * di_loc, di_loc,
@@ -223,10 +224,10 @@ def mamba_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
 def _broadcast_final(incl, tail, mi: MeshInfo, sp: bool):
     """The global-final recurrent state / conv tail live on the LAST seq
     shard; broadcast them to every shard (masked psum over model)."""
-    ax = mi.model_axis
+    ax = mi.tp_axes
     if not (sp and mi.tp > 1):
         return incl, tail
-    last = lax.axis_index(ax) == mi.tp - 1
+    last = compat.axis_index(ax) == mi.tp - 1
     state = comms.psum(jnp.where(last, incl, jnp.zeros_like(incl)), ax, "tp")
     ct = comms.psum(jnp.where(last, tail.astype(_F32),
                               jnp.zeros_like(tail, _F32)), ax, "tp")
@@ -247,7 +248,7 @@ def mamba_decode(p, x, cache, cfg, mi: MeshInfo):
         cfg.ssm_head_dim, cfg.ssm_state
     tp = mi.tp
     di_loc, H_loc = di // tp, H // tp
-    i = lax.axis_index(mi.model_axis)
+    i = compat.axis_index(mi.tp_axes)
 
     def col(w, width):
         return lax.dynamic_slice_in_dim(w, i * width, width, axis=1)
@@ -282,6 +283,6 @@ def mamba_decode(p, x, cache, cfg, mi: MeshInfo):
     y = rms_norm(y, gn, cfg.norm_eps)
     out = y @ lax.dynamic_slice_in_dim(use(p["w_out"], mi), i * di_loc,
                                        di_loc, axis=0)
-    out = comms.psum(out[:, None, :], mi.model_axis, "tp")
+    out = comms.psum(out[:, None, :], mi.tp_axes, "tp")
     new_cache = {"conv": win[:, 1:], "state": S_new}
     return out, new_cache

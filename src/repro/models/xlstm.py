@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import comms
+from repro.core import comms, compat
 from repro.models.params import D as Dd, MeshInfo
 from repro.models.layers import use
 from repro.models.ssm import chunked_outer_scan, cross_shard_prefix, _bexp
@@ -78,7 +78,7 @@ def mlstm_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
 
     sn_in = sd_in = None
     if sp and mi.tp > 1:
-        ax = mi.model_axis
+        ax = mi.tp_axes
         sn_in = cross_shard_prefix(d_tot, Sn_fin, mi, ax)
         sd_in = cross_shard_prefix(d_tot, Sd_fin, mi, ax)
         la = jnp.log(jnp.maximum(f, 1e-38))
@@ -102,7 +102,7 @@ def mlstm_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     n_tot, _ = _broadcast_final(inc_d, jnp.zeros((B, 1, 1), _F32), mi, sp)
     tp = mi.tp
     if Pv % tp == 0 and tp > 1:
-        i = jax.lax.axis_index(mi.model_axis)
+        i = compat.axis_index(mi.tp_axes)
         C_tot = jax.lax.dynamic_slice_in_dim(C_tot, i * (Pv // tp),
                                              Pv // tp, axis=2)
     return out, {"C": C_tot, "n": n_tot[:, :, 0, :]}
@@ -120,7 +120,7 @@ def mlstm_decode(p, x, cache, cfg, mi: MeshInfo):
     tp = mi.tp
     Pv_loc = Pv // tp if Pv % tp == 0 else Pv
     sharded = Pv % tp == 0 and tp > 1
-    i = lax.axis_index(mi.model_axis)
+    i = compat.axis_index(mi.tp_axes)
     xt = x[:, 0]
 
     q = (xt @ use(p["w_q"], mi)).reshape(B, H, hd).astype(_F32)
@@ -151,7 +151,7 @@ def mlstm_decode(p, x, cache, cfg, mi: MeshInfo):
         w_out = use(p["w_out"], mi).reshape(H, Pv, cfg.d_model)
         w_loc = lax.dynamic_slice_in_dim(w_out, i * Pv_loc, Pv_loc, axis=1)
         out = y @ w_loc.reshape(H * Pv_loc, cfg.d_model)
-        out = comms.psum(out[:, None], mi.model_axis, "tp")
+        out = comms.psum(out[:, None], mi.tp_axes, "tp")
     else:
         y = (y.reshape(B, di) * o).astype(x.dtype)
         out = (y @ use(p["w_out"], mi))[:, None]
@@ -224,7 +224,7 @@ def slstm_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     """
     B, S, Dm = x.shape
     tp = mi.tp
-    ax = mi.model_axis
+    ax = mi.tp_axes
     if not sp or tp == 1:
         y, fin = _slstm_scan(p, x, cfg, mi)
     elif B % tp == 0:
@@ -236,7 +236,7 @@ def slstm_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     else:
         xg = comms.all_gather(x, ax, 1, "tp")         # [B, S_full, D]
         yg, fin = _slstm_scan(p, xg, cfg, mi)
-        i = lax.axis_index(ax)
+        i = compat.axis_index(ax)
         y = lax.dynamic_slice_in_dim(yg, i * S, S, axis=1)
     out = jnp.einsum("bsd,de->bse", y, use(p["w_out"], mi))
     if not want_cache:

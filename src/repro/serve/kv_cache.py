@@ -30,6 +30,15 @@ def _batch_spec(B: int, mi: MeshInfo, seq_axes):
     return mi.batch_axes
 
 
+def _flat_axes(seq_axes) -> tuple:
+    """Flatten seq_axes entries (AxisPairs of a factored model axis become
+    their physical sub-axes) into one PartitionSpec entry."""
+    out = []
+    for ax in seq_axes:
+        out += list(ax) if isinstance(ax, tuple) else [ax]
+    return tuple(out)
+
+
 def group_cache(cfg: ArchConfig, mi: MeshInfo, g: BlockGroup, B: int,
                 s_max: int, seq_axes, mode: str, s_enc: int = 0,
                 dtype=None):
@@ -45,9 +54,9 @@ def group_cache(cfg: ArchConfig, mi: MeshInfo, g: BlockGroup, B: int,
 
     if kind in ("attn", "moe", "dec_attn"):
         if mode == "head":
-            kv_spec = P(None, bs, None, mi.model_axis, None)
+            kv_spec = P(None, bs, None, mi.tp_axes, None)
         else:
-            kv_spec = P(None, bs, tuple(seq_axes), None, None)
+            kv_spec = P(None, bs, _flat_axes(seq_axes), None, None)
         st = {"k": sds((L, B, s_max, KV, hd)), "v": sds((L, B, s_max, KV, hd))}
         sp = {"k": kv_spec, "v": kv_spec}
         if kind == "dec_attn":
@@ -66,8 +75,8 @@ def group_cache(cfg: ArchConfig, mi: MeshInfo, g: BlockGroup, B: int,
         st = {"conv": sds((L, B, cfg.conv_kernel - 1, di)),
               "state": sds((L, B, H, cfg.ssm_head_dim, cfg.ssm_state),
                            jnp.float32)}
-        sp = {"conv": P(None, bs, None, mi.model_axis),
-              "state": P(None, bs, mi.model_axis, None, None)}
+        sp = {"conv": P(None, bs, None, mi.tp_axes),
+              "state": P(None, bs, mi.tp_axes, None, None)}
         return st, sp
     if kind == "mlstm":
         H = cfg.n_heads
@@ -75,7 +84,7 @@ def group_cache(cfg: ArchConfig, mi: MeshInfo, g: BlockGroup, B: int,
         Pv_ = di // H
         st = {"C": sds((L, B, H, Pv_, hd), jnp.float32),
               "n": sds((L, B, H, hd), jnp.float32)}
-        sp = {"C": P(None, bs, None, mi.model_axis, None),
+        sp = {"C": P(None, bs, None, mi.tp_axes, None),
               "n": P(None, bs, None, None)}
         return st, sp
     if kind == "slstm":
@@ -118,11 +127,9 @@ def prefill_cache_specs(cfg: ArchConfig, mi: MeshInfo, B: int):
     mode = cfg.attn_mode_for(mi.tp)
     bs = mi.batch_axes if B > 1 else None
     if mode == "head":
-        kv = P(None, bs, None, mi.model_axis, None)
+        kv = P(None, bs, None, mi.tp_axes, None)
     else:
-        kv = P(None, bs, mi.model_axis, None, None)
-    pos_sp = P(None, bs, mi.model_axis) if mode != "head" else P(None, bs, None)
-    del pos_sp
+        kv = P(None, bs, mi.tp_axes, None, None)
     out = []
     for g in cfg.layer_groups:
         if g.kind in ("attn", "moe"):
@@ -134,13 +141,13 @@ def prefill_cache_specs(cfg: ArchConfig, mi: MeshInfo, B: int):
         elif g.kind == "enc_attn":
             out.append(None)
         elif g.kind == "mamba":
-            out.append({"conv": P(None, bs, None, mi.model_axis),
-                        "state": P(None, bs, mi.model_axis, None, None)})
+            out.append({"conv": P(None, bs, None, mi.tp_axes),
+                        "state": P(None, bs, mi.tp_axes, None, None)})
         elif g.kind == "mlstm":
             di = int(cfg.proj_factor * cfg.d_model)
             pv_sharded = (di // cfg.n_heads) % mi.tp == 0 and mi.tp > 1
             out.append({"C": P(None, bs, None,
-                               mi.model_axis if pv_sharded else None, None),
+                               mi.tp_axes if pv_sharded else None, None),
                         "n": P(None, bs, None, None)})
         elif g.kind == "slstm":
             out.append({k: P(None, bs, None, None) for k in "hcnm"})

@@ -22,16 +22,18 @@ from repro.serve import kv_cache
 
 
 def greedy_token(logits, cfg, mi: MeshInfo):
-    """logits [B, 1, V_loc] vocab-sharded -> [B] int32 global argmax."""
+    """logits [B, 1, V_loc] vocab-sharded -> [B] int32 global argmax.
+
+    Vocab shards over the joint (possibly node-factored) model axes."""
     v_loc = logits.shape[-1]
-    lo = lax.axis_index(mi.model_axis) * v_loc
+    lo = compat.axis_index(mi.tp_axes) * v_loc
     col = lo + jnp.arange(v_loc)
     logits = jnp.where(col < cfg.vocab_size, logits[:, 0], -jnp.inf)
     val = jnp.max(logits, axis=-1)                       # [B]
     idx = lo + jnp.argmax(logits, axis=-1).astype(jnp.int32)
-    gmax = comms.pmax(val, mi.model_axis)
+    gmax = comms.pmax(val, mi.tp_axes)
     cand = jnp.where(val >= gmax, idx, jnp.int32(2**31 - 1))
-    return -comms.pmax(-cand, mi.model_axis)             # pmin of candidates
+    return -comms.pmax(-cand, mi.tp_axes)                # pmin of candidates
 
 
 class Server:
@@ -40,7 +42,10 @@ class Server:
         self.model = model
         self.mesh = mesh
         self.scheme = schemes.get(scheme)
-        self.seq_axes = tuple(seq_axes)
+        # resolve the logical "model" entry to the joint axis (AxisPair on
+        # a tp-node-factored mesh) so decode combines span the full tp ways
+        self.seq_axes = tuple(model.mi.tp_axes if ax == "model" else ax
+                              for ax in seq_axes)
         self.ring_bidir = ring_bidir
         self._build()
 

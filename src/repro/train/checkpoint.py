@@ -130,11 +130,18 @@ def restore(ckpt_dir, tree_like, step: int | None = None,
 
 
 def resharded_specs(tree, mesh):
-    """NamedShardings for a Pv tree on (a possibly different) mesh."""
+    """NamedShardings for a Pv tree on (a possibly different) mesh.
+
+    Logical "model" spec entries translate to the joint model axes when
+    the target mesh factors tp over nodes (elastic restart onto a
+    ``--tp-nodes`` mesh)."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.models.params import MeshInfo, physical_spec
+
+    mi = MeshInfo.from_mesh(mesh)
 
     def f(l):
         if _is_pv(l):
-            return Pv(NamedSharding(mesh, P(*l.spec)), l.spec)
+            return Pv(NamedSharding(mesh, physical_spec(l.spec, mi)), l.spec)
         return NamedSharding(mesh, P())
     return jax.tree_util.tree_map(f, tree, is_leaf=_is_pv)

@@ -163,11 +163,13 @@ class Adam:
         gleaves, _, _ = _split_classes(grads)
         step = state["step"]
 
-        # -- class C: fold model-axis partial grads (MP codec, paper C3)
+        # -- class C: fold model-axis partial grads (MP codec, paper C3).
+        # On a tp-node-factored mesh this rides the hierarchical two-level
+        # all-reduce (tp_bwd_inner / tp_bwd_outer codecs).
         c_vals = [g.v for g, c in zip(gleaves, classes) if c == "C"]
         if c_vals and mi.tp > 1:
             cflat = _flat_concat(c_vals)
-            cflat = comms.psum(cflat, mi.model_axis, "tp_bwd")
+            cflat = comms.psum(cflat, mi.tp_axes, "tp_bwd")
             out, off = [], 0
             for g, c in zip(gleaves, classes):
                 if c == "C":
@@ -204,7 +206,7 @@ class Adam:
                 continue
             gv = g.v.astype(_F32)
             if "model" not in g.spec:
-                gv = comms.psum(gv, mi.model_axis, "tp_bwd")
+                gv = comms.psum(gv, mi.tp_axes, "tp_bwd")
             if mi.node_axis:
                 gv = comms.psum(gv, mi.node_axis, "dp_outer")
             if mi.pod_axis:

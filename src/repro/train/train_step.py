@@ -27,11 +27,11 @@ def batch_specs(cfg, mi: MeshInfo):
     """PartitionSpecs for the training batch dict."""
     sp = {"tokens": P(mi.batch_axes, None), "labels": P(mi.batch_axes, None)}
     if cfg.encoder_layers:
-        sp["frames"] = P(mi.batch_axes, mi.model_axis, None)
+        sp["frames"] = P(mi.batch_axes, mi.tp_axes, None)
     if cfg.mrope:
-        sp["vision"] = P(mi.batch_axes, mi.model_axis, None)
-        sp["vis_mask"] = P(mi.batch_axes, mi.model_axis)
-        sp["pos3"] = P(mi.batch_axes, mi.model_axis, None)
+        sp["vision"] = P(mi.batch_axes, mi.tp_axes, None)
+        sp["vis_mask"] = P(mi.batch_axes, mi.tp_axes)
+        sp["pos3"] = P(mi.batch_axes, mi.tp_axes, None)
     return sp
 
 

@@ -1,0 +1,99 @@
+"""Axis resolution for node-factored meshes (single-device safe).
+
+The AxisPair type, the logical->physical axis resolution helpers
+(``launch.mesh.comm_axes``, ``MeshInfo.tp_axes``), the physical
+PartitionSpec translation for "model"-sharded params, and the
+--tp-nodes spec parsing.  Multi-device behavior of the collectives that
+dispatch on AxisPair lives in ``tests/multidev/tp_hier_check.py``.
+"""
+
+import types
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.core import compat
+from repro.launch import mesh as meshlib
+from repro.models.params import D, MeshInfo, local_shape, physical_spec
+
+
+def test_axis_pair_is_a_plain_tuple():
+    p = compat.AxisPair("tpnode", "model")
+    assert isinstance(p, tuple)
+    assert tuple(p) == ("tpnode", "model")
+    assert p.outer == "tpnode" and p.inner == "model"
+    # hashable (custom_vjp nondiff arg) and usable as a P entry
+    assert hash(p) == hash(("tpnode", "model"))
+    assert P(p) == P(("tpnode", "model"))
+
+
+def _fake_mesh(**axes):
+    """Duck-typed stand-in: comm_axes only reads axis_names/devices.shape,
+    so tier-1 stays single-device."""
+    return types.SimpleNamespace(
+        axis_names=tuple(axes),
+        devices=types.SimpleNamespace(shape=tuple(axes.values())))
+
+
+def test_comm_axes_resolution():
+    flat = _fake_mesh(data=2, model=4)
+    assert meshlib.comm_axes(flat, "data") == "data"
+    assert meshlib.comm_axes(flat, "model") == "model"
+    fact = _fake_mesh(node=2, data=2, tpnode=2, model=2)
+    assert meshlib.comm_axes(fact, "data") == \
+        compat.AxisPair(meshlib.NODE_AXIS, meshlib.LOCAL_AXIS)
+    assert meshlib.comm_axes(fact, "model") == \
+        compat.AxisPair(meshlib.TP_NODE_AXIS, meshlib.MODEL_AXIS)
+    with pytest.raises(AssertionError):
+        meshlib.comm_axes(flat, "pod")
+
+
+def test_meshinfo_tp_axes_flat_and_factored():
+    mi = MeshInfo(tp=4, dp=2)
+    assert mi.tp_axes == "model"
+    assert mi.mp_axes == ("model",)
+    assert mi.all_axes == ("data", "model")
+    mi2 = MeshInfo(tp=4, dp=2, tp_node=2, tp_node_axis="tpnode")
+    assert mi2.tp_axes == compat.AxisPair("tpnode", "model")
+    assert mi2.mp_axes == ("tpnode", "model")
+    assert mi2.all_axes == ("data", "tpnode", "model")
+    # tp stays the TOTAL degree
+    assert mi2.tp == 4
+
+
+def test_physical_spec_translation_and_local_shape():
+    d = D((8, 16), spec=(None, "model"))
+    mi_flat = MeshInfo(tp=4, dp=2)
+    mi_fact = MeshInfo(tp=4, dp=2, tp_node=2, tp_node_axis="tpnode")
+    assert physical_spec(d.spec, None) == P(None, "model")
+    assert physical_spec(d.spec, mi_flat) == P(None, "model")
+    assert physical_spec(d.spec, mi_fact) == P(None, ("tpnode", "model"))
+    # fsdp "data" entries stay on the inner data axis in both cases
+    d2 = D((8, 16), spec=("data", None))
+    assert physical_spec(d2.spec, mi_fact) == P("data", None)
+    # local shard shapes divide "model" dims by the TOTAL tp degree
+    assert local_shape(d, mi_fact) == (8, 4)
+    assert local_shape(d2, mi_fact) == (4, 16)
+
+
+def test_parse_tp_nodes_spec():
+    assert meshlib.parse_nodes_spec(2, 8) == 2
+    assert meshlib.parse_nodes_spec("2", 8, flag="--tp-nodes") == 2
+    assert meshlib.parse_nodes_spec("2x4", 8, flag="--tp-nodes") == 2
+    with pytest.raises(AssertionError):
+        meshlib.parse_nodes_spec("3", 8, flag="--tp-nodes")
+    with pytest.raises(AssertionError):
+        meshlib.parse_nodes_spec("2x3", 8, flag="--tp-nodes")
+
+
+def test_hier_codec_pairs_directed_tags():
+    """The comms-layer codec resolution for directed level tags."""
+    from repro.core import comms, schemes
+    with schemes.use("hier_tpp_8_16"):
+        (ci, _), (co, _) = comms._hier_codec_pairs("tp")
+        assert ci.name == "bq16" and co.name == "bq8"
+        (ci_b, _), (co_b, _) = comms._hier_codec_pairs("tp_bwd")
+        assert ci_b.name == "bq16" and co_b.name == "bq8"
+    with schemes.use("zhybrid_16_8"):   # no level overrides -> flat mp codec
+        (ci, _), (co, _) = comms._hier_codec_pairs("ep")
+        assert ci.name == co.name == "bq16"

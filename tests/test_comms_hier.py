@@ -41,3 +41,29 @@ def test_hier_outer_bytes_below_flat_baseline():
     out = _hier_out()
     assert "inter-node bytes: hier_zpp_8_16=" in out
     assert "< flat zhybrid_16_8=" in out
+
+
+@functools.lru_cache(maxsize=1)
+def _tp_hier_out() -> str:
+    return run_script("tp_hier_check.py", timeout=1800)
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_model_layer_hier_collectives():
+    """TP/EP/PP hierarchical ops: bit-exact vs flat joint lax (fwd+grad),
+    and end-to-end flat-vs-factored model losses identical."""
+    out = _tp_hier_out()
+    assert "identity hier TP/EP ops == flat lax: bit-exact" in out
+    assert "factored-TP model losses match flat: bit-exact" in out
+    assert "tp hier comms validated" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_tp_outer_bytes_below_flat_baseline():
+    """Acceptance: hier_tpp_8_16 moves strictly fewer inter-node bytes
+    than the flat TP baseline on a node-factored mesh."""
+    out = _tp_hier_out()
+    assert "inter-node TP bytes: hier_tpp_8_16=" in out
+    assert "< flat zhybrid_16_8=" in out

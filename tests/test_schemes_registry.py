@@ -60,6 +60,65 @@ def test_hier_schemes_are_level_aware():
             <= h.codec("dp_inner").wire_bits_per_value(), name
 
 
+def test_level_tag_fallback_chain():
+    """Satellite acceptance: tp_fwd_inner -> explicit field when set,
+    -> tp_fwd flat codec when unset, -> KeyError for unknown dimensions."""
+    s = schemes.get("hier_tpp_8_16")
+    assert s.codec("tp_fwd_inner").name == "bq16"      # explicit level field
+    assert s.codec("tp_fwd_outer").name == "bq8"
+    base = schemes.get("zhybrid_16_8")                 # no tp level overrides
+    assert base.tp_fwd_inner is None
+    assert base.codec("tp_fwd_inner").name == base.codec("tp_fwd").name
+    # error path: unknown dimension falls through both fallback steps
+    for bad in ("xx_fwd_inner", "tp_fwd_bogus", "inner", "tp_middle"):
+        with pytest.raises(KeyError):
+            base.codec(bad)
+
+
+def test_uniform_and_hier_leave_unset_level_fields_none():
+    """Scheme.uniform sets only flat tags; Scheme.hier sets only the level
+    fields of the requested dims — everything else stays None (= flat
+    fallback under the hierarchical collectives)."""
+    u = schemes.Scheme.uniform("u_tmp", "bq8")
+    for tag in schemes.level_tags():
+        assert getattr(u, tag) is None, tag
+        assert u.codec(tag).name == "bq8"              # flat fallback
+    h = schemes.Scheme.hier("h_tmp", schemes.get("zhybrid_16_8"),
+                            inner="bq16", outer="bq4")  # default dims dp/zero
+    assert h.dp_inner == "bq16" and h.dp_outer == "bq4"
+    assert h.zero_inner == "bq16" and h.zero_outer == "bq4"
+    for d in schemes.DIRECTED_DIMS:
+        for io in ("fwd", "bwd"):
+            for lvl in ("inner", "outer"):
+                assert getattr(h, f"{d}_{io}_{lvl}") is None, (d, io, lvl)
+
+
+def test_hier_tpp_schemes_level_aware_on_every_dim():
+    """The hier_tpp_* schemes carry level overrides for ALL dimensions —
+    TP/EP/PP model-layer collectives stage inner-mild / outer-aggressive."""
+    for name, inner, outer in (("hier_tpp_8_16", "bq16", "bq8"),
+                               ("hier_tpp_4_16", "bq16", "bq4"),
+                               ("hier_mtpp_8", "mpc", "bq8")):
+        s = schemes.get(name)
+        for tag in schemes.flat_tags():
+            assert s.codec(f"{tag}_inner").name == inner, (name, tag)
+            assert s.codec(f"{tag}_outer").name == outer, (name, tag)
+        # outer stage at least as aggressive as inner
+        assert s.codec("tp_fwd_outer").wire_bits_per_value() \
+            <= s.codec("tp_fwd_inner").wire_bits_per_value()
+
+
+def test_scheme_table_matches_registry():
+    """The generated docs table contains one row per registered scheme and
+    every flat tag as a column (docs CI regenerates + diffs the file)."""
+    md = schemes.scheme_table_md()
+    for name in schemes.names():
+        assert f"| `{name}` |" in md
+    header = [ln for ln in md.splitlines() if ln.startswith("| scheme")][0]
+    for tag in schemes.flat_tags():
+        assert tag in header
+
+
 def test_codec_pair_level_tags():
     with schemes.use("hier_zpp_8_16"):
         f, b = comms._codec_pair("dp_inner")

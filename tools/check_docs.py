@@ -1,0 +1,102 @@
+"""Docs CI: validate markdown cross-links (relative paths + anchors).
+
+Stdlib-only.  Scans every ``*.md`` in the repo (skipping generated build
+dirs), extracts ``[text](target)`` links, and fails if
+
+* a relative link points at a file that does not exist, or
+* a ``path#anchor`` / ``#anchor`` fragment names a heading that is not
+  present in the target file (GitHub-style slugs).
+
+External links (``http://`` / ``https://`` / ``mailto:``) are not
+fetched — CI must not depend on network.  Run locally with::
+
+    python tools/check_docs.py
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".venv",
+             "results"}
+
+# [text](target) — won't match ![img](...) differently (images are links
+# too and should also resolve); ignores ```code fences``` via scrubbing.
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]*\]\(([^)\s]+)\)")
+_IMG_RE = re.compile(r"\!\[[^\]]*\]\(([^)\s]+)\)")
+_HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+_FENCE_RE = re.compile(r"```.*?```", re.DOTALL)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop punctuation, spaces->dashes."""
+    h = heading.strip().lower()
+    h = re.sub(r"[`*_]", "", h)              # inline markdown
+    h = re.sub(r"[^\w\sÀ-￿-]", "", h)
+    return re.sub(r"\s+", "-", h.strip())
+
+
+def md_files():
+    for p in sorted(ROOT.rglob("*.md")):
+        if not any(part in SKIP_DIRS for part in p.parts):
+            yield p
+
+
+def anchors_of(path: pathlib.Path) -> set[str]:
+    text = _FENCE_RE.sub("", path.read_text(encoding="utf-8"))
+    out = set()
+    for m in _HEADING_RE.finditer(text):
+        slug = github_slug(m.group(1))
+        # GitHub dedupes repeated headings as slug, slug-1, slug-2 ...
+        cand = slug
+        i = 1
+        while cand in out:
+            cand = f"{slug}-{i}"
+            i += 1
+        out.add(cand)
+    return out
+
+
+def check() -> list[str]:
+    errors = []
+    for src in md_files():
+        text = _FENCE_RE.sub("", src.read_text(encoding="utf-8"))
+        targets = [m.group(1) for m in _LINK_RE.finditer(text)]
+        targets += [m.group(1) for m in _IMG_RE.finditer(text)]
+        for t in targets:
+            if t.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, frag = t.partition("#")
+            if path_part:
+                dest = (src.parent / path_part).resolve()
+                if not dest.exists():
+                    errors.append(f"{src.relative_to(ROOT)}: broken link "
+                                  f"-> {t}")
+                    continue
+            else:
+                dest = src
+            if frag and dest.suffix == ".md":
+                if frag.lower() not in anchors_of(dest):
+                    errors.append(f"{src.relative_to(ROOT)}: missing anchor "
+                                  f"#{frag} in {dest.relative_to(ROOT)}")
+    return errors
+
+
+def main() -> int:
+    errors = check()
+    n = len(list(md_files()))
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"docs check FAILED: {len(errors)} broken link(s) across "
+              f"{n} markdown files", file=sys.stderr)
+        return 1
+    print(f"docs check OK: {n} markdown files, all relative links + "
+          "anchors resolve")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
