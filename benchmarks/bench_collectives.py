@@ -133,6 +133,62 @@ def _hier_tp_sweep(rows):
     return rows
 
 
+def _trace_stage_handoff(scheme, hier: bool, elems: int):
+    """One pipeline stage handoff (stage_send) per tick on a 4-stage pipe,
+    flat joint axis vs the (ppnode, stage) edge-classified decomposition."""
+    from repro.core.compat import AxisPair
+    mesh = compat.make_mesh((2, 2, 2), ("data", "ppnode", "stage"))
+    axis = AxisPair("ppnode", "stage") if hier else ("ppnode", "stage")
+    sm = jax.jit(compat.shard_map(
+        lambda a: comms.stage_send(a, axis),
+        mesh=mesh, in_specs=(P("data"),), out_specs=P("data"),
+        check_vma=False))
+    with schemes.use(scheme), comms.record_traffic() as events:
+        sm.lower(jax.ShapeDtypeStruct((2, elems), jnp.float32))
+    jax.clear_caches()
+    return events
+
+
+def _pp_handoff_sweep(rows):
+    """Stage-handoff bytes: the pp=4 pipe spans two nodes (stage 1 -> 2
+    crosses the boundary).  Flat baseline prices every handoff on the slow
+    link; the hierarchical axis keeps only the node-crossing edge there,
+    and the pp_*_outer codec shrinks it further.  The acceptance row:
+    inter-node stage-handoff bytes strictly below the uncompressed
+    baseline under every compressed scheme."""
+    elems = 1 << 18                                  # 1 MiB f32 / device
+    flat_axes = ((("ppnode", "stage"),))
+    base_slow = None
+    for scheme, hier in (("baseline", False), ("zhybrid_16_8", False),
+                         ("hier_tpp_8_16", True), ("hier_tpp_4_16", True),
+                         ("hier_mtpp_8", True)):
+        events = _trace_stage_handoff(scheme, hier, elems)
+        slow_ax = flat_axes if not hier else ()
+        lb = rl.link_bytes(events, train=True, slow_axes=slow_ax)
+        secs = rl.collective_seconds(events, train=True, slow_axes=slow_ax)
+        hand = rl.stage_handoff_seconds(events, train=True,
+                                        slow_axes=slow_ax)
+        if base_slow is None:
+            base_slow = lb["slow"]
+        else:
+            assert 0 < lb["slow"] < base_slow, \
+                (scheme, lb["slow"], base_slow)
+        kind = "hier" if hier else "flat"
+        rows.append((f"pp_handoff_1MiB_{kind}_{scheme}",
+                     secs * 1e6,                     # roofline us
+                     f"slow={lb['slow']/1e6:.2f}MB fast={lb['fast']/1e6:.2f}MB"
+                     f" handoff_us={hand*1e6:.1f}"
+                     f" slow_vs_flat_baseline="
+                     f"{lb['slow']/max(base_slow,1):.3f}"))
+    # bubble column: what the schedule itself costs at a few microbatch
+    # counts (per-device occupancy, independent of codec choice)
+    for m in (1, 4, 16):
+        rows.append((f"pp_bubble_pp4_m{m}",
+                     rl.bubble_fraction(4, m) * 100,  # percent
+                     f"step_x{rl.pipelined_step_time(1.0, 4, m):.2f}"))
+    return rows
+
+
 def _dim_level_str(led) -> str:
     """per-dimension x level byte breakdown for the printed summary."""
     return ",".join(f"{k}:{v/1e6:.2f}MB"
@@ -178,6 +234,39 @@ def _hier_step_sweep(rows):
     return rows
 
 
+def _pp_step_sweep(rows):
+    """Full microbatched 1F1B train step on a stage mesh: flat (dp=2,
+    stage=2, model=2) vs pp-node-factored (dp=2, ppnode=2, stage=2) — the
+    per-dimension x level breakdown shows the pp handoffs entering the
+    ledger, and moving to the outer/inner split once stage boundaries
+    cross nodes."""
+    from repro.launch.mesh import make_mesh
+    from repro.train.train_step import make_trainer
+    arch = "qwen2-72b"
+    for name, mesh, scheme in (
+            ("ppflat", make_mesh(2, 2, pp=2), "zhybrid_16_8"),
+            ("ppnode", make_mesh(2, 1, pp=4, pp_nodes=2), "hier_tpp_8_16")):
+        cfg = configs.get(arch).reduced()
+        mi = MeshInfo.from_mesh(mesh)
+        if sum(g.n for g in cfg.layer_groups) % mi.pp:
+            cfg = cfg.replace(n_layers=mi.pp, groups=())
+        model = Model(cfg, mi)
+        trainer = make_trainer(model, mesh, scheme=scheme, n_micro=4)
+        pstructs = model.structs()
+        ostructs = jax.eval_shape(trainer.opt_init, pstructs)
+        binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+                   "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+        with comms.record_traffic() as events:
+            trainer.step.lower(pstructs, ostructs, binputs)
+        led = rl.ledger_summary(events, train=True)
+        assert led["per_dim"].get("pp", 0) > 0, "no pp bytes in the ledger"
+        rows.append((f"train_step_{arch}_{name}_{scheme}",
+                     led["total_bytes"] / 1e6,
+                     _dim_level_str(led)))
+        jax.clear_caches()
+    return rows
+
+
 def run():
     mesh = compat.make_mesh((2, 4), ("data", "model"))
     rows = []
@@ -197,5 +286,7 @@ def run():
             jax.clear_caches()
     _hier_sweep(rows)
     _hier_tp_sweep(rows)
+    _pp_handoff_sweep(rows)
     _hier_step_sweep(rows)
+    _pp_step_sweep(rows)
     return rows

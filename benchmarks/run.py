@@ -31,7 +31,14 @@ MODULES = ("bench_codec", "bench_collectives", "bench_convergence",
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", choices=MODULES)
+    ap.add_argument("--suggest", nargs="*", metavar="ICI_BW:DCN_BW",
+                    help="print the per-level codec suggestion for the "
+                         "given link-bandwidth pairs in bytes/s (default: "
+                         "a sweep of ICI/DCN ratios) and exit")
     args = ap.parse_args()
+    if args.suggest is not None:
+        _suggest(args.suggest)
+        return
     mods = [args.only] if args.only else list(MODULES)
     print("name,us_per_call,derived")
     for name in mods:
@@ -46,6 +53,20 @@ def main() -> None:
             print(f"{r[0]},{r[1]:.2f},{r[2]}")
         print(f"{name}_total,{(time.time() - t0) * 1e6:.0f},wall",
               file=sys.stderr)
+
+
+def _suggest(pairs) -> None:
+    """roofline.suggest_scheme over measured (or default) link speeds."""
+    from repro.analysis import roofline as rl
+    if not pairs:
+        pairs = [f"{rl.ICI_BW:.0f}:{rl.ICI_BW / r:.0f}"
+                 for r in (1, 2, 8, 16, 32, 64)]
+    print("ici_bw,dcn_bw,ratio,scheme,outer_codec")
+    for p in pairs:
+        ici, dcn = (float(x) for x in p.split(":"))
+        s = rl.suggest_scheme(ici, dcn)
+        print(f"{ici:.3g},{dcn:.3g},{s['ratio']:.1f},"
+              f"{s['scheme']},{s['outer_codec']}")
 
 
 if __name__ == "__main__":

@@ -130,11 +130,118 @@ def link_bytes(events, train: bool, slow_axes=()) -> dict:
     return {"fast": fast, "slow": slow}
 
 
-def collective_seconds(events, train: bool, slow_axes=()) -> float:
+def collective_seconds(events, train: bool, slow_axes=(),
+                       ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW) -> float:
     """Link-hierarchy-aware collective time: stages are sequential, so the
-    fast- and slow-link byte pools add (no overlap credit across stages)."""
+    fast- and slow-link byte pools add (no overlap credit across stages).
+    ``ici_bw`` / ``dcn_bw`` override the default link speeds — the
+    measured-ratio hook :func:`suggest_scheme` prices candidates with the
+    cluster's actual numbers."""
     lb = link_bytes(events, train, slow_axes)
-    return lb["fast"] / ICI_BW + lb["slow"] / DCN_BW
+    return lb["fast"] / ici_bw + lb["slow"] / dcn_bw
+
+
+# --------------------------------------------------------------------------
+# pipeline-parallel terms: stage-handoff pricing + the 1F1B bubble
+# --------------------------------------------------------------------------
+
+def bubble_fraction(pp: int, n_micro: int) -> float:
+    """Idle fraction of the GPipe/1F1B schedule: (pp-1)/(n_micro+pp-1).
+
+    Each step runs ``n_micro + pp - 1`` ticks of which ``pp - 1`` are
+    fill/drain — per-device useful occupancy is ``n_micro / T``."""
+    if pp <= 1:
+        return 0.0
+    assert n_micro >= 1
+    return (pp - 1) / (n_micro + pp - 1)
+
+
+def stage_handoff_seconds(events, train: bool, slow_axes=(),
+                          ici_bw: float = ICI_BW,
+                          dcn_bw: float = DCN_BW) -> float:
+    """Collective time of the ``pp``-dimension events alone — the stage
+    handoffs of the pipeline schedule, priced on fast vs slow links (an
+    "outer"-level event, or a flat handoff over an axis in ``slow_axes``,
+    crosses nodes and rides DCN)."""
+    pp_ev = [ev for ev in events if tag_dim(ev["tag"]) == "pp"]
+    return collective_seconds(pp_ev, train, slow_axes, ici_bw, dcn_bw)
+
+
+def pipelined_step_time(base_step_s: float, pp: int, n_micro: int) -> float:
+    """Roofline step time with the schedule bubble: per-device work is
+    unchanged but the pipe is busy only ``1 - bubble`` of the ticks."""
+    return base_step_s / max(1.0 - bubble_fraction(pp, n_micro), 1e-9)
+
+
+# --------------------------------------------------------------------------
+# per-level codec autotune (ROADMAP: pick codecs from the measured
+# ICI/DCN ratio via the collective_seconds pricing)
+# --------------------------------------------------------------------------
+
+def _two_level_ar_events(scheme_name: str, elems: int, n_inner: int,
+                         n_outer: int) -> list:
+    """Synthetic ledger of one hierarchical DP all-reduce under ``scheme``
+    (same stage shapes as comms.hier_all_reduce ledgers at trace time)."""
+    from repro.core import schemes
+    s = schemes.get(scheme_name)
+
+    def c(tag):
+        return s.codec(tag).name
+    chunk = -(-elems // n_inner)
+    mk = dict(tag="dp", dtype="float32", mult=1, remat=False, bidir=False,
+              bwd_op=None)
+    return [
+        dict(mk, op="reduce_scatter", axis="data", n=n_inner, elems=elems,
+             codec_fwd=c("dp_inner"), codec_bwd=c("dp_inner"), level="inner"),
+        dict(mk, op="all_reduce", axis="node", n=n_outer, elems=chunk,
+             codec_fwd=c("dp_outer"), codec_bwd=c("dp_outer"), level="outer"),
+        dict(mk, op="all_gather", axis="data", n=n_inner, elems=chunk,
+             codec_fwd=c("dp_inner"), codec_bwd=c("dp_inner"), level="inner"),
+    ]
+
+
+# mild -> aggressive outer codec, with the registered scheme realizing it
+# (all rungs share the mild bq16 inner codec; only the inter-node stage
+# tightens as the ladder descends)
+_SUGGEST_LADDER = (
+    ("hier_zpp_16_16", "bq16"),
+    ("hier_zpp_8_16", "bq8"),
+    ("hier_zpp_4_16", "bq4"),
+)
+
+
+def suggest_scheme(ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW, *,
+                   elems: int = 1 << 24, n_inner: int = 8,
+                   n_outer: int = 4) -> dict:
+    """Pick per-level codecs from the measured fast/slow link ratio.
+
+    Compression costs quality, so the rule is *compress only as hard as
+    the slow link demands*: walk the outer-codec ladder mild -> aggressive
+    and stop at the first candidate whose inter-node (outer-stage) time no
+    longer bottlenecks the collective — i.e. slow-pool seconds <= fast-pool
+    seconds under the :func:`collective_seconds` pricing at the given
+    bandwidths.  If even the most aggressive codec cannot get there, it is
+    returned (the slow link dominates regardless; minimize its bytes).
+
+    Returns {"scheme", "outer_codec", "ratio", "candidates": {name:
+    {"fast_s", "slow_s", "total_s"}}}.
+    """
+    assert ici_bw > 0 and dcn_bw > 0
+    cands = {}
+    pick = None
+    for name, outer in _SUGGEST_LADDER:
+        ev = _two_level_ar_events(name, elems, n_inner, n_outer)
+        lb = link_bytes(ev, train=False)
+        fast_s = lb["fast"] / ici_bw
+        slow_s = lb["slow"] / dcn_bw
+        cands[name] = {"fast_s": fast_s, "slow_s": slow_s,
+                       "total_s": fast_s + slow_s, "outer_codec": outer}
+        if pick is None and slow_s <= fast_s:
+            pick = name
+    if pick is None:
+        pick = _SUGGEST_LADDER[-1][0]
+    return {"scheme": pick, "outer_codec": cands[pick]["outer_codec"],
+            "ratio": ici_bw / dcn_bw, "candidates": cands}
 
 
 # --------------------------------------------------------------------------

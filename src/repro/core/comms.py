@@ -593,6 +593,39 @@ def ppermute(x, axis, perm, tag: str):
     return _pp_vjp(x, axis, perm, c_fwd, c_bwd)
 
 
+def stage_send(x, axis, tag: str = "pp"):
+    """Pipeline stage handoff: stage ``s`` sends ``x`` to stage ``s + 1``.
+
+    The canonical forward edge of the 1F1B schedule — a partial (no
+    wraparound) shift along the stage axis.  The last stage sends nothing;
+    the first stage receives zeros (its real input is the embedded
+    microbatch).  Encodes under the scheme's ``pp_fwd`` codec; the
+    ``custom_vjp`` backward is the inverse shift (activation gradients
+    flowing stage ``s+1 -> s``) under ``pp_bwd`` — so PP point-to-point
+    traffic rides the compression path and the per-dimension ledger in
+    both directions.  With an :class:`AxisPair` stage axis the handoff
+    routes through :func:`hier_ppermute`: edges inside a node ride the
+    ``pp_*_inner`` codec, node-crossing stage boundaries the aggressive
+    ``pp_*_outer`` codec."""
+    n = int(axis_size(axis))
+    if n == 1:
+        return jnp.zeros_like(x)
+    return ppermute(x, axis, [(s, s + 1) for s in range(n - 1)], tag)
+
+
+def stage_recv(x, axis, tag: str = "pp"):
+    """Reverse stage shift: stage ``s`` sends ``x`` to stage ``s - 1``.
+
+    The explicit backward-edge twin of :func:`stage_send` for schedules
+    that hand gradients (or recomputation state) upstream themselves;
+    its own ``custom_vjp`` backward is the forward shift.  Same codec /
+    hierarchy routing as :func:`stage_send`."""
+    n = int(axis_size(axis))
+    if n == 1:
+        return jnp.zeros_like(x)
+    return ppermute(x, axis, [(s + 1, s) for s in range(n - 1)], tag)
+
+
 def all_to_all(x, axis, split_axis: int, concat_axis: int, tag: str):
     """All-to-all over ``axis`` (bwd: all-to-all with split/concat swapped).
     AxisPair axes route to :func:`hier_all_to_all`."""

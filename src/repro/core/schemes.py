@@ -173,6 +173,12 @@ ZHYBRID_8_4 = Scheme.hybrid("zhybrid_8_4", dp="bq4", mp="bq8")
 # level-aware (hierarchical) schemes: <name>_<outer>_<inner> — mild codec
 # intra-node, aggressive codec on the inter-node stage (ZeRO++ qgZ-style).
 # hier_zpp_*: optimizer sync (dp/zero) only, as in PR 1.
+# hier_zpp_16_16 is the mild end of the autotune ladder
+# (roofline.suggest_scheme): rate-16 on BOTH levels — for clusters whose
+# inter-node links are fast enough that the outer stage needs no extra
+# squeeze.
+HIER_ZPP_16_16 = Scheme.hier("hier_zpp_16_16", ZHYBRID_16_8,
+                             inner="bq16", outer="bq16")
 HIER_ZPP_8_16 = Scheme.hier("hier_zpp_8_16", ZHYBRID_16_8,
                             inner="bq16", outer="bq8")
 HIER_ZPP_4_16 = Scheme.hier("hier_zpp_4_16", ZHYBRID_16_8,
@@ -196,7 +202,7 @@ _REGISTRY = {s.name: s for s in (
     MZHYBRID8, MZHYBRID16, ZHYBRID_16_8, ZHYBRID_24_8,
     NAIVE_ZFP4, ZHYBRID_16_4, NAIVE_GQ8, MZHYBRID_G8,
     NAIVE_TQ8, MZHYBRID_T8, ZHYBRID_8_4,
-    HIER_ZPP_8_16, HIER_ZPP_4_16, HIER_MZPP_8,
+    HIER_ZPP_16_16, HIER_ZPP_8_16, HIER_ZPP_4_16, HIER_MZPP_8,
     HIER_TPP_8_16, HIER_TPP_4_16, HIER_MTPP_8,
 )}
 

@@ -5,8 +5,10 @@ touches jax device state — the dry-run sets its 512-placeholder-device
 XLA flag before the first jax init.
 
 Mapping (DESIGN.md §4): ``model`` = TP/EP/SP, ``data`` = DP + ZeRO shards,
-``pod`` (multi-pod) = outer DP — cross-pod traffic is exactly the DP
-gradient reduction the paper compresses hardest, riding the slowest links.
+``stage`` = pipeline-parallel stages (each stage rank materializes only its
+own contiguous slice of layers), ``pod`` (multi-pod) = outer DP —
+cross-pod traffic is exactly the DP gradient reduction the paper
+compresses hardest, riding the slowest links.
 
 Hierarchical meshes factor a logical axis into ``(node, local)``
 sub-axes so the two-level collectives in :mod:`repro.core.comms` can
@@ -15,12 +17,16 @@ stage intra-node (fast links) and inter-node (slow links) separately:
 * ``--nodes`` factors the **data** axis into ``(node, data)`` — the
   optimizer's DP/ZeRO sync (PR 1, ZeRO++ hpZ-style);
 * ``--tp-nodes`` factors the **model** axis into ``(tpnode, model)`` —
-  the model-layer TP/EP/PP collectives (this PR).
+  the model-layer TP/EP/PP collectives (PR 2);
+* ``--pp-nodes`` factors the **stage** axis into ``(ppnode, stage)`` —
+  stage handoffs whose boundary crosses a node ride the slow links under
+  the aggressive ``pp_*_outer`` codec (this PR).
 
 Model code never names sub-axes directly: it goes through
-:func:`comm_axes` (or ``MeshInfo.tp_axes``), which resolves a logical
-axis name to either the flat axis or the :class:`~repro.core.compat.
-AxisPair` the hierarchical collectives dispatch on.
+:func:`comm_axes` (or ``MeshInfo.tp_axes`` / ``MeshInfo.stage_axes``),
+which resolves a logical axis name to either the flat axis or the
+:class:`~repro.core.compat.AxisPair` the hierarchical collectives
+dispatch on.
 """
 
 from __future__ import annotations
@@ -31,6 +37,8 @@ NODE_AXIS = "node"       # outer (inter-node, slow-link) DP sub-axis
 LOCAL_AXIS = "data"      # inner (intra-node, fast-link) DP sub-axis
 TP_NODE_AXIS = "tpnode"  # outer (inter-node, slow-link) model sub-axis
 MODEL_AXIS = "model"     # inner model sub-axis / flat model axis
+PP_NODE_AXIS = "ppnode"  # outer (inter-node, slow-link) stage sub-axis
+STAGE_AXIS = "stage"     # inner stage sub-axis / flat pipeline-stage axis
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -42,33 +50,59 @@ def make_production_mesh(*, multi_pod: bool = False):
     return compat.make_mesh(shape, axes, devices=jax.devices()[:need])
 
 
+def _first_devices(shape):
+    """First prod(shape) devices — lets several mesh sizes coexist in one
+    process (e.g. a pp=2 mesh and its pp=1 baseline on 8 host devices)."""
+    import jax
+    import math
+    need = math.prod(shape)
+    devs = jax.devices()
+    assert len(devs) >= need, f"need {need} devices, have {len(devs)}"
+    return devs[:need]
+
+
 def make_mesh(dp: int, tp: int, pod: int = 1, nodes: int = 1,
-              tp_nodes: int = 1):
+              tp_nodes: int = 1, pp: int = 1, pp_nodes: int = 1):
     """Arbitrary mesh for tests / elastic restarts / smoke runs.
 
-    ``nodes > 1`` factors the dp ways into ``(nodes, dp // nodes)`` as the
-    ``(node, data)`` sub-axis pair; ``tp_nodes > 1`` factors the tp ways
-    into ``(tp_nodes, tp // tp_nodes)`` as ``(tpnode, model)``.  ``pod``
-    and ``nodes`` are mutually exclusive outer-DP notions."""
-    if nodes > 1 or tp_nodes > 1:
+    Axis order is ``(pod?, node?, data, ppnode?, stage?, tpnode?, model)``
+    — batch axes outermost, pipeline stages between data and model, so
+    adjacent-stage ranks are mesh-adjacent within a (data, model) slice.
+    ``nodes > 1`` factors the dp ways into ``(node, data)``; ``tp_nodes``
+    factors tp into ``(tpnode, model)``; ``pp_nodes`` factors pp into
+    ``(ppnode, stage)``.  ``pod`` and ``nodes`` are mutually exclusive
+    outer-DP notions."""
+    if nodes > 1 or tp_nodes > 1 or pp_nodes > 1:
         assert pod == 1 or nodes == 1, "pod and nodes are mutually exclusive"
-        return make_hier_mesh(dp, tp, nodes, tp_nodes=tp_nodes, pod=pod)
+        return make_hier_mesh(dp, tp, nodes, tp_nodes=tp_nodes, pod=pod,
+                              pp=pp, pp_nodes=pp_nodes)
+    shape, axes = [], []
     if pod > 1:
-        return compat.make_mesh((pod, dp, tp), ("pod", "data", "model"))
-    return compat.make_mesh((dp, tp), ("data", "model"))
+        shape.append(pod)
+        axes.append("pod")
+    shape.append(dp)
+    axes.append(LOCAL_AXIS)
+    if pp > 1:
+        shape.append(pp)
+        axes.append(STAGE_AXIS)
+    shape.append(tp)
+    axes.append(MODEL_AXIS)
+    return compat.make_mesh(tuple(shape), tuple(axes),
+                            devices=_first_devices(shape))
 
 
 def make_hier_mesh(dp: int, tp: int, nodes: int = 1, tp_nodes: int = 1,
-                   pod: int = 1):
-    """Node-factored mesh: any of the data / model axes split in two.
+                   pod: int = 1, pp: int = 1, pp_nodes: int = 1):
+    """Node-factored mesh: any of the data / stage / model axes split in two.
 
     The total parallel degree of each logical axis is unchanged; a joint
-    ``(node, data)`` (resp. ``(tpnode, model)``) axis pair is what the
-    flat axis of size dp (resp. tp) would be, linearized node-major — so
-    flat and hierarchical collectives over the pair are interchangeable
-    rank-for-rank."""
+    ``(node, data)`` (resp. ``(ppnode, stage)``, ``(tpnode, model)``) axis
+    pair is what the flat axis of size dp (resp. pp, tp) would be,
+    linearized node-major — so flat and hierarchical collectives over the
+    pair are interchangeable rank-for-rank."""
     assert dp % nodes == 0, f"dp={dp} not divisible by nodes={nodes}"
     assert tp % tp_nodes == 0, f"tp={tp} not divisible by tp_nodes={tp_nodes}"
+    assert pp % pp_nodes == 0, f"pp={pp} not divisible by pp_nodes={pp_nodes}"
     shape, axes = [], []
     if pod > 1:
         shape.append(pod)
@@ -79,28 +113,39 @@ def make_hier_mesh(dp: int, tp: int, nodes: int = 1, tp_nodes: int = 1,
     else:
         shape.append(dp)
         axes.append(LOCAL_AXIS)
+    if pp_nodes > 1:
+        shape += [pp_nodes, pp // pp_nodes]
+        axes += [PP_NODE_AXIS, STAGE_AXIS]
+    elif pp > 1:
+        shape.append(pp)
+        axes.append(STAGE_AXIS)
     if tp_nodes > 1:
         shape += [tp_nodes, tp // tp_nodes]
         axes += [TP_NODE_AXIS, MODEL_AXIS]
     else:
         shape.append(tp)
         axes.append(MODEL_AXIS)
-    return compat.make_mesh(tuple(shape), tuple(axes))
+    return compat.make_mesh(tuple(shape), tuple(axes),
+                            devices=_first_devices(shape))
 
 
 def comm_axes(mesh, logical: str):
     """Axis resolution helper: logical parallelism axis -> comms axis.
 
-    Maps ``"data"`` / ``"model"`` to the flat axis name on an unfactored
-    mesh, or to the ``AxisPair(outer, inner)`` the hierarchical
+    Maps ``"data"`` / ``"stage"`` / ``"model"`` to the flat axis name on an
+    unfactored mesh, or to the ``AxisPair(outer, inner)`` the hierarchical
     collectives dispatch on when the mesh factors that axis over nodes.
-    Call this (or ``MeshInfo.tp_axes``, which this delegates to — one
-    source of truth for the resolution) instead of hard-coding sub-axis
-    names."""
+    Call this (or ``MeshInfo.tp_axes`` / ``MeshInfo.stage_axes``, which
+    this delegates to — one source of truth for the resolution) instead of
+    hard-coding sub-axis names."""
     from repro.models.params import MeshInfo
     mi = MeshInfo.from_mesh(mesh)
     if logical == "model":
         return mi.tp_axes
+    if logical == "stage":
+        axes = mi.stage_axes
+        assert axes is not None, "mesh has no stage axis"
+        return axes
     if logical == "data":
         if mi.node_axis and mi.node > 1:
             return compat.AxisPair(mi.node_axis, mi.data_axis)
@@ -110,8 +155,9 @@ def comm_axes(mesh, logical: str):
 
 
 def parse_nodes_spec(spec: str | int, ways: int, flag: str = "--nodes") -> int:
-    """--nodes / --tp-nodes spec -> node count: an int, or "NxD"
-    (nodes x ranks-per-node); ``ways`` is the parallel degree factored."""
+    """--nodes / --tp-nodes / --pp-nodes spec -> node count: an int, or
+    "NxD" (nodes x ranks-per-node); ``ways`` is the parallel degree
+    factored."""
     if isinstance(spec, int):
         nodes = spec
     elif "x" in str(spec):

@@ -3,15 +3,52 @@
     PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
         --dp 2 --tp 4 --steps 50 --scheme zhybrid_16_8 --ckpt-dir /tmp/ck
 
+    # pipeline-parallel: 2 stages, 4 microbatches (1F1B), compressed
+    # stage handoffs per the active scheme's pp codecs
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b --reduced \
+        --dp 2 --tp 2 --pp 2 --microbatches 4 --scheme hier_tpp_8_16
+
 Features exercised here: compressed-collective schemes, ZeRO-1(+3),
+microbatched 1F1B pipeline parallelism (--pp/--microbatches),
 deterministic resumable data, step/straggler monitoring, atomic async
-checkpointing, elastic restart (--resume on a different --dp/--tp).
+checkpointing of params AND optimizer state, elastic restart (--resume on
+a different --dp/--tp/--pp; Adam moments carry over when the topology
+matches, otherwise they reinitialize with a warning).
 """
 
 from __future__ import annotations
 
 import argparse
 import os
+
+
+def _restore_opt(trainer, params, opt_dir, step, mesh, checkpoint):
+    """Resume the optimizer state saved alongside the params.
+
+    Compat paths: a pre-opt-checkpoint run (no ``opt/`` subdir) or an
+    elastic restart whose new topology changes the opt-state layout both
+    fall back to ``opt_init`` — with a loud warning, since that resets
+    the Adam moments (the bug this replaces did it silently)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    if not opt_dir or checkpoint.latest_step(opt_dir) != step:
+        print("WARNING: no optimizer checkpoint for this step — "
+              "reinitializing Adam moments (old param-only checkpoint?)")
+        return trainer.opt_init(params)
+    ostructs = jax.eval_shape(trainer.opt_init, params)
+    osharding = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), trainer.opt_state_specs(),
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    try:
+        ostate, _ = checkpoint.restore(opt_dir, ostructs, step=step,
+                                       shardings=osharding)
+        print(f"restored optimizer state at step {step}")
+        return ostate
+    except (ValueError, AssertionError) as e:
+        print(f"WARNING: optimizer state not portable to this topology "
+              f"({e}) — reinitializing Adam moments")
+        return trainer.opt_init(params)
 
 
 def main():
@@ -21,6 +58,10 @@ def main():
                     help="family-preserving smoke-size config")
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline-parallel stages (explicit 'stage' mesh "
+                         "axis; layer groups partition into contiguous "
+                         "stages)")
     ap.add_argument("--pod", type=int, default=1)
     ap.add_argument("--nodes", default="1",
                     help="factor dp into (node, local) sub-axes for "
@@ -30,6 +71,14 @@ def main():
                     help="factor tp into (tpnode, model) sub-axes so the "
                          "model-layer TP/EP/PP collectives run their "
                          "two-level decompositions; an int or 'NxD'")
+    ap.add_argument("--pp-nodes", default="1",
+                    help="factor pp into (ppnode, stage) sub-axes: stage "
+                         "handoffs crossing a node boundary ride the "
+                         "aggressive pp_*_outer codec; an int or 'NxD'")
+    ap.add_argument("--microbatches", type=int, default=1,
+                    help="split the per-rank batch into N microbatches "
+                         "(1F1B schedule on a stage mesh, plain gradient "
+                         "accumulation otherwise)")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N XLA host devices (set before jax init)")
     ap.add_argument("--steps", type=int, default=20)
@@ -44,7 +93,7 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    n_dev = args.host_devices or (args.dp * args.tp * args.pod)
+    n_dev = args.host_devices or (args.dp * args.tp * args.pp * args.pod)
     if n_dev > 1:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={n_dev} "
@@ -61,23 +110,34 @@ def main():
     from repro.models.params import MeshInfo
     from repro.train import checkpoint, fault
     from repro.train.optimizer import AdamConfig
-    from repro.train.train_step import Trainer, batch_specs
+    from repro.train.train_step import batch_specs, make_trainer
 
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     nodes = parse_nodes_spec(args.nodes, args.dp)
     tp_nodes = parse_nodes_spec(args.tp_nodes, args.tp, flag="--tp-nodes")
+    pp_nodes = parse_nodes_spec(args.pp_nodes, args.pp, flag="--pp-nodes")
     mesh = make_mesh(args.dp, args.tp, args.pod, nodes=nodes,
-                     tp_nodes=tp_nodes)
+                     tp_nodes=tp_nodes, pp=args.pp, pp_nodes=pp_nodes)
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
-    trainer = Trainer(model, mesh, scheme=args.scheme,
-                      opt_cfg=AdamConfig(lr=args.lr,
-                                         state_bits=args.opt_state_bits))
+    trainer = make_trainer(model, mesh, scheme=args.scheme,
+                           opt_cfg=AdamConfig(lr=args.lr,
+                                              state_bits=args.opt_state_bits),
+                           n_micro=args.microbatches)
     data = SyntheticCorpus(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.global_batch, seed=args.seed))
+
+    opt_dir = os.path.join(args.ckpt_dir, "opt") if args.ckpt_dir else ""
+    pending = []
+
+    def save_all(step, blocking):
+        t1 = checkpoint.save(args.ckpt_dir, step, params, blocking=blocking)
+        t2 = checkpoint.save(opt_dir, step, ostate, blocking=blocking)
+        if not blocking:
+            pending.extend([t1, t2])
 
     start = 0
     if args.resume and args.ckpt_dir and \
@@ -85,14 +145,17 @@ def main():
         sh = checkpoint.resharded_specs(model.structs(), mesh)
         params, man = checkpoint.restore(args.ckpt_dir, model.structs(),
                                          shardings=sh)
-        ostate = trainer.opt_init(params)
         start = man["step"]
+        ostate = _restore_opt(trainer, params, opt_dir, start, mesh,
+                              checkpoint)
         print(f"resumed from step {start} (elastic onto dp={args.dp} "
-              f"tp={args.tp})")
+              f"tp={args.tp} pp={args.pp})")
     else:
         params, ostate = trainer.init_all(jax.random.key(args.seed))
 
     bspecs = batch_specs(cfg, mi)
+    if args.ckpt_dir:
+        os.makedirs(args.ckpt_dir, exist_ok=True)
     mon = fault.StepMonitor(
         heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat.json")
         if args.ckpt_dir else None)
@@ -110,9 +173,12 @@ def main():
                   f"dt={info['dt']:.2f}s"
                   + (" STRAGGLER" if info["straggler"] else ""))
         if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
-            checkpoint.save(args.ckpt_dir, step + 1, params, blocking=False)
+            save_all(step + 1, blocking=False)
     if args.ckpt_dir:
-        checkpoint.save(args.ckpt_dir, start + args.steps, params)
+        for t in pending:
+            t.join()
+        if checkpoint.latest_step(args.ckpt_dir) != start + args.steps:
+            save_all(start + args.steps, blocking=True)
         print(f"checkpointed at step {start + args.steps}")
     print(f"done: final loss {float(metrics['loss']):.4f}, "
           f"teacher floor {data.optimal_xent():.4f}, "

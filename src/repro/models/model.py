@@ -25,6 +25,10 @@ class Model:
         self.cfg = cfg
         self.mi = mi
         self.mode = cfg.attn_mode_for(mi.tp)
+        # pp > 1: the plan's layer groups describe ONE stage (stage-stacked
+        # leading dim); the pipeline trainer drives them via run_stage.
+        self.stage_groups = transformer.stage_partition(cfg, mi.pp) \
+            if mi.pp > 1 else None
         self.plan = transformer.model_plan(cfg, mi)
 
     # -- params ----------------------------------------------------------
@@ -70,18 +74,15 @@ class Model:
             x = jnp.where(mask, batch["vision"].astype(x.dtype), x)
         return x
 
-    # -- training forward + loss -----------------------------------------
-    def forward(self, params, batch, phase="train"):
-        """Returns (logits [B,S_loc,V_loc] f32, caches, aux)."""
-        cfg, mi = self.cfg, self.mi
-        cross = cross_pos = None
-        if cfg.encoder_layers:
-            cross, cross_pos = self._encode(params, batch["frames"], phase)
-        x = self._embed_input(params, batch)
-        B, S_loc = x.shape[:2]
-        pos = self._positions(B, S_loc)
-        pos3 = batch.get("pos3") if cfg.mrope else None
+    # -- decoder layer stack (shared by forward and the pp=1 microbatch
+    #    loop in repro.train.pipeline) --------------------------------------
+    def run_decoder(self, params, x, pos, phase="train", cross=None,
+                    cross_pos=None, pos3=None):
+        """All decoder layer groups on ``x`` (enc_attn groups skipped).
 
+        Returns ``(x, caches, aux)`` — the one copy of the run_group +
+        aux-accumulation loop every flat-mesh consumer shares."""
+        cfg, mi = self.cfg, self.mi
         caches, aux_tot = [], transformer._zero_aux()
         for i, g in enumerate(cfg.layer_groups):
             if g.kind == "enc_attn":
@@ -93,6 +94,43 @@ class Model:
                 cross_pos=cross_pos, pos3=pos3)
             caches.append(cache)
             aux_tot = jax.tree.map(lambda a, b: a + b, aux_tot, aux)
+        return x, caches, aux_tot
+
+    # -- pipeline-parallel stage body ------------------------------------
+    def run_stage(self, params, x, pos, phase="train"):
+        """This stage rank's layer stack on ``x`` (inside shard_map).
+
+        Only valid when ``mi.pp > 1``: ``params["groups"]`` carry a local
+        leading stage dim of 1, sliced off here.  Returns ``(x, aux)``;
+        embedding / head stay with the caller (the 1F1B schedule in
+        :mod:`repro.train.pipeline` injects / drains them on the first /
+        last stage)."""
+        cfg, mi = self.cfg, self.mi
+        aux_tot = transformer._zero_aux()
+        for i, g in enumerate(self.stage_groups):
+            gp = transformer.take_stage(params["groups"][i])
+            x, _, aux = transformer.run_group(gp, x, g, cfg, mi, self.mode,
+                                              pos, phase)
+            aux_tot = jax.tree.map(lambda a, b: a + b, aux_tot, aux)
+        return x, aux_tot
+
+    # -- training forward + loss -----------------------------------------
+    def forward(self, params, batch, phase="train"):
+        """Returns (logits [B,S_loc,V_loc] f32, caches, aux)."""
+        cfg, mi = self.cfg, self.mi
+        assert mi.pp == 1, \
+            "flat forward on a stage mesh — use repro.train.pipeline"
+        cross = cross_pos = None
+        if cfg.encoder_layers:
+            cross, cross_pos = self._encode(params, batch["frames"], phase)
+        x = self._embed_input(params, batch)
+        B, S_loc = x.shape[:2]
+        pos = self._positions(B, S_loc)
+        pos3 = batch.get("pos3") if cfg.mrope else None
+
+        x, caches, aux_tot = self.run_decoder(
+            params, x, pos, phase, cross=cross, cross_pos=cross_pos,
+            pos3=pos3)
         x = layers.norm(params["final_norm"], x, cfg, mi)
         logits = layers.lm_head_logits(params, x, cfg, mi)
         return logits, caches, aux_tot

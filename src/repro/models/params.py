@@ -28,23 +28,30 @@ from repro.core import compat
 class MeshInfo:
     """Logical view of the device mesh the model code shards over.
 
-    ``tp`` is always the TOTAL tensor/expert-parallel degree.  On a
-    tp-node-factored mesh (``--tp-nodes``) the physical model axis splits
-    into ``(tp_node_axis, model_axis)`` sub-axes of sizes ``(tp_node,
-    tp // tp_node)``; model code addresses the joint axis through
-    :attr:`tp_axes`, which the collectives in :mod:`repro.core.comms`
-    dispatch on (AxisPair -> hierarchical two-level ops)."""
+    ``tp`` is always the TOTAL tensor/expert-parallel degree, and ``pp``
+    the TOTAL pipeline-stage count.  On a tp-node-factored mesh
+    (``--tp-nodes``) the physical model axis splits into ``(tp_node_axis,
+    model_axis)`` sub-axes of sizes ``(tp_node, tp // tp_node)``; model
+    code addresses the joint axis through :attr:`tp_axes`, which the
+    collectives in :mod:`repro.core.comms` dispatch on (AxisPair ->
+    hierarchical two-level ops).  The pipeline ``stage`` axis factors the
+    same way (``--pp-nodes`` -> ``(pp_node_axis, stage_axis)``), addressed
+    through :attr:`stage_axes`."""
 
     tp: int = 1
     dp: int = 1
     pod: int = 1
     node: int = 1
     tp_node: int = 1
+    pp: int = 1
+    pp_node: int = 1
     model_axis: str = "model"
     data_axis: str = "data"
     pod_axis: str | None = None
     node_axis: str | None = None
     tp_node_axis: str | None = None
+    stage_axis: str | None = None
+    pp_node_axis: str | None = None
 
     @property
     def batch_axes(self):
@@ -78,8 +85,29 @@ class MeshInfo:
         return (self.model_axis,)
 
     @property
+    def stage_axes(self):
+        """The axis the pipeline trainer passes to comms for stage
+        handoffs: the flat stage axis name, the ``AxisPair(outer, inner)``
+        of a pp-node-factored mesh (which routes hierarchical), or None on
+        a mesh without a stage axis."""
+        if self.stage_axis is None:
+            return None
+        if self.pp_node_axis and self.pp_node > 1:
+            return compat.AxisPair(self.pp_node_axis, self.stage_axis)
+        return self.stage_axis
+
+    @property
+    def sp_axes(self) -> tuple:
+        """All physical mesh axes implementing pipeline stages."""
+        if self.stage_axis is None:
+            return ()
+        if self.pp_node_axis and self.pp_node > 1:
+            return (self.pp_node_axis, self.stage_axis)
+        return (self.stage_axis,)
+
+    @property
     def all_axes(self):
-        return self.batch_axes + self.mp_axes
+        return self.batch_axes + self.sp_axes + self.mp_axes
 
     @classmethod
     def from_mesh(cls, mesh) -> "MeshInfo":
@@ -88,9 +116,13 @@ class MeshInfo:
                    dp=ax.get("data", 1),
                    pod=ax.get("pod", 1), node=ax.get("node", 1),
                    tp_node=ax.get("tpnode", 1),
+                   pp=ax.get("stage", 1) * ax.get("ppnode", 1),
+                   pp_node=ax.get("ppnode", 1),
                    pod_axis="pod" if "pod" in ax else None,
                    node_axis="node" if "node" in ax else None,
-                   tp_node_axis="tpnode" if "tpnode" in ax else None)
+                   tp_node_axis="tpnode" if "tpnode" in ax else None,
+                   stage_axis="stage" if "stage" in ax else None,
+                   pp_node_axis="ppnode" if "ppnode" in ax else None)
 
 
 @dataclasses.dataclass
@@ -201,12 +233,21 @@ def physical_spec(spec: tuple, mi: "MeshInfo | None") -> P:
     """Logical per-dim spec -> PartitionSpec on ``mi``'s physical mesh.
 
     A ``"model"`` entry shards over the joint model axes (the
-    ``(tpnode, model)`` pair on a tp-node-factored mesh); ``"data"``
-    stays the inner data axis (ZeRO-3 shards intra-node by design — the
-    optimizer handles the node level explicitly)."""
-    if mi is None or not (mi.tp_node_axis and mi.tp_node > 1):
+    ``(tpnode, model)`` pair on a tp-node-factored mesh) and a ``"stage"``
+    entry over the joint stage axes (``(ppnode, stage)`` when pp is
+    node-factored); ``"data"`` stays the inner data axis (ZeRO-3 shards
+    intra-node by design — the optimizer handles the node level
+    explicitly)."""
+    if mi is None:
         return P(*spec)
-    return P(*[tuple(mi.mp_axes) if e == "model" else e for e in spec])
+
+    def tr(e):
+        if e == "model" and mi.tp_node_axis and mi.tp_node > 1:
+            return tuple(mi.mp_axes)
+        if e == "stage" and mi.pp_node_axis and mi.pp_node > 1:
+            return tuple(mi.sp_axes)
+        return e
+    return P(*[tr(e) for e in spec])
 
 
 def param_specs(plan, mi: "MeshInfo | None" = None):
@@ -239,6 +280,8 @@ def local_shape(d: ParamDef, mi: MeshInfo) -> tuple:
             out.append(s // mi.tp)
         elif sp == "data":
             out.append(s // mi.dp)
+        elif sp == "stage":
+            out.append(s // mi.pp)
         else:
             out.append(s)
     return tuple(out)

@@ -62,6 +62,15 @@ def _stack(plan, n: int):
                                       spec=(None,) + d.spec), plan)
 
 
+def _stage_stack(plan, pp: int):
+    """Prepend a leading stage dim sharded over the stage mesh axis, so
+    each stage rank materializes (inits, checkpoints, reshards) only its
+    own layers."""
+    return tree_map_defs(
+        lambda d: dataclasses.replace(d, shape=(pp,) + d.shape,
+                                      spec=("stage",) + d.spec), plan)
+
+
 def _unstack_pv(tree):
     """After lax.scan slices a stacked group, drop the leading spec entry."""
     return jax.tree_util.tree_map(
@@ -69,17 +78,76 @@ def _unstack_pv(tree):
         is_leaf=lambda x: isinstance(x, Pv))
 
 
+def take_stage(tree):
+    """Local (inside shard_map) stage-stacked group params ``[1, n, ...]``
+    -> this stage rank's ``[n, ...]`` slice (drop the stage dim + spec)."""
+    return jax.tree_util.tree_map(
+        lambda pv: Pv(lax.squeeze(pv.v, (0,)), pv.spec[1:]), tree,
+        is_leaf=lambda x: isinstance(x, Pv))
+
+
+# kinds the stage-stacked SPMD pipeline plan cannot express: encoder
+# context (cross-attention) and cross-stage weight sharing both couple
+# layers that would live on different stages.
+_PP_UNSUPPORTED = ("enc_attn", "dec_attn", "shared_attn")
+
+
+def stage_partition(cfg: ArchConfig, pp: int) -> tuple:
+    """Partition the layer stack into ``pp`` contiguous, identical stages.
+
+    Returns the BlockGroup plan of ONE stage (all stages share it — the
+    SPMD pipeline runs one program with stage-stacked weights, so every
+    stage must execute the same layer sequence).  Raises ValueError when
+    the per-layer (kind, window) sequence does not tile into ``pp`` equal
+    contiguous chunks."""
+    per_layer = [(g.kind, g.window) for g in cfg.layer_groups
+                 for _ in range(g.n)]
+    bad = sorted({k for k, _ in per_layer if k in _PP_UNSUPPORTED})
+    if bad:
+        raise ValueError(
+            f"pipeline stages cannot hold {bad} layers (encoder context / "
+            "cross-stage weight sharing)")
+    total = len(per_layer)
+    if total % pp:
+        raise ValueError(f"{total} layers do not split into pp={pp} stages")
+    per = total // pp
+    first = per_layer[:per]
+    for s in range(1, pp):
+        if per_layer[s * per:(s + 1) * per] != first:
+            raise ValueError(
+                f"stages are not identical: stage {s} is "
+                f"{per_layer[s * per:(s + 1) * per]}, stage 0 is {first} — "
+                "the SPMD 1F1B schedule needs a uniform per-stage layer "
+                "sequence")
+    groups = []
+    for kind, window in first:
+        if groups and groups[-1].kind == kind and groups[-1].window == window:
+            groups[-1] = dataclasses.replace(groups[-1], n=groups[-1].n + 1)
+        else:
+            groups.append(BlockGroup(kind, 1, window=window))
+    return tuple(groups)
+
+
 def model_plan(cfg: ArchConfig, mi: MeshInfo):
     mode = cfg.attn_mode_for(mi.tp)
     plan = {"embed": layers.embed_plan(cfg)}
     plan.update(layers.lm_head_plan(cfg))
     plan["final_norm"] = layers.norm_plan(cfg, cfg.d_model)
+    # pp > 1: groups describe ONE stage and carry a leading stage dim;
+    # the embedding / final norm / head stay stage-replicated — they are
+    # *consumed* on the first (embed) and last (head) stage only, and
+    # their gradients are psum'd over the stage axis by the optimizer.
+    stage_groups = stage_partition(cfg, mi.pp) if mi.pp > 1 \
+        else cfg.layer_groups
     groups = []
-    for g in cfg.layer_groups:
+    for g in stage_groups:
         gp = block_plan(cfg, g.kind, mode)
         if cfg.fsdp_params:
             gp = apply_fsdp(gp, mi.dp)
-        groups.append(_stack(gp, g.n))
+        gp = _stack(gp, g.n)
+        if mi.pp > 1:
+            gp = _stage_stack(gp, mi.pp)
+        groups.append(gp)
     plan["groups"] = groups
     if any(g.kind == "shared_attn" for g in cfg.layer_groups):
         sp = block_plan(cfg, "attn", mode)

@@ -101,12 +101,43 @@ def latest_step(ckpt_dir) -> int | None:
     return manifest["step"]
 
 
+def stage_reshape(a: np.ndarray, target_shape: tuple) -> np.ndarray:
+    """Elastic-pp reshape: remap a (possibly stage-stacked) group leaf
+    saved under one ``--pp`` onto another.
+
+    Stage-major x layer-minor linearization IS contiguous layer order, so
+    ``(pp_old, n_old, ...)`` -> ``(pp_new, n_new, ...)`` (and the pp=1
+    degenerate ``(n, ...)`` forms) is a plain reshape whenever the trailing
+    per-layer dims agree and the total layer count matches."""
+    ts = tuple(target_shape)
+    if tuple(a.shape) == ts:
+        return a
+    if _merge_compatible(tuple(a.shape), ts):
+        return a.reshape(ts)
+    raise ValueError(f"cannot reshape checkpoint leaf {a.shape} -> {ts}")
+
+
+def _merge_compatible(src: tuple, dst: tuple) -> bool:
+    """True when src/dst differ only in how the leading (stage, layer)
+    dims factor the same layer count over identical per-layer shapes."""
+    import math
+    for k in (1, 2):
+        if len(src) - k >= 0 and len(dst) >= 1:
+            for j in (1, 2):
+                if src[k:] == dst[j:] and \
+                        math.prod(src[:k]) == math.prod(dst[:j]):
+                    return True
+    return False
+
+
 def restore(ckpt_dir, tree_like, step: int | None = None,
             shardings=None):
     """Restore into the structure of ``tree_like``.
 
     shardings: optional matching pytree of jax.sharding.Sharding — pass the
     NEW mesh's shardings to restore elastically onto a different topology.
+    Stage-stacked leaves whose stage factoring changed (restart under a
+    different ``--pp``) are re-linearized via :func:`stage_reshape`.
     """
     ckpt_dir = pathlib.Path(ckpt_dir)
     src = ckpt_dir / ("latest" if step is None else f"step_{step}")
@@ -120,12 +151,18 @@ def restore(ckpt_dir, tree_like, step: int | None = None,
         sh_leaves, _ = _flatten(shardings)
     for i, (l, m) in enumerate(zip(leaves, manifest["meta"])):
         a = np.load(src / "leaves" / f"{i}.npy")
+        want = l.v if _is_pv(l) else l
+        spec = tuple(m["spec"]) if m["pv"] else ()
+        if hasattr(want, "shape") and tuple(a.shape) != tuple(want.shape):
+            a = stage_reshape(a, tuple(want.shape))
+            if m["pv"]:  # the target plan's spec, not the saved one
+                spec = l.spec
         sh = None
         if sh_leaves is not None:
             s = sh_leaves[i]
             sh = s.v if _is_pv(s) else s
         arr = jax.device_put(a, sh) if sh is not None else jax.device_put(a)
-        out.append(Pv(arr, tuple(m["spec"])) if m["pv"] else arr)
+        out.append(Pv(arr, spec) if m["pv"] else arr)
     return jax.tree_util.tree_unflatten(treedef, out), manifest
 
 

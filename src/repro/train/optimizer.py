@@ -19,6 +19,13 @@ Multi-pod: the flat chunk is additionally psum'd over the 'pod' axis with
 the DP codec — the cross-pod hop is the slowest-link traffic the paper
 compresses hardest.
 
+Pipeline mesh (explicit 'stage' axis): ZeRO stays over 'data' only — each
+stage rank's flat vector holds its *own* stage's layer shards, so the
+chunks are per-stage-local by construction.  Stage-replicated leaves
+(embedding / head / final norm) carry partial grads per stage and fold
+over the stage axis under the ``pp_bwd`` codec first (the classic
+first/last-stage tied-embedding grad sync, generalized).
+
 Multi-node (hierarchical, ZeRO++-style): on a (node, data, model) mesh the
 flat DP sync becomes two-level — reduce-scatter over the intra-node 'data'
 sub-axis under the ``dp_inner`` (mild) codec, then all-reduce of the 1/dp
@@ -180,6 +187,26 @@ class Adam:
             gleaves = [Pv(next(it), g.spec) if c == "C" else g
                        for g, c in zip(gleaves, classes)]
 
+        # -- stage-replicated leaves on a pipeline mesh (embedding / head /
+        # final norm — "stage" not in spec): each stage rank holds a
+        # *partial* grad (the embedding is consumed on the first stage, the
+        # head on the last), folded over the stage axis under the PP
+        # backward codec (pp_bwd_inner / pp_bwd_outer when the stage axis
+        # is node-factored) before joining the DP sync.  Stage-sharded
+        # leaves (each rank's own layers) need no fold.
+        if mi.pp > 1:
+            srep = [(i, g) for i, (g, c) in enumerate(zip(gleaves, classes))
+                    if c != "A" and "stage" not in g.spec]
+            if srep:
+                sflat = _flat_concat([g.v for _, g in srep])
+                sflat = comms.psum(sflat, mi.stage_axes, "pp_bwd")
+                off = 0
+                for i, g in srep:
+                    n = g.v.size
+                    gleaves[i] = Pv(sflat[off:off + n].reshape(g.v.shape),
+                                    g.spec)
+                    off += n
+
         # -- global grad-norm clip.  Each class's squared sum is divided by
         # its replication factor so the psum over all axes counts every
         # parameter exactly once.  (Cross-pod partials are approximated by
@@ -192,7 +219,11 @@ class Adam:
                "C": mi.dp * mi.tp * pod * node}
         sq = jnp.float32(0.0)
         for g, c in zip(gleaves, classes):
-            sq = sq + jnp.sum(g.v.astype(_F32) ** 2) / rep[c]
+            # stage-sharded leaves are distinct per stage rank (counted
+            # once by the psum over all axes); stage-replicated leaves were
+            # just folded over the stage axis, so divide their square out
+            r = rep[c] * (mi.pp if mi.pp > 1 and "stage" not in g.spec else 1)
+            sq = sq + jnp.sum(g.v.astype(_F32) ** 2) / r
         sq = comms.varying_all(sq, mi.all_axes)
         sq = lax.psum(sq, mi.all_axes)
         gnorm = jnp.sqrt(sq)
@@ -207,6 +238,8 @@ class Adam:
             gv = g.v.astype(_F32)
             if "model" not in g.spec:
                 gv = comms.psum(gv, mi.tp_axes, "tp_bwd")
+            # (no stage fold here: fsdp only annotates layer-group plans,
+            # which are always stage-stacked on a pipeline mesh)
             if mi.node_axis:
                 gv = comms.psum(gv, mi.node_axis, "dp_outer")
             if mi.pod_axis:

@@ -1,0 +1,171 @@
+"""Microbatched pipeline-parallel training over the ``stage`` mesh axis.
+
+The schedule is the SPMD form of GPipe/1F1B: one program runs on every
+stage rank; the local batch splits into ``n_micro`` microbatches and the
+step executes ``T = n_micro + pp - 1`` *ticks*.  At tick ``t`` stage ``s``
+processes microbatch ``t - s`` (masked outside the fill/drain window):
+
+    tick          0     1     2     3       (pp = 2, n_micro = 3)
+    stage 0     mb0   mb1   mb2    --
+    stage 1      --   mb0   mb1   mb2      -> loss(mb) as each drains
+
+* the **first** stage injects the embedded microbatch entering the pipe;
+* every other stage consumes the activation handed off by its
+  predecessor via :func:`repro.core.comms.stage_send` — a partial shift
+  along the stage axis that encodes under the scheme's ``pp_fwd`` codec
+  (``pp_fwd_inner`` / ``pp_fwd_outer`` when the stage axis is
+  node-factored) and whose ``custom_vjp`` backward returns the activation
+  gradient upstream under ``pp_bwd`` — PP traffic finally rides the
+  compression path and the per-dimension ledger;
+* the **last** stage drains: final norm + LM head + vocab-parallel
+  cross-entropy per microbatch, accumulated into the global token mean.
+
+Autodiff through the tick scan yields the interleaved backward schedule
+(gradient accumulation across microbatches comes out of the scan-reverse
+for free); the optimizer then syncs gradients over ``data`` exactly as in
+the flat trainer — per-stage param subsets keep ZeRO-1 chunks local to
+each stage rank, while the stage-*replicated* embedding / head / final
+norm fold their partial grads over the stage axis (``pp_bwd`` codec)
+inside :meth:`repro.train.optimizer.Adam.apply`.
+
+With identity codecs the pipelined step is bit-exact against the same
+microbatched loop on a stage-free mesh (``tests/multidev/pp_check.py``);
+with a ``hier_tpp_*`` scheme the stage handoffs crossing a node boundary
+ride the aggressive outer codec.  ``pp == 1`` degenerates to plain
+gradient accumulation — microbatching without pipelining.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core import compat
+from repro.models import layers, transformer
+from repro.models.model import _LB_COEF, Model
+from repro.train.train_step import Trainer
+
+_F32 = jnp.float32
+
+
+def _stage_body(model: Model, params, x, pos, cross=None, cross_pos=None,
+                pos3=None):
+    """One stage's layer stack: ``run_stage`` on a stage mesh, the full
+    decoder on a flat one (so pp=1 runs the identical per-layer ops —
+    including shared_attn / cross-attention / M-RoPE, which only the flat
+    path allows)."""
+    if model.mi.pp > 1:
+        return model.run_stage(params, x, pos)
+    x, _, aux = model.run_decoder(params, x, pos, "train", cross=cross,
+                                  cross_pos=cross_pos, pos3=pos3)
+    return x, aux
+
+
+def pipeline_loss_fn(model: Model, n_micro: int):
+    """Build the microbatched 1F1B loss callable (runs inside shard_map).
+
+    Same ``(params, batch) -> (loss, metrics)`` contract as
+    ``Model.loss_fn``: global-mean token cross-entropy (+ MoE aux),
+    scalar, replicated over every mesh axis."""
+    cfg, mi = model.cfg, model.mi
+    assert mi.pp == 1 or (not cfg.encoder_layers and not cfg.mrope), \
+        "encoder / vision inputs are not pipelineable (cross-stage " \
+        "context) — pp=1 gradient accumulation supports them"
+    pp, M = mi.pp, n_micro
+    stage_ax = mi.stage_axes
+
+    def loss_fn(params, batch):
+        from repro.core import comms
+        B, S = batch["tokens"].shape
+        assert B % M == 0, f"local batch {B} not divisible by {M} microbatches"
+        mb = {k: v.reshape((M, B // M) + v.shape[1:])
+              for k, v in batch.items()}
+        T = M + pp - 1
+        sidx = compat.axis_index(stage_ax) if pp > 1 else 0
+        pos = model._positions(B // M, S // mi.tp if mi.tp > 1 else S)
+
+        def tick(carry, t):
+            y, num, den, aux = carry
+            # 1. handoff: my previous tick's output moves one stage down
+            #    the pipe (pp_fwd codec; bwd returns the grad under pp_bwd)
+            recv = comms.stage_send(y, stage_ax) if pp > 1 else None
+            # 2. stage-0 input: the microbatch entering the pipe this tick
+            #    (clamped during drain — those outputs never reach the
+            #    last stage within T ticks, so their grads are zero)
+            bt = {k: lax.dynamic_index_in_dim(v, jnp.clip(t, 0, M - 1), 0,
+                                              keepdims=False)
+                  for k, v in mb.items()}
+            cross = cross_pos = None
+            if cfg.encoder_layers:  # pp == 1 only (asserted above)
+                cross, cross_pos = model._encode(params, bt["frames"],
+                                                 "train")
+            e = model._embed_input(params, bt)
+            x_in = jnp.where(sidx == 0, e, recv) if pp > 1 else e
+            # 3. this stage's layers
+            y, aux_t = _stage_body(
+                model, params, x_in, pos, cross=cross, cross_pos=cross_pos,
+                pos3=bt.get("pos3") if cfg.mrope else None)
+            # 4. drain: head + per-token xent for the microbatch leaving
+            #    the pipe; only the last stage past the fill window counts
+            xo = layers.norm(params["final_norm"], y, cfg, mi)
+            logits = layers.lm_head_logits(params, xo, cfg, mi)
+            lab = lax.dynamic_index_in_dim(
+                mb["labels"], jnp.clip(t - (pp - 1), 0, M - 1), 0,
+                keepdims=False)
+            ltok, w = layers.vocab_parallel_xent(logits, lab, cfg, mi)
+            valid = (t >= pp - 1) & (sidx == pp - 1)
+            num = num + jnp.where(valid, jnp.sum(ltok), 0.0)
+            den = den + jnp.where(valid, jnp.sum(w), 0.0)
+            # 5. aux terms count the ticks this stage held a real microbatch
+            live = (t >= sidx) & (t < sidx + M)
+            aux = jax.tree.map(
+                lambda a, b: a + jnp.where(live, b, 0.0), aux, aux_t)
+            return comms.varying_all((y, num, den, aux), mi.all_axes), None
+
+        x0 = jnp.zeros((B // M, S // mi.tp if mi.tp > 1 else S, cfg.d_model),
+                       jnp.dtype(cfg.dtype))
+        carry0 = (x0, _F32(0.0), _F32(0.0), transformer._zero_aux())
+        carry0 = comms.varying_all(carry0, mi.all_axes)
+        # ledger: the tick body is traced once, runs T times
+        with comms.scope_mult(T):
+            (_, num, den, aux), _ = lax.scan(tick, carry0, jnp.arange(T))
+
+        # fold the masked per-stage partials: last stage holds num/den,
+        # each stage its own layers' aux (tiny scalars — plain psum)
+        if pp > 1:
+            num = lax.psum(num, mi.sp_axes)
+            den = lax.psum(den, mi.sp_axes)
+            aux = jax.tree.map(lambda a: lax.psum(a, mi.sp_axes), aux)
+        num, den = comms.varying_all((num, den), mi.all_axes)
+        num = lax.psum(num, mi.batch_axes)
+        den = lax.psum(den, mi.batch_axes)
+        num = lax.pmean(num, mi.mp_axes)
+        den = lax.pmean(den, mi.mp_axes)
+        loss = num / jnp.maximum(den, 1.0)
+        if cfg.n_experts:
+            # per-microbatch means sum to M x the full-batch mean
+            lb = lax.pmean(aux["lb_loss"], mi.mp_axes + mi.batch_axes) / M
+            loss = loss + _LB_COEF * lb
+        metrics = {"xent": num / jnp.maximum(den, 1.0), "tokens": den}
+        return loss, metrics
+
+    return loss_fn
+
+
+class PipelineTrainer(Trainer):
+    """Drop-in :class:`~repro.train.train_step.Trainer` running the
+    microbatched 1F1B schedule; on a stage-free mesh it degenerates to
+    plain gradient accumulation over ``n_micro`` microbatches."""
+
+    def __init__(self, model: Model, mesh, scheme="baseline", opt_cfg=None,
+                 n_micro: int = 1, ring_bidir: bool = False):
+        self.n_micro = n_micro
+        super().__init__(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
+                         ring_bidir=ring_bidir)
+
+    def _check_mesh(self):
+        pass  # any mesh: pp > 1 pipelines, pp == 1 just microbatches
+
+    def _loss_fn(self):
+        return pipeline_loss_fn(self.model, self.n_micro)

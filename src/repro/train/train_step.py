@@ -49,19 +49,39 @@ class Trainer:
         self.scheme = schemes.get(scheme)
         self.ring_bidir = ring_bidir
         self.opt = Adam(opt_cfg or AdamConfig(), model.mi)
+        self._check_mesh()
         self._build()
 
     # ------------------------------------------------------------------
+    def _check_mesh(self):
+        assert self.model.mi.pp == 1, \
+            "mesh has a pipeline stage axis — use " \
+            "repro.train.pipeline.PipelineTrainer (or make_trainer)"
+
+    def _loss_fn(self):
+        """The per-step loss callable (inside shard_map); the pipeline
+        trainer overrides this with the microbatched 1F1B schedule."""
+        return self.model.loss_fn
+
+    # ------------------------------------------------------------------
     def opt_state_specs(self):
+        from repro.models.params import physical_spec
+        mi = self.model.mi
         leaves, _, classes = _split_classes(self.model.structs())
         fsdp = []
         for l, c in zip(leaves, classes):
             if c != "A":
                 fsdp.append(None)
             else:
-                fsdp.append({"master": P(*l.spec), "m": P(*l.spec),
-                             "v": P(*l.spec)})
-        zero1 = P(self.model.mi.data_axis)
+                sp = physical_spec(l.spec, mi)
+                fsdp.append({"master": sp, "m": sp, "v": sp})
+        # the ZeRO-1 flat chunk is a *different* vector on every stage /
+        # model rank (it flattens that rank's local B/C shards), so its
+        # global layout shards over the joint (stage?, model, data) axes —
+        # this is what makes a host round-trip (checkpoint save/restore of
+        # opt_state) lossless instead of silently keeping one replica.
+        joint = tuple(mi.sp_axes) + tuple(mi.mp_axes) + (mi.data_axis,)
+        zero1 = P(joint)
         if self.opt.cfg.state_bits == 8:
             mv = {"q_hi": zero1, "q_lo": None, "scale": zero1}
         else:
@@ -77,11 +97,13 @@ class Trainer:
 
         from repro.core import comms
 
+        loss_fn = self._loss_fn()
+
         def step_fn(params, opt_state, batch):
             with schemes.use(self.scheme), comms.vma_mode(False), \
                     comms.ring_options(self.ring_bidir):
                 (loss, metrics), grads = jax.value_and_grad(
-                    model.loss_fn, has_aux=True)(params, batch)
+                    loss_fn, has_aux=True)(params, batch)
                 params, opt_state, stats = opt.apply(params, grads, opt_state)
             return params, opt_state, {"loss": loss, **metrics, **stats}
 
@@ -103,3 +125,17 @@ class Trainer:
         """Initialize params + optimizer state (device-resident, sharded)."""
         params = self.model.init(key)
         return params, self.opt_init(params)
+
+
+def make_trainer(model: Model, mesh, scheme="baseline",
+                 opt_cfg: AdamConfig | None = None, n_micro: int = 1,
+                 ring_bidir: bool = False):
+    """Trainer factory: the flat single-program step on an unfactored
+    batch, or the microbatched 1F1B pipeline trainer when the mesh has a
+    stage axis or gradient accumulation (``n_micro > 1``) is requested."""
+    if model.mi.pp > 1 or n_micro > 1:
+        from repro.train.pipeline import PipelineTrainer
+        return PipelineTrainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
+                               n_micro=n_micro, ring_bidir=ring_bidir)
+    return Trainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
+                   ring_bidir=ring_bidir)

@@ -1,14 +1,19 @@
-"""Docs CI: validate markdown cross-links (relative paths + anchors).
+"""Docs CI: validate markdown cross-links (relative paths + anchors) and
+CLI-flag references.
 
 Stdlib-only.  Scans every ``*.md`` in the repo (skipping generated build
 dirs), extracts ``[text](target)`` links, and fails if
 
 * a relative link points at a file that does not exist, or
 * a ``path#anchor`` / ``#anchor`` fragment names a heading that is not
-  present in the target file (GitHub-style slugs).
+  present in the target file (GitHub-style slugs), or
+* an inline-code CLI flag (`` `--pp ...` ``) names a flag no
+  ``add_argument`` in the repo's entry points defines — stale flag docs
+  (e.g. a renamed ``--pp``) fail instead of rotting.
 
-External links (``http://`` / ``https://`` / ``mailto:``) are not
-fetched — CI must not depend on network.  Run locally with::
+``--xla*`` flags (XLA's own) are exempt.  External links (``http://`` /
+``https://`` / ``mailto:``) are not fetched — CI must not depend on
+network.  Run locally with::
 
     python tools/check_docs.py
 """
@@ -21,7 +26,7 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parents[1]
 SKIP_DIRS = {".git", ".github", "node_modules", "__pycache__", ".venv",
-             "results"}
+             "results", ".pytest_cache"}
 
 # [text](target) — won't match ![img](...) differently (images are links
 # too and should also resolve); ignores ```code fences``` via scrubbing.
@@ -60,10 +65,68 @@ def anchors_of(path: pathlib.Path) -> set[str]:
     return out
 
 
+# `--flag` at the start of an inline code span (``--xla*`` belongs to XLA)
+_FLAG_RE = re.compile(r"`(--[a-zA-Z][a-zA-Z0-9_-]*)")
+# bare flags inside shell-ish fenced blocks (usage examples)
+_SHELL_FENCE_RE = re.compile(r"```(?:bash|sh|shell|console)?\n(.*?)```",
+                             re.DOTALL)
+_BARE_FLAG_RE = re.compile(r"(?<![\w`=-])(--[a-zA-Z][a-zA-Z0-9_-]*)")
+# fence lines are only checked when they invoke one of OUR entry points —
+# third-party commands (pip, pytest, git...) carry their own flags
+_OWN_CMD_RE = re.compile(r"repro\.|benchmarks[/.]|tools/|examples/")
+# documented third-party flags that are fine in inline code spans
+_EXEMPT_FLAGS = {"--xla_force_host_platform_device_count"}
+
+
+def _flag_exempt(flag: str) -> bool:
+    return flag.startswith("--xla") or flag in _EXEMPT_FLAGS
+_ADD_ARG_RE = re.compile(r"add_argument\(\s*['\"](--[a-zA-Z][a-zA-Z0-9_-]*)")
+_FLAG_SRC_DIRS = ("src", "benchmarks", "tools", "examples")
+
+
+def defined_flags() -> set[str]:
+    """Every CLI flag an add_argument in the repo's entry points defines."""
+    out = set()
+    for d in _FLAG_SRC_DIRS:
+        root = ROOT / d
+        if not root.exists():
+            continue
+        for p in sorted(root.rglob("*.py")):
+            if any(part in SKIP_DIRS for part in p.parts):
+                continue
+            out |= set(_ADD_ARG_RE.findall(p.read_text(encoding="utf-8")))
+    return out
+
+
+def check_flags(src: pathlib.Path, text: str, known: set[str]) -> list[str]:
+    flags = set(_FLAG_RE.findall(text))
+    for block in _SHELL_FENCE_RE.findall(text):
+        # multi-line commands: a backslash-continued line belongs to the
+        # command started above it
+        own = cont = False
+        for line in block.splitlines():
+            if not cont:
+                own = bool(_OWN_CMD_RE.search(line))
+            if own:
+                flags |= set(_BARE_FLAG_RE.findall(line))
+            cont = line.rstrip().endswith("\\")
+    errors = []
+    for flag in sorted(flags):
+        if flag in known or _flag_exempt(flag):
+            continue
+        errors.append(f"{src.relative_to(ROOT)}: stale CLI flag "
+                      f"reference {flag} (no add_argument defines it)")
+    return errors
+
+
 def check() -> list[str]:
     errors = []
+    known_flags = defined_flags()
     for src in md_files():
-        text = _FENCE_RE.sub("", src.read_text(encoding="utf-8"))
+        raw = src.read_text(encoding="utf-8")
+        text = _FENCE_RE.sub("", raw)
+        # flags are checked in fenced blocks too — usage examples live there
+        errors += check_flags(src, raw, known_flags)
         targets = [m.group(1) for m in _LINK_RE.finditer(text)]
         targets += [m.group(1) for m in _IMG_RE.finditer(text)]
         for t in targets:
