@@ -35,9 +35,17 @@ def main() -> None:
                     help="print the per-level codec suggestion for the "
                          "given link-bandwidth pairs in bytes/s (default: "
                          "a sweep of ICI/DCN ratios) and exit")
+    ap.add_argument("--from-ledger", metavar="ARCH",
+                    help="with --suggest: price the codec ladder on the "
+                         "REAL per-step comms ledger of this arch (one "
+                         "recorded dry-run train step on a node-factored "
+                         "mesh) instead of a synthetic two-level "
+                         "all-reduce")
     args = ap.parse_args()
     if args.suggest is not None:
-        _suggest(args.suggest)
+        events = _ledger_events(args.from_ledger) if args.from_ledger \
+            else None
+        _suggest(args.suggest, events)
         return
     mods = [args.only] if args.only else list(MODULES)
     print("name,us_per_call,derived")
@@ -55,7 +63,34 @@ def main() -> None:
               file=sys.stderr)
 
 
-def _suggest(pairs) -> None:
+def _ledger_events(arch: str) -> list:
+    """The real per-step ledger of ``arch`` (reduced config): record one
+    lowered train step on a node-factored (node=2, data=2, model=2) mesh
+    so every hierarchical stage shows up with its level."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro import configs
+    from repro.core import comms, compat
+    from repro.models.model import Model
+    from repro.models.params import MeshInfo
+    from repro.train.train_step import Trainer
+
+    mesh = compat.make_mesh((2, 2, 2), ("node", "data", "model"))
+    mi = MeshInfo.from_mesh(mesh)
+    model = Model(configs.get(arch).reduced(), mi)
+    trainer = Trainer(model, mesh, scheme="hier_zpp_8_16")
+    pstructs = model.structs()
+    ostructs = jax.eval_shape(trainer.opt_init, pstructs)
+    binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+    with comms.record_traffic() as events:
+        trainer.step.lower(pstructs, ostructs, binputs)
+    jax.clear_caches()
+    return events
+
+
+def _suggest(pairs, events=None) -> None:
     """roofline.suggest_scheme over measured (or default) link speeds."""
     from repro.analysis import roofline as rl
     if not pairs:
@@ -64,7 +99,7 @@ def _suggest(pairs) -> None:
     print("ici_bw,dcn_bw,ratio,scheme,outer_codec")
     for p in pairs:
         ici, dcn = (float(x) for x in p.split(":"))
-        s = rl.suggest_scheme(ici, dcn)
+        s = rl.suggest_scheme(ici, dcn, events=events)
         print(f"{ici:.3g},{dcn:.3g},{s['ratio']:.1f},"
               f"{s['scheme']},{s['outer_codec']}")
 

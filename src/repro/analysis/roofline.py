@@ -90,7 +90,8 @@ def ledger_summary(events, train: bool) -> dict:
     -> tp); ``per_dim_level`` crosses that with the stage level
     ("<dim>/<level>") — the table the flat-vs-hier benchmark sweeps print,
     showing which dimension's traffic moved off the slow links."""
-    per_tag, per_axis, per_level, per_dim, per_dim_level = {}, {}, {}, {}, {}
+    per_tag, per_axis, per_level = {}, {}, {}
+    per_dim, per_dim_level, per_site = {}, {}, {}
     total = 0.0
     for ev in events:
         b = event_bytes(ev, train)
@@ -104,10 +105,15 @@ def ledger_summary(events, train: bool) -> dict:
         per_dim[dim] = per_dim.get(dim, 0.0) + tot
         key = f"{dim}/{lvl}"
         per_dim_level[key] = per_dim_level.get(key, 0.0) + tot
+        # per_site keys keep the @name a Site-tagged call site carries
+        # ("zero@embed_table") — the breakdown per-tensor rules show up in
+        _, _, name = ev["tag"].partition("@")
+        skey = f"{dim}@{name}" if name else dim
+        per_site[skey] = per_site.get(skey, 0.0) + tot
         total += tot
     return {"total_bytes": total, "per_tag": per_tag, "per_axis": per_axis,
             "per_level": per_level, "per_dim": per_dim,
-            "per_dim_level": per_dim_level}
+            "per_dim_level": per_dim_level, "per_site": per_site}
 
 
 def link_bytes(events, train: bool, slow_axes=()) -> dict:
@@ -174,29 +180,61 @@ def pipelined_step_time(base_step_s: float, pp: int, n_micro: int) -> float:
 
 
 # --------------------------------------------------------------------------
-# per-level codec autotune (ROADMAP: pick codecs from the measured
-# ICI/DCN ratio via the collective_seconds pricing)
+# per-level codec autotune (pick codecs from the measured ICI/DCN ratio
+# via the collective_seconds pricing, over the model's own ledger)
 # --------------------------------------------------------------------------
+
+def recost_events(events, policy_like) -> list:
+    """Re-price a recorded ledger under a candidate scheme/policy.
+
+    Each event keeps its traffic shape (op, axis, elems, level, scan
+    multiplier) — only the codecs are re-resolved through the candidate's
+    compiled plan, using the event's dimension, direction, level, payload
+    size, and site name.  This is what lets :func:`suggest_scheme` walk
+    the codec ladder against the REAL per-step ledger of a target model
+    (one ``comms.record_traffic`` trace) instead of a synthetic two-level
+    all-reduce."""
+    from repro.core import policy
+    plan = policy.compile_plan(policy_like)
+    out = []
+    for ev in events:
+        st = policy.as_site(ev["tag"])
+        lvl = ev.get("level", "flat")
+        # ev["nbytes"] is the payload size the live trace resolved codecs
+        # with (can exceed elems*itemsize: pro-rated ppermutes, hier AG
+        # stages); fall back for synthetic/hand-built events
+        nbytes = ev.get("nbytes",
+                        ev["elems"] * _ITEMSIZE.get(ev["dtype"], 4))
+        if st.dim in policy.DIRECTED_DIMS and st.direction is None:
+            cf = plan.codec(st.dim, "fwd", lvl, nbytes, st.name).name
+            cb = plan.codec(st.dim, "bwd", lvl, nbytes, st.name).name
+        else:
+            cf = cb = plan.codec(st.dim, st.direction, lvl, nbytes,
+                                 st.name).name
+        out.append(dict(ev, codec_fwd=cf, codec_bwd=cb))
+    return out
+
 
 def _two_level_ar_events(scheme_name: str, elems: int, n_inner: int,
                          n_outer: int) -> list:
     """Synthetic ledger of one hierarchical DP all-reduce under ``scheme``
-    (same stage shapes as comms.hier_all_reduce ledgers at trace time)."""
-    from repro.core import schemes
-    s = schemes.get(scheme_name)
+    (same stage shapes as comms.hier_all_reduce ledgers at trace time) —
+    the mesh-free fallback when no real ledger is supplied."""
+    from repro.core import policy
+    plan = policy.compile_plan(scheme_name)
 
-    def c(tag):
-        return s.codec(tag).name
+    def c(level):
+        return plan.codec("dp", None, level).name
     chunk = -(-elems // n_inner)
     mk = dict(tag="dp", dtype="float32", mult=1, remat=False, bidir=False,
               bwd_op=None)
     return [
         dict(mk, op="reduce_scatter", axis="data", n=n_inner, elems=elems,
-             codec_fwd=c("dp_inner"), codec_bwd=c("dp_inner"), level="inner"),
+             codec_fwd=c("inner"), codec_bwd=c("inner"), level="inner"),
         dict(mk, op="all_reduce", axis="node", n=n_outer, elems=chunk,
-             codec_fwd=c("dp_outer"), codec_bwd=c("dp_outer"), level="outer"),
+             codec_fwd=c("outer"), codec_bwd=c("outer"), level="outer"),
         dict(mk, op="all_gather", axis="data", n=n_inner, elems=chunk,
-             codec_fwd=c("dp_inner"), codec_bwd=c("dp_inner"), level="inner"),
+             codec_fwd=c("inner"), codec_bwd=c("inner"), level="inner"),
     ]
 
 
@@ -212,7 +250,7 @@ _SUGGEST_LADDER = (
 
 def suggest_scheme(ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW, *,
                    elems: int = 1 << 24, n_inner: int = 8,
-                   n_outer: int = 4) -> dict:
+                   n_outer: int = 4, events=None, train: bool = True) -> dict:
     """Pick per-level codecs from the measured fast/slow link ratio.
 
     Compression costs quality, so the rule is *compress only as hard as
@@ -223,6 +261,13 @@ def suggest_scheme(ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW, *,
     bandwidths.  If even the most aggressive codec cannot get there, it is
     returned (the slow link dominates regardless; minimize its bytes).
 
+    ``events`` feeds the ladder the REAL per-step ledger of the target
+    model (``comms.record_traffic`` around one lowered train step on a
+    node-factored mesh): every candidate re-prices that exact traffic via
+    :func:`recost_events`, so the pick reflects the model's true
+    dimension mix — not just a synthetic DP all-reduce of ``elems``
+    floats (the mesh-free fallback when ``events`` is None).
+
     Returns {"scheme", "outer_codec", "ratio", "candidates": {name:
     {"fast_s", "slow_s", "total_s"}}}.
     """
@@ -230,8 +275,12 @@ def suggest_scheme(ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW, *,
     cands = {}
     pick = None
     for name, outer in _SUGGEST_LADDER:
-        ev = _two_level_ar_events(name, elems, n_inner, n_outer)
-        lb = link_bytes(ev, train=False)
+        if events is not None:
+            ev = recost_events(events, name)
+            lb = link_bytes(ev, train=train)
+        else:
+            ev = _two_level_ar_events(name, elems, n_inner, n_outer)
+            lb = link_bytes(ev, train=False)
         fast_s = lb["fast"] / ici_bw
         slow_s = lb["slow"] / dcn_bw
         cands[name] = {"fast_s": fast_s, "slow_s": slow_s,

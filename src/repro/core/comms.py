@@ -1,8 +1,12 @@
 """Compression-assisted collectives (the paper's core mechanism, TPU-native).
 
 Every collective the framework emits goes through this module, tagged with
-the parallelism dimension it serves (``dp``/``zero``/``tp``/``pp``/``ep``).
-The active :mod:`repro.core.schemes` scheme maps tags to codecs:
+a :class:`Site` (or a legacy tag string): the parallelism dimension it
+serves (``dp``/``zero``/``tp``/``pp``/``ep``), an optional site name for
+per-tensor rules, and an optionally pinned direction/level.  The active
+compiled :class:`~repro.core.policy.CommPlan` (``policy.use_plan``, else
+the adapter plan of the thread-local :mod:`repro.core.schemes` scheme)
+maps each site — plus the trace-time payload size — to a codec:
 
 * identity codecs (``none``, ``mpc``) lower to stock ``jax.lax`` collectives —
   the uncompressed MVAPICH2-GDR baseline of the paper;
@@ -47,9 +51,13 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import codecs, compat, schemes
+from repro.core import codecs, compat, policy
 from repro.kernels import ops
 from repro.kernels.ref import BLOCK
+
+# re-exported: the structured comm tag call sites pass instead of strings
+Site = policy.Site
+site = policy.site
 
 
 # --------------------------------------------------------------------------
@@ -114,14 +122,18 @@ class scope_mult:
 
 
 def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None, level="flat",
-             elems=None):
+             elems=None, nbytes=None):
     """Append one ledger event.
 
     ``level`` distinguishes the link class a collective rides: "flat" for
     single-stage collectives over an unfactored axis, "inner" for the
     intra-node stage of a hierarchical collective (fast links), "outer"
     for its inter-node stage (slow links).  ``elems`` overrides the local
-    payload element count for stages that operate on a sub-chunk."""
+    payload element count for stages that operate on a sub-chunk.
+    ``nbytes`` records the payload size the CODEC RESOLUTION saw (it can
+    differ from ``elems * itemsize`` — pro-rated partial permutations,
+    hier stage chunks), so ``roofline.recost_events`` re-resolves
+    size-threshold rules exactly as the live trace did."""
     events = getattr(_rec, "events", None)
     if events is None:
         return
@@ -133,9 +145,11 @@ def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None, level="flat",
     if elems is None:
         elems = sum(l.size for l in leaves)
     dt = leaves[0].dtype if leaves else jnp.float32
+    if nbytes is None:
+        nbytes = int(elems) * jnp.dtype(dt).itemsize
     events.append(dict(
         op=op, tag=tag, axis=axis, n=int(compat.axis_size(axis)),
-        elems=int(elems), dtype=str(dt),
+        elems=int(elems), dtype=str(dt), nbytes=int(nbytes),
         codec_fwd=c_fwd.name, codec_bwd=c_bwd.name,
         bwd_op=bwd_op, mult=int(getattr(_rec, "mult", 1)),
         remat=bool(getattr(_rec, "remat", False)),
@@ -175,16 +189,23 @@ def _bidir() -> bool:
     return bool(getattr(_rec, "bidir", False))
 
 
-def _codec_pair(tag: str):
-    scheme = schemes.current()
-    if tag in ("dp", "zero") \
-            or tag.endswith(("_fwd", "_bwd", "_inner", "_outer")):
-        # explicit direction (e.g. "tp_bwd" for the optimizer's model-axis
-        # gradient fold) or explicit level (e.g. "dp_inner" for one stage
-        # of a hierarchical sync) -> same codec both ways
-        c = scheme.codec(tag)
-        return c, c
-    return scheme.codec(f"{tag}_fwd"), scheme.codec(f"{tag}_bwd")
+def _payload_nbytes(x) -> int:
+    """Uncompressed local wire payload of ``x`` (a tensor or pytree) —
+    the ``nbytes`` fact size-threshold rules match on."""
+    leaves = jax.tree_util.tree_leaves(x)
+    return int(sum(l.size * jnp.dtype(l.dtype).itemsize for l in leaves))
+
+
+def _codec_pair(tag, nbytes: int | None = None):
+    """(fwd, bwd) codecs for one single-stage collective.
+
+    ``tag`` is a :class:`Site` or a legacy tag string; resolution goes
+    through the active compiled :class:`~repro.core.policy.CommPlan`
+    (an explicit ``policy.use_plan`` context, else the adapter plan of
+    the thread-local scheme).  Sites pinning a direction (the
+    optimizer's ``bwd`` gradient folds) or a level (one stage of a
+    staged flat-vector sync) resolve to the same codec both ways."""
+    return policy.current_plan().codec_pair(policy.as_site(tag), nbytes)
 
 
 AxisPair = compat.AxisPair
@@ -534,66 +555,78 @@ _f_vjp.defvjp(_f_fwd, _f_bwd)
 
 
 # --------------------------------------------------------------------------
-# public, tag-resolving entry points.
+# public, site-resolving entry points.
+#
+# ``tag`` is a :class:`Site` (structured: dim / name / pinned direction or
+# level) or a legacy tag string parsed into one.  Codec resolution goes
+# through the active compiled CommPlan (policy.use_plan, else the adapter
+# plan of the thread-local scheme).
 #
 # ``axis`` may be a name, a plain tuple (flat collective over the joint
 # axis), or an AxisPair (outer, inner) — which routes through the two-level
 # hierarchical decomposition with per-level codecs (hier_* below).
 # --------------------------------------------------------------------------
 
-def psum(x, axis, tag: str):
-    """All-reduce-sum over ``axis`` under the active scheme's codec for ``tag``.
+def psum(x, axis, tag):
+    """All-reduce-sum over ``axis`` under the active plan's codec for ``tag``.
 
     AxisPair axes route to :func:`hier_all_reduce`."""
+    s = policy.as_site(tag)
     if _is_pair(axis):
-        return hier_all_reduce(x, axis.inner, axis.outer, tag)
-    c_fwd, c_bwd = _codec_pair(tag)
-    _account("all_reduce", tag, x, axis, c_fwd, c_bwd, bwd_op="all_reduce")
+        return hier_all_reduce(x, axis.inner, axis.outer, s)
+    c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    _account("all_reduce", s.ledger_tag, x, axis, c_fwd, c_bwd,
+             bwd_op="all_reduce", level=s.level or "flat")
     return _psum_vjp(x, axis, c_fwd, c_bwd)
 
 
-def all_gather(x, axis, axis_dim: int, tag: str):
+def all_gather(x, axis, axis_dim: int, tag):
     """All-gather dim ``axis_dim`` over ``axis`` (bwd: reduce-scatter under
     the ``tag`` bwd codec).  AxisPair axes route to :func:`hier_all_gather`."""
+    s = policy.as_site(tag)
     if _is_pair(axis):
-        return hier_all_gather(x, axis.inner, axis.outer, axis_dim, tag)
-    c_fwd, c_bwd = _codec_pair(tag)
-    _account("all_gather", tag, x, axis, c_fwd, c_bwd,
-             bwd_op="reduce_scatter")
+        return hier_all_gather(x, axis.inner, axis.outer, axis_dim, s)
+    c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    _account("all_gather", s.ledger_tag, x, axis, c_fwd, c_bwd,
+             bwd_op="reduce_scatter", level=s.level or "flat")
     return _ag_vjp(x, axis, axis_dim, c_fwd, c_bwd)
 
 
-def reduce_scatter(x, axis, axis_dim: int, tag: str):
+def reduce_scatter(x, axis, axis_dim: int, tag):
     """Sum-reduce-scatter dim ``axis_dim`` over ``axis`` (bwd: all-gather).
     AxisPair axes route to :func:`hier_reduce_scatter`."""
+    s = policy.as_site(tag)
     if _is_pair(axis):
-        return hier_reduce_scatter(x, axis.inner, axis.outer, axis_dim, tag)
-    c_fwd, c_bwd = _codec_pair(tag)
-    _account("reduce_scatter", tag, x, axis, c_fwd, c_bwd,
-             bwd_op="all_gather")
+        return hier_reduce_scatter(x, axis.inner, axis.outer, axis_dim, s)
+    c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    _account("reduce_scatter", s.ledger_tag, x, axis, c_fwd, c_bwd,
+             bwd_op="all_gather", level=s.level or "flat")
     return _rs_vjp(x, axis, axis_dim, c_fwd, c_bwd)
 
 
-def ppermute(x, axis, perm, tag: str):
+def ppermute(x, axis, perm, tag):
     """Point-to-point permutation over ``axis`` (bwd: inverse perm under the
     ``tag`` bwd codec).  With an AxisPair axis, ``perm`` indexes the joint
     (outer-major) rank space and routes to :func:`hier_ppermute`, which
     sends intra-node edges under the ``<tag>_inner`` codec and node-crossing
     edges under ``<tag>_outer``."""
+    s = policy.as_site(tag)
     if _is_pair(axis):
-        return hier_ppermute(x, axis.inner, axis.outer, perm, tag)
-    c_fwd, c_bwd = _codec_pair(tag)
+        return hier_ppermute(x, axis.inner, axis.outer, perm, s)
+    nbytes = _payload_nbytes(x)
+    c_fwd, c_bwd = _codec_pair(s, nbytes)
     perm = tuple(perm)
     # pro-rate partial permutations: only len(perm)/n ranks send, so the
     # average per-device bytes scale by the edge fraction (matches the
     # per-edge-class accounting of hier_ppermute; full rings unchanged)
     n = int(axis_size(axis))
-    _account("ppermute", tag, x, axis, c_fwd, c_bwd, bwd_op="ppermute",
-             elems=x.size * len(perm) // n)
+    _account("ppermute", s.ledger_tag, x, axis, c_fwd, c_bwd,
+             bwd_op="ppermute", elems=x.size * len(perm) // n,
+             level=s.level or "flat", nbytes=nbytes)
     return _pp_vjp(x, axis, perm, c_fwd, c_bwd)
 
 
-def stage_send(x, axis, tag: str = "pp"):
+def stage_send(x, axis, tag="pp"):
     """Pipeline stage handoff: stage ``s`` sends ``x`` to stage ``s + 1``.
 
     The canonical forward edge of the 1F1B schedule — a partial (no
@@ -613,7 +646,7 @@ def stage_send(x, axis, tag: str = "pp"):
     return ppermute(x, axis, [(s, s + 1) for s in range(n - 1)], tag)
 
 
-def stage_recv(x, axis, tag: str = "pp"):
+def stage_recv(x, axis, tag="pp"):
     """Reverse stage shift: stage ``s`` sends ``x`` to stage ``s - 1``.
 
     The explicit backward-edge twin of :func:`stage_send` for schedules
@@ -626,52 +659,65 @@ def stage_recv(x, axis, tag: str = "pp"):
     return ppermute(x, axis, [(s + 1, s) for s in range(n - 1)], tag)
 
 
-def all_to_all(x, axis, split_axis: int, concat_axis: int, tag: str):
+def all_to_all(x, axis, split_axis: int, concat_axis: int, tag):
     """All-to-all over ``axis`` (bwd: all-to-all with split/concat swapped).
     AxisPair axes route to :func:`hier_all_to_all`."""
+    s = policy.as_site(tag)
     if _is_pair(axis):
         return hier_all_to_all(x, axis.inner, axis.outer, split_axis,
-                               concat_axis, tag)
-    c_fwd, c_bwd = _codec_pair(tag)
-    _account("all_to_all", tag, x, axis, c_fwd, c_bwd, bwd_op="all_to_all")
+                               concat_axis, s)
+    c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    _account("all_to_all", s.ledger_tag, x, axis, c_fwd, c_bwd,
+             bwd_op="all_to_all", level=s.level or "flat")
     return _a2a_vjp(x, axis, split_axis, concat_axis, c_fwd, c_bwd)
 
 
-def copy_fwd_psum_bwd(x, axis, tag: str):
+def copy_fwd_psum_bwd(x, axis, tag):
     """Megatron 'g': identity forward, (compressed) all-reduce backward.
 
     AxisPair axes make the backward a two-level :func:`hier_all_reduce`
     under the ``<tag>_bwd_inner`` / ``<tag>_bwd_outer`` codecs."""
+    s = policy.as_site(tag)
+    nbytes = _payload_nbytes(x)
     if _is_pair(axis):
-        (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
         n_i = int(axis_size(axis.inner))
+        chunk = -(-x.size // n_i)
+        (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(
+            s, nbytes, chunk * x.dtype.itemsize)
         _account_hier(
             [("none", axis.inner, "inner", x.size, "all_reduce"),
-             ("none", axis.outer, "outer", -(-x.size // n_i), "all_reduce")],
-            tag, x, [(ci_f, ci_b), (co_f, co_b)])
+             ("none", axis.outer, "outer", chunk, "all_reduce")],
+            s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b)],
+            {"inner": nbytes, "outer": chunk * x.dtype.itemsize})
         return _hier_g_vjp(x, axis.inner, axis.outer, (ci_b, co_b))
-    _, c_bwd = _codec_pair(tag)
-    _account("none", tag, x, axis, c_bwd, c_bwd, bwd_op="all_reduce")
+    _, c_bwd = _codec_pair(s, nbytes)
+    _account("none", s.ledger_tag, x, axis, c_bwd, c_bwd,
+             bwd_op="all_reduce", level=s.level or "flat")
     return _g_vjp(x, axis, c_bwd)
 
 
-def psum_fwd_copy_bwd(x, axis, tag: str):
+def psum_fwd_copy_bwd(x, axis, tag):
     """Megatron 'f': (compressed) all-reduce forward, identity backward.
 
     AxisPair axes make the forward a two-level :func:`hier_all_reduce`
     under the ``<tag>_fwd_inner`` / ``<tag>_fwd_outer`` codecs."""
+    s = policy.as_site(tag)
+    nbytes = _payload_nbytes(x)
     if _is_pair(axis):
-        (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
         n_i = int(axis_size(axis.inner))
         chunk = -(-x.size // n_i)
+        (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(
+            s, nbytes, chunk * x.dtype.itemsize)
         _account_hier(
             [("reduce_scatter", axis.inner, "inner", x.size, None),
              ("all_reduce", axis.outer, "outer", chunk, None),
              ("all_gather", axis.inner, "inner", chunk, None)],
-            tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)])
+            s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)],
+            {"inner": nbytes, "outer": chunk * x.dtype.itemsize})
         return _hier_f_vjp(x, axis.inner, axis.outer, (ci_f, co_f))
-    c_fwd, _ = _codec_pair(tag)
-    _account("all_reduce", tag, x, axis, c_fwd, c_fwd, bwd_op=None)
+    c_fwd, _ = _codec_pair(s, nbytes)
+    _account("all_reduce", s.ledger_tag, x, axis, c_fwd, c_fwd,
+             bwd_op=None, level=s.level or "flat")
     return _f_vjp(x, axis, c_fwd)
 
 
@@ -693,18 +739,18 @@ def psum_fwd_copy_bwd(x, axis, tag: str):
 # over the joint ``(outer, inner)`` axis tuple.
 # --------------------------------------------------------------------------
 
-def _hier_codec_pairs(tag: str):
+def _hier_codec_pairs(tag, nbytes_inner: int | None = None,
+                      nbytes_outer: int | None = None):
     """((inner_fwd, inner_bwd), (outer_fwd, outer_bwd)) for ``tag``.
 
-    Level-aware tags fall back to the flat codec when the active scheme
-    carries no per-level override (schemes.Scheme.codec)."""
-    scheme = schemes.current()
-    if tag in ("dp", "zero") or tag.endswith(("_fwd", "_bwd")):
-        ci = scheme.codec(f"{tag}_inner")
-        co = scheme.codec(f"{tag}_outer")
-        return (ci, ci), (co, co)
-    return ((scheme.codec(f"{tag}_fwd_inner"), scheme.codec(f"{tag}_bwd_inner")),
-            (scheme.codec(f"{tag}_fwd_outer"), scheme.codec(f"{tag}_bwd_outer")))
+    Resolved through the active compiled plan; a tag/site without
+    level-constrained rules falls back to its flat codec (the adapter
+    path preserves the legacy ``<tag>_<level> -> <tag>`` chain).
+    ``nbytes_*`` carry the per-stage payload sizes — the outer stage of a
+    two-level op moves only a 1/n_inner chunk, so size rules see what
+    actually crosses the slow links."""
+    return policy.current_plan().hier_codec_pairs(
+        policy.as_site(tag), nbytes_inner, nbytes_outer)
 
 
 def _hier_psum_impl(x, inner, outer, c_in, c_out):
@@ -821,17 +867,20 @@ def _hier_ag_bwd(inner, outer, axis_dim, cs_in, cs_out, _, g):
 _hier_ag_vjp.defvjp(_hier_ag_fwd, _hier_ag_bwd)
 
 
-def _account_hier(stages, tag, x, c_pairs):
+def _account_hier(stages, tag, x, c_pairs, nbytes_by_level=None):
     """Ledger the per-stage events of one hierarchical op.
 
     ``stages`` is a list of (op, axis, level, elems, bwd_op); ``c_pairs``
-    the matching (fwd, bwd) codec per stage."""
+    the matching (fwd, bwd) codec per stage.  ``nbytes_by_level`` records
+    the per-level payload size the codec resolution saw (a stage's elems
+    can be a sub-chunk of it)."""
+    nbl = nbytes_by_level or {}
     for (op, axis, level, elems, bwd_op), (cf, cb) in zip(stages, c_pairs):
         _account(op, tag, x, axis, cf, cb, bwd_op=bwd_op, level=level,
-                 elems=elems)
+                 elems=elems, nbytes=nbl.get(level))
 
 
-def hier_all_reduce(x, inner_axis: str, outer_axis: str, tag: str):
+def hier_all_reduce(x, inner_axis: str, outer_axis: str, tag):
     """Two-level all-reduce-sum over the factored ``(outer, inner)`` axes.
 
     Stage decomposition: ``RS(inner)`` of the flattened payload under the
@@ -845,14 +894,18 @@ def hier_all_reduce(x, inner_axis: str, outer_axis: str, tag: str):
     Backward: the same decomposition applied to the cotangent under the
     ``_bwd`` codecs (psum is self-transpose up to replication typing).
     Ledger: "inner" RS + "outer" AR + "inner" AG events."""
-    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    s = policy.as_site(tag)
     n_i = int(axis_size(inner_axis))
     chunk = -(-x.size // n_i)
+    nbytes = _payload_nbytes(x)
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(
+        s, nbytes, chunk * x.dtype.itemsize)
     _account_hier(
         [("reduce_scatter", inner_axis, "inner", x.size, "all_gather"),
          ("all_reduce", outer_axis, "outer", chunk, "all_reduce"),
          ("all_gather", inner_axis, "inner", chunk, "reduce_scatter")],
-        tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)])
+        s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)],
+        {"inner": nbytes, "outer": chunk * x.dtype.itemsize})
     return _hier_psum_vjp(x, inner_axis, outer_axis,
                           (ci_f, ci_b), (co_f, co_b))
 
@@ -862,7 +915,7 @@ hier_psum = hier_all_reduce
 
 
 def hier_reduce_scatter(x, inner_axis: str, outer_axis: str, axis_dim: int,
-                        tag: str):
+                        tag):
     """Two-level reduce-scatter of dim ``axis_dim`` (outer-major chunks).
 
     Stages: ``RS(inner)`` under ``<tag>_inner`` (full payload, fast
@@ -871,18 +924,22 @@ def hier_reduce_scatter(x, inner_axis: str, outer_axis: str, axis_dim: int,
     outer-major, so with identity codecs the result is bit-exact against
     ``lax.psum_scatter`` over the joint axis pair.  Backward:
     :func:`hier_all_gather` under the ``_bwd`` codecs."""
-    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    s = policy.as_site(tag)
     n_i = int(axis_size(inner_axis))
+    nbytes = _payload_nbytes(x)
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(
+        s, nbytes, x.size // n_i * x.dtype.itemsize)
     _account_hier(
         [("reduce_scatter", inner_axis, "inner", x.size, "all_gather"),
          ("reduce_scatter", outer_axis, "outer", x.size // n_i, "all_gather")],
-        tag, x, [(ci_f, ci_b), (co_f, co_b)])
+        s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b)],
+        {"inner": nbytes, "outer": x.size // n_i * x.dtype.itemsize})
     return _hier_rs_vjp(x, inner_axis, outer_axis, axis_dim,
                         (ci_f, ci_b), (co_f, co_b))
 
 
 def hier_all_gather(x, inner_axis: str, outer_axis: str, axis_dim: int,
-                    tag: str):
+                    tag):
     """Two-level all-gather of dim ``axis_dim`` (transpose of hier RS).
 
     Stages: ``AG(outer)`` of the full local shard on slow links under
@@ -891,12 +948,15 @@ def hier_all_gather(x, inner_axis: str, outer_axis: str, axis_dim: int,
     ``lax.all_gather`` over the joint ``(outer, inner)`` axis pair
     (outer-major shard order).  Backward: :func:`hier_reduce_scatter`
     under the ``_bwd`` codecs.  Ledger: one "outer" + one "inner" event."""
-    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    s = policy.as_site(tag)
     n_o = int(axis_size(outer_axis))
+    nbytes = _payload_nbytes(x)
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(s, nbytes * n_o, nbytes)
     _account_hier(
         [("all_gather", outer_axis, "outer", x.size, "reduce_scatter"),
          ("all_gather", inner_axis, "inner", x.size * n_o, "reduce_scatter")],
-        tag, x, [(co_f, co_b), (ci_f, ci_b)])
+        s.ledger_tag, x, [(co_f, co_b), (ci_f, ci_b)],
+        {"inner": nbytes * n_o, "outer": nbytes})
     return _hier_ag_vjp(x, inner_axis, outer_axis, axis_dim,
                         (ci_f, ci_b), (co_f, co_b))
 
@@ -962,7 +1022,7 @@ _hier_a2a_vjp.defvjp(_hier_a2a_fwd, _hier_a2a_bwd)
 
 
 def hier_all_to_all(x, inner_axis: str, outer_axis: str, split_axis: int,
-                    concat_axis: int, tag: str):
+                    concat_axis: int, tag):
     """Two-stage all-to-all over the factored ``(outer, inner)`` axis pair.
 
     Stage decomposition (2D all-to-all, DeepSpeed-TED style): the chunk
@@ -979,11 +1039,14 @@ def hier_all_to_all(x, inner_axis: str, outer_axis: str, split_axis: int,
     Ledger: one "inner" event over ``inner_axis`` and one "outer" event
     over ``outer_axis``, each of the full local payload (per-device bytes
     scale by the usual (n-1)/n all-to-all factor per stage)."""
-    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    s = policy.as_site(tag)
+    nbytes = _payload_nbytes(x)
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(s, nbytes, nbytes)
     _account_hier(
         [("all_to_all", inner_axis, "inner", x.size, "all_to_all"),
          ("all_to_all", outer_axis, "outer", x.size, "all_to_all")],
-        tag, x, [(ci_f, ci_b), (co_f, co_b)])
+        s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b)],
+        {"inner": nbytes, "outer": nbytes})
     return _hier_a2a_vjp(x, inner_axis, outer_axis, split_axis, concat_axis,
                          (ci_f, ci_b), (co_f, co_b))
 
@@ -1040,7 +1103,7 @@ def _hier_pp_bwd(inner, outer, perm, cs_in, cs_out, _, g):
 _hier_pp_vjp.defvjp(_hier_pp_fwd, _hier_pp_bwd)
 
 
-def hier_ppermute(x, inner_axis: str, outer_axis: str, perm, tag: str):
+def hier_ppermute(x, inner_axis: str, outer_axis: str, perm, tag):
     """Edge-classified point-to-point permutation over the factored
     ``(outer, inner)`` axis pair.
 
@@ -1054,7 +1117,9 @@ def hier_ppermute(x, inner_axis: str, outer_axis: str, perm, tag: str):
     ``<tag>_bwd_*`` codecs (node-crossing-ness is preserved by inversion).
     Ledger: an "inner" event scaled by the intra-node edge fraction and an
     "outer" event scaled by the node-crossing fraction."""
-    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(tag)
+    st = policy.as_site(tag)
+    nbytes = _payload_nbytes(x)
+    (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(st, nbytes, nbytes)
     n_i = int(axis_size(inner_axis))
     n = n_i * int(axis_size(outer_axis))
     perm = tuple((int(s), int(d)) for s, d in perm)
@@ -1063,7 +1128,8 @@ def hier_ppermute(x, inner_axis: str, outer_axis: str, perm, tag: str):
     _account_hier(
         [("ppermute", inner_axis, "inner", x.size * k_in // n, "ppermute"),
          ("ppermute", outer_axis, "outer", x.size * k_out // n, "ppermute")],
-        tag, x, [(ci_f, ci_b), (co_f, co_b)])
+        st.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b)],
+        {"inner": nbytes, "outer": nbytes})
     return _hier_pp_vjp(x, inner_axis, outer_axis, perm,
                         (ci_f, ci_b), (co_f, co_b))
 
@@ -1163,11 +1229,13 @@ pmax.defvjp(_pmax_fwd, _pmax_bwd)
 # flat-vector paths for the optimizer (outside autodiff)
 # --------------------------------------------------------------------------
 
-def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag: str = "dp",
+def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag="dp",
                         mean: bool = False) -> jnp.ndarray:
     """1-D sum-reduce-scatter: rank i returns padded chunk i (len ceil(n/axis))."""
-    c, _ = _codec_pair(tag)
-    _account("reduce_scatter", tag, flat, axis, c, c, bwd_op=None)
+    s = policy.as_site(tag)
+    c, _ = _codec_pair(s, _payload_nbytes(flat))
+    _account("reduce_scatter", s.ledger_tag, flat, axis, c, c, bwd_op=None,
+             level=s.level or "flat")
     n = axis_size(axis)
     if n == 1:
         # still tile-pad: consumers (the ZeRO-1 master chunk) size their
@@ -1186,10 +1254,12 @@ def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag: str = "dp",
 
 
 def all_gather_flat(chunk: jnp.ndarray, axis: str, total: int,
-                    tag: str = "zero") -> jnp.ndarray:
+                    tag="zero") -> jnp.ndarray:
     """Inverse of reduce_scatter_flat: gather padded chunks, trim to ``total``."""
-    c, _ = _codec_pair(tag)
-    _account("all_gather", tag, chunk, axis, c, c, bwd_op=None)
+    s = policy.as_site(tag)
+    c, _ = _codec_pair(s, _payload_nbytes(chunk))
+    _account("all_gather", s.ledger_tag, chunk, axis, c, c, bwd_op=None,
+             level=s.level or "flat")
     n = axis_size(axis)
     if n == 1:
         return chunk[:total]

@@ -36,7 +36,7 @@ import contextlib
 import dataclasses
 import threading
 
-from repro.core import codecs
+from repro.core import codecs, policy
 
 # parallelism dimensions, in ledger/table order
 DIMS = ("dp", "zero", "tp", "pp", "ep")
@@ -100,6 +100,22 @@ class Scheme:
     ep_bwd_inner: str | None = None
     ep_bwd_outer: str | None = None
 
+    def __post_init__(self):
+        # eager codec validation: a typo'd codec name fails at scheme
+        # construction, not deep inside the first traced collective
+        for f in dataclasses.fields(self):
+            if f.name == "name":
+                continue
+            val = getattr(self, f.name)
+            if val is not None:
+                try:
+                    codecs.get(val)
+                except KeyError:
+                    raise KeyError(
+                        f"scheme {self.name!r}: field {f.name!r} names "
+                        f"unknown codec {val!r}; have "
+                        f"{sorted(codecs._REGISTRY)}") from None
+
     def codec(self, tag: str) -> codecs.Codec:
         val = getattr(self, tag, None)
         if val is not None:
@@ -145,6 +161,30 @@ class Scheme:
                 fields[f"{d}_inner"] = inner
                 fields[f"{d}_outer"] = outer
         return dataclasses.replace(base, name=name, **fields)
+
+    def as_policy(self) -> policy.CommPolicy:
+        """The scheme as an ordered rule list (the thin-adapter path).
+
+        Per-level fields become level-constrained rules, flat fields
+        level-free rules AFTER them — first-match-wins then reproduces
+        the legacy fallback chain (``tp_fwd_inner`` -> explicit field ->
+        ``tp_fwd``) exactly, so every registered scheme is sugar over
+        rules and ``scheme.as_policy().compile(mi)`` is the plan the
+        trainers bind."""
+        level_rules, flat_rules = [], []
+        for d in DIMS:
+            dirs = ("fwd", "bwd") if d in DIRECTED_DIMS else (None,)
+            for io in dirs:
+                base = f"{d}_{io}" if io else d
+                for lvl in ("inner", "outer"):
+                    val = getattr(self, f"{base}_{lvl}")
+                    if val is not None:
+                        level_rules.append(policy.Rule(
+                            codec=val, dim=d, direction=io, level=lvl))
+                flat_rules.append(policy.Rule(
+                    codec=getattr(self, base), dim=d, direction=io))
+        return policy.CommPolicy(name=self.name,
+                                 rules=tuple(level_rules + flat_rules))
 
 
 BASELINE = Scheme(name="baseline")                                  # stock collectives
@@ -228,7 +268,12 @@ def names() -> list[str]:
 
 def scheme_table_md() -> str:
     """Markdown doc with one row per registered scheme and one column per
-    flat tag, each cell ``flat(inner/outer)`` when level overrides exist."""
+    flat tag, each cell ``flat(inner/outer)`` when the levels diverge.
+
+    Cells resolve through the ADAPTER path — ``Scheme.as_policy()``
+    compiled into a mesh-free :class:`~repro.core.policy.CommPlan` — so
+    the documented table describes exactly what the plan-consuming comms
+    layer does (and doubles as a drift check on the adapter)."""
     tags = flat_tags()
     lines = [
         "# Registered compression schemes",
@@ -238,32 +283,36 @@ def scheme_table_md() -> str:
         "",
         "One row per scheme in `repro.core.schemes`; one column per flat",
         "communication tag (see [ARCHITECTURE.md](ARCHITECTURE.md) for the",
-        "tag grammar).  A cell shows the flat codec, and, when the scheme",
-        "carries per-level overrides for that tag, the hierarchical stage",
-        "codecs as `flat (inner/outer)`.  Unset level fields fall back to",
-        "the flat codec, so a plain cell also describes the hierarchical",
-        "behavior.",
+        "tag grammar).  Every scheme is sugar over an ordered rule list",
+        "(`Scheme.as_policy()`, `repro.core.policy`); the cells below are",
+        "resolved through its compiled `CommPlan`.  A cell shows the flat",
+        "codec, and, when the scheme carries per-level rules for that",
+        "tag, the hierarchical stage codecs as `flat (inner/outer)`.",
+        "Tags without level rules fall back to the flat codec, so a plain",
+        "cell also describes the hierarchical behavior.",
         "",
         "| scheme | " + " | ".join(tags) + " |",
         "|---" * (len(tags) + 1) + "|",
     ]
     for name in names():
-        s = get(name)
+        plan = policy.compile_plan(get(name))
         cells = []
         for tag in tags:
-            flat = s.codec(tag).name
-            inner = getattr(s, f"{tag}_inner", None)
-            outer = getattr(s, f"{tag}_outer", None)
-            if inner or outer:
-                cells.append(f"{flat} ({inner or flat}/{outer or flat})")
+            st = policy.as_site(tag)
+            dim, dr = st.dim, st.direction
+            flat = plan.codec(dim, dr, "flat").name
+            inner = plan.codec(dim, dr, "inner").name
+            outer = plan.codec(dim, dr, "outer").name
+            if inner != flat or outer != flat:
+                cells.append(f"{flat} ({inner}/{outer})")
             else:
                 cells.append(flat)
         lines.append(f"| `{name}` | " + " | ".join(cells) + " |")
     lines += [
         "",
-        "Level-aware tags resolve through the fallback chain",
-        "`<dim>[_<dir>]_<level>` → `<dim>[_<dir>]` → `KeyError`, so every",
-        "scheme answers every tag in the grammar.",
+        "Level-aware tags resolve through the compiled rule list",
+        "(level-constrained rules first, flat rules as the fallback), so",
+        "every scheme answers every tag in the grammar.",
         "",
     ]
     return "\n".join(lines)

@@ -154,6 +154,16 @@ def comm_axes(mesh, logical: str):
     return logical
 
 
+def compile_plan(mesh, policy_like):
+    """Compile a comm policy (or scheme name / Scheme / CommPolicy)
+    against ``mesh``: the plan's axis bindings come from
+    ``MeshInfo.from_mesh`` — the same resolution :func:`comm_axes` uses,
+    so ``plan.axis("tp")`` and ``comm_axes(mesh, "model")`` agree."""
+    from repro.core import policy as policy_lib
+    from repro.models.params import MeshInfo
+    return policy_lib.compile_plan(policy_like, MeshInfo.from_mesh(mesh))
+
+
 def parse_nodes_spec(spec: str | int, ways: int, flag: str = "--nodes") -> int:
     """--nodes / --tp-nodes / --pp-nodes spec -> node count: an int, or
     "NxD" (nodes x ranks-per-node); ``ways`` is the parallel degree

@@ -8,7 +8,15 @@
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b --reduced \
         --dp 2 --tp 2 --pp 2 --microbatches 4 --scheme hier_tpp_8_16
 
-Features exercised here: compressed-collective schemes, ZeRO-1(+3),
+    # rule-based policy overrides on top of any scheme: small payloads
+    # ride raw, embedding gathers stay mild
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
+        --dp 2 --tp 2 --scheme zhybrid_16_8 \
+        --no-compress-below 65536 --codec-for 'embed*=bq16'
+
+Features exercised here: compressed-collective policies (named schemes
+are rule presets; --no-compress-below / --codec-for prepend override
+rules), ZeRO-1(+3),
 microbatched 1F1B pipeline parallelism (--pp/--microbatches),
 deterministic resumable data, step/straggler monitoring, atomic async
 checkpointing of params AND optimizer state, elastic restart (--resume on
@@ -85,6 +93,16 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--scheme", default="baseline")
+    ap.add_argument("--no-compress-below", type=int, default=0,
+                    metavar="BYTES",
+                    help="policy rule: payloads smaller than BYTES ride "
+                         "uncompressed (latency-bound small collectives "
+                         "gain nothing from encode/decode)")
+    ap.add_argument("--codec-for", action="append", default=[],
+                    metavar="NAME_GLOB=CODEC",
+                    help="policy rule: override the codec for comm sites "
+                         "whose name matches the glob (repeatable; e.g. "
+                         "embed*=bq16 keeps embedding gathers mild)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--opt-state-bits", type=int, default=32)
     ap.add_argument("--ckpt-dir", default="")
@@ -122,7 +140,25 @@ def main():
                      tp_nodes=tp_nodes, pp=args.pp, pp_nodes=pp_nodes)
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
-    trainer = make_trainer(model, mesh, scheme=args.scheme,
+
+    # the named scheme is sugar over rules (the adapter path); the policy
+    # flags prepend override rules, first-match-wins
+    from repro.core import policy as policy_lib
+    comm_policy = policy_lib.as_policy(args.scheme)
+    overrides = []
+    if args.no_compress_below > 0:
+        overrides.append(policy_lib.Rule(
+            "none", max_bytes=args.no_compress_below))
+    for spec in args.codec_for:
+        pat, _, codec = spec.partition("=")
+        if not pat or not codec:
+            ap.error(f"--codec-for wants NAME_GLOB=CODEC, got {spec!r}")
+        overrides.append(policy_lib.Rule(codec, name=pat))
+    if overrides:
+        comm_policy = comm_policy.with_rules(
+            *overrides, name=f"{comm_policy.name}+cli")
+
+    trainer = make_trainer(model, mesh, scheme=comm_policy,
                            opt_cfg=AdamConfig(lr=args.lr,
                                               state_bits=args.opt_state_bits),
                            n_micro=args.microbatches)

@@ -169,8 +169,10 @@ def ring_attention(q, k, v, q_pos, k_pos, mi: MeshInfo, causal, window,
             # ring hops over the (possibly node-factored) joint model axis:
             # an AxisPair routes intra-node hops under pp_*_inner and the
             # node-crossing hop under pp_*_outer
-            kb = comms.ppermute(kb, mi.tp_axes, perm, "pp")
-            vb = comms.ppermute(vb, mi.tp_axes, perm, "pp")
+            kb = comms.ppermute(kb, mi.tp_axes, perm,
+                                comms.site("pp", "ring_kv"))
+            vb = comms.ppermute(vb, mi.tp_axes, perm,
+                                comms.site("pp", "ring_kv"))
             # positions/validity are tiny int/bool payloads: rotate uncompressed
             pb = lax.ppermute(pb, mi.tp_axes, perm)
             if vlb is not None:
@@ -230,10 +232,11 @@ def attn_train(p, x, pos, cfg, mi: MeshInfo, mode: str, causal=True, window=0,
     xkv = cross if cross is not None else x
     pos_kv = cross_pos if cross is not None else pos
     if mode == "head":
-        xg = comms.all_gather(x, mi.tp_axes, 1, "tp")
+        xg = comms.all_gather(x, mi.tp_axes, 1, comms.site("tp", "attn_in"))
         pos_q_g = _gather_pos(pos, mi)
         if cross is not None:
-            kvg = comms.all_gather(cross, mi.tp_axes, 1, "tp")
+            kvg = comms.all_gather(cross, mi.tp_axes, 1,
+                                   comms.site("tp", "attn_cross_kv"))
             pos_kv_g = _gather_pos(cross_pos, mi)
         else:
             kvg, pos_kv_g = xg, pos_q_g
@@ -242,7 +245,8 @@ def attn_train(p, x, pos, cfg, mi: MeshInfo, mode: str, causal=True, window=0,
         o = full_attention(q, k, v, pos_q_g, pos_kv_g, causal, window)
         y = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
                        use(p["wo"], mi))
-        out = comms.reduce_scatter(y, mi.tp_axes, 1, "tp")
+        out = comms.reduce_scatter(y, mi.tp_axes, 1,
+                                   comms.site("tp", "attn_out"))
         cache = (k, v, pos_kv_g)      # full seq, local heads
     else:  # ring
         q, k, v = _project_qkv(p, x, xkv, pos, pos_kv, cfg, mi, theta, pos3)
@@ -256,7 +260,8 @@ def attn_train(p, x, pos, cfg, mi: MeshInfo, mode: str, causal=True, window=0,
 
 
 def _gather_pos(pos, mi):
-    return comms.all_gather(pos, mi.tp_axes, 1, "tp") \
+    return comms.all_gather(pos, mi.tp_axes, 1,
+                            comms.site("tp", "attn_pos")) \
         if mi.tp > 1 else pos
 
 
@@ -287,7 +292,7 @@ def attn_decode(p, x, cache, index, cfg, mi: MeshInfo, mode: str, window=0,
         o = full_attention(q, k, v, pos_q, k_pos,
                            causal=False, window=window, k_valid=valid)
         y = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, -1), use(p["wo"], mi))
-        out = comms.psum(y, mi.tp_axes, "tp")
+        out = comms.psum(y, mi.tp_axes, comms.site("tp", "attn_out"))
         return out, {**cache, "k": k, "v": v}
 
     # ring mode: cache seq-sharded over seq_axes; all heads local
@@ -309,8 +314,9 @@ def attn_decode(p, x, cache, index, cfg, mi: MeshInfo, mode: str, window=0,
     for ax in seq_axes:
         mg = comms.pmax(m, ax)
         w = jnp.exp(m - mg)
-        o, m, l = comms.psum(o * w[..., None], ax, "tp"), mg, \
-            comms.psum(l * w, ax, "tp")
+        o, m, l = comms.psum(o * w[..., None], ax,
+                             comms.site("tp", "attn_combine")), mg, \
+            comms.psum(l * w, ax, comms.site("tp", "attn_combine"))
     o = (o / jnp.maximum(l, 1e-30)[..., None]).astype(x.dtype)
     y = jnp.einsum("bsh,hd->bsd", o.reshape(B, 1, -1), use(p["wo"], mi))
     return y, ({**cache, "k": k, "v": v} if not cross else cache)

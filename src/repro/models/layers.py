@@ -19,17 +19,20 @@ from repro.models.params import Pv, fsdp_dim, MeshInfo
 _F32 = jnp.float32
 
 
-def use(p: Pv, mi: MeshInfo):
+def use(p: Pv, mi: MeshInfo, name: str | None = None):
     """Unwrap a param leaf, re-gathering its ZeRO-3 shard if needed.
 
-    The all-gather is tagged ``zero`` (compressed per scheme); its custom-vjp
-    backward is a reduce-scatter over data — i.e. the DP gradient reduction
-    for fsdp leaves happens here, once, with the ZeRO codec (paper §III C3:
-    no double compression of gradients)."""
+    The all-gather rides the ``zero`` site (compressed per policy); its
+    custom-vjp backward is a reduce-scatter over data — i.e. the DP
+    gradient reduction for fsdp leaves happens here, once, with the ZeRO
+    codec (paper §III C3: no double compression of gradients).  ``name``
+    labels the site so per-tensor rules can target individual leaves
+    (e.g. keep embedding gathers mild: ``Rule("bq16", dim="zero",
+    name="embed*")``)."""
     d = fsdp_dim(p.spec)
     if d is None:
         return p.v
-    return comms.all_gather(p.v, mi.data_axis, d, "zero")
+    return comms.all_gather(p.v, mi.data_axis, d, comms.site("zero", name))
 
 
 # --------------------------------------------------------------------------
@@ -125,7 +128,7 @@ def embed(p, tokens, cfg, mi, sp: bool = True):
     the embedding all-reduce into this RS under sequence parallelism.)
     sp=False (decode): [B, 1] -> psum(model) -> [B, 1, D] replicated.
     """
-    table = use(p["table"], mi)                    # [V_loc, D]
+    table = use(p["table"], mi, "embed_table")     # [V_loc, D]
     v_loc = table.shape[0]
     lo = compat.axis_index(mi.tp_axes) * v_loc
     local = tokens - lo
@@ -133,9 +136,9 @@ def embed(p, tokens, cfg, mi, sp: bool = True):
     e = jnp.take(table, jnp.clip(local, 0, v_loc - 1), axis=0)
     e = e * ok[..., None].astype(e.dtype)
     if sp and mi.tp > 1:
-        e = comms.reduce_scatter(e, mi.tp_axes, 1, "tp")
+        e = comms.reduce_scatter(e, mi.tp_axes, 1, comms.site("tp", "embed"))
     else:
-        e = comms.psum(e, mi.tp_axes, "tp")
+        e = comms.psum(e, mi.tp_axes, comms.site("tp", "embed"))
     if cfg.scale_embed:
         e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
     return e
@@ -148,11 +151,11 @@ def lm_head_logits(params, x, cfg, mi, sp: bool = True):
     scores the full sequence against its vocab slice (required for the
     vocab-parallel cross-entropy psums to be token-consistent)."""
     if sp and mi.tp > 1:
-        x = comms.all_gather(x, mi.tp_axes, 1, "tp")
+        x = comms.all_gather(x, mi.tp_axes, 1, comms.site("tp", "lm_head"))
     if cfg.tie_embeddings:
-        w = use(params["embed"]["table"], mi)      # [V_loc, D]
+        w = use(params["embed"]["table"], mi, "embed_table")  # [V_loc, D]
         return jnp.einsum("bsd,vd->bsv", x.astype(_F32), w.astype(_F32))
-    w = use(params["lm_head"]["w"], mi)            # [D, V_loc]
+    w = use(params["lm_head"]["w"], mi, "lm_head_w")  # [D, V_loc]
     return jnp.einsum("bsd,dv->bsv", x.astype(_F32), w.astype(_F32))
 
 
@@ -183,14 +186,15 @@ def vocab_parallel_xent(logits, labels, cfg, mi):
     m = comms.pmax(jnp.max(lax.stop_gradient(logits), axis=-1),
                    mi.tp_axes)                                     # [B,S]
     z = jnp.sum(jnp.exp(logits - m[..., None]), axis=-1)
-    z = comms.psum(z, mi.tp_axes, "tp")
+    z = comms.psum(z, mi.tp_axes, comms.site("tp", "xent"))
     lse = m + jnp.log(z)
 
     local = labels - lo
     ok = (local >= 0) & (local < v_loc)
     tl = jnp.take_along_axis(
         logits, jnp.clip(local, 0, v_loc - 1)[..., None], axis=-1)[..., 0]
-    tl = comms.psum(jnp.where(ok, tl, 0.0), mi.tp_axes, "tp")
+    tl = comms.psum(jnp.where(ok, tl, 0.0), mi.tp_axes,
+                    comms.site("tp", "xent"))
     w = (labels >= 0).astype(_F32)
     return (lse - tl) * w, w
 
@@ -230,15 +234,15 @@ def mlp(p, x, cfg, mi, sp: bool = True):
     sp=False (decode):        f/g conjugate psum pair, x replicated over model.
     """
     if sp:
-        xg = comms.all_gather(x, mi.tp_axes, 1, "tp")
+        xg = comms.all_gather(x, mi.tp_axes, 1, comms.site("tp", "mlp_in"))
     else:
-        xg = comms.copy_fwd_psum_bwd(x, mi.tp_axes, "tp")
-    w1 = use(p["w1"], mi)
+        xg = comms.copy_fwd_psum_bwd(x, mi.tp_axes, comms.site("tp", "mlp_in"))
+    w1 = use(p["w1"], mi, "mlp_w1")
     h = jnp.einsum("bsd,df->bsf", xg, w1)
     h = _act(h, cfg.mlp_kind)
     if cfg.mlp_kind in _GATED:
-        h = h * jnp.einsum("bsd,df->bsf", xg, use(p["w3"], mi))
-    y = jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), use(p["w2"], mi))
+        h = h * jnp.einsum("bsd,df->bsf", xg, use(p["w3"], mi, "mlp_w3"))
+    y = jnp.einsum("bsf,fd->bsd", h.astype(x.dtype), use(p["w2"], mi, "mlp_w2"))
     if sp:
-        return comms.reduce_scatter(y, mi.tp_axes, 1, "tp")
-    return comms.psum_fwd_copy_bwd(y, mi.tp_axes, "tp")
+        return comms.reduce_scatter(y, mi.tp_axes, 1, comms.site("tp", "mlp_out"))
+    return comms.psum_fwd_copy_bwd(y, mi.tp_axes, comms.site("tp", "mlp_out"))

@@ -63,9 +63,11 @@ def moe_block(p, x, cfg, mi: MeshInfo, sp: bool = True):
         # routing is identical), each shard computes its F slice, and the
         # partial outputs reduce-scatter(+sum) back to the owner shard.
         # Moves ~MB of activations instead of ~GB of expert weights/step.
-        xg = comms.all_gather(x, mi.data_axis, 0, "ep")
+        xg = comms.all_gather(x, mi.data_axis, 0,
+                              comms.site("ep", "moe_decode_batch"))
         y, aux = _moe_ffn(p, xg, cfg, mi, f_sliced=True)
-        y = comms.reduce_scatter(y, mi.data_axis, 0, "ep")
+        y = comms.reduce_scatter(y, mi.data_axis, 0,
+                                 comms.site("ep", "moe_decode_batch"))
         if cfg.shared_expert:
             y = y + layers.mlp(p["shared"], x, cfg.replace(mlp_kind="swiglu"),
                                mi, sp=False)
@@ -114,7 +116,8 @@ def _moe_ffn(p, x, cfg, mi: MeshInfo, f_sliced: bool, sp: bool = False):
     # all-to-all (intra-node exchange under ep_*_inner, inter-node under
     # ep_*_outer); chunk order matches the joint outer-major rank order.
     buf = buf.reshape(ep, E_loc * C, Dm)
-    recv = comms.all_to_all(buf, mi.tp_axes, 0, 0, "ep")            # [ep, E_loc*C, D]
+    recv = comms.all_to_all(buf, mi.tp_axes, 0, 0,
+                            comms.site("ep", "moe_dispatch"))  # [ep, E_loc*C, D]
     recv = recv.reshape(ep, E_loc, C, Dm)
     recv = jnp.moveaxis(recv, 1, 0).reshape(E_loc, ep * C, Dm)
 
@@ -131,7 +134,8 @@ def _moe_ffn(p, x, cfg, mi: MeshInfo, f_sliced: bool, sp: bool = False):
     # return route: inverse rearrangement + all-to-all back
     out = out.reshape(E_loc, ep, C, Dm)
     out = jnp.moveaxis(out, 0, 1).reshape(ep, E_loc * C, Dm)
-    back = comms.all_to_all(out, mi.tp_axes, 0, 0, "ep")
+    back = comms.all_to_all(out, mi.tp_axes, 0, 0,
+                            comms.site("ep", "moe_combine"))
     back = back.reshape(E * C, Dm)
 
     # combine: gather each (token, choice) result, weight by gate

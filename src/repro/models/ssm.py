@@ -104,8 +104,8 @@ def cross_shard_prefix(decay, state, mi: MeshInfo, axis: str):
     step = 1
     while step < tp:
         perm = [(j, j + step) for j in range(tp - step)]
-        d_in = comms.ppermute(d, axis, perm, "pp")
-        s_in = comms.ppermute(s, axis, perm, "pp")
+        d_in = comms.ppermute(d, axis, perm, comms.site("pp", "ssm_scan"))
+        s_in = comms.ppermute(s, axis, perm, comms.site("pp", "ssm_scan"))
         has = (i >= step)
         # incoming left prefix decays through the local segment
         s = jnp.where(has, s_in * _bexp(d) + s, s)
@@ -113,7 +113,7 @@ def cross_shard_prefix(decay, state, mi: MeshInfo, axis: str):
         step *= 2
     # shift right by one for the exclusive prefix
     perm = [(j, j + 1) for j in range(tp - 1)]
-    s_prev = comms.ppermute(s, axis, perm, "pp")
+    s_prev = comms.ppermute(s, axis, perm, comms.site("pp", "ssm_scan"))
     return jnp.where(i > 0, s_prev, jnp.zeros_like(s_prev))
 
 
@@ -174,7 +174,8 @@ def mamba_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     tail = xi_raw[:, -(K - 1):]
     if sp and mi.tp > 1:
         perm = [(j, j + 1) for j in range(mi.tp - 1)]
-        halo = comms.ppermute(tail, ax, perm, "pp")
+        halo = comms.ppermute(tail, ax, perm,
+                              comms.site("pp", "conv_halo"))
         halo = jnp.where(compat.axis_index(ax) > 0, halo,
                          jnp.zeros_like(halo))
     else:
@@ -228,9 +229,11 @@ def _broadcast_final(incl, tail, mi: MeshInfo, sp: bool):
     if not (sp and mi.tp > 1):
         return incl, tail
     last = compat.axis_index(ax) == mi.tp - 1
-    state = comms.psum(jnp.where(last, incl, jnp.zeros_like(incl)), ax, "tp")
+    state = comms.psum(jnp.where(last, incl, jnp.zeros_like(incl)), ax,
+                       comms.site("tp", "ssm_state"))
     ct = comms.psum(jnp.where(last, tail.astype(_F32),
-                              jnp.zeros_like(tail, _F32)), ax, "tp")
+                              jnp.zeros_like(tail, _F32)), ax,
+                    comms.site("tp", "ssm_state"))
     return state, ct
 
 
@@ -283,6 +286,7 @@ def mamba_decode(p, x, cache, cfg, mi: MeshInfo):
     y = rms_norm(y, gn, cfg.norm_eps)
     out = y @ lax.dynamic_slice_in_dim(use(p["w_out"], mi), i * di_loc,
                                        di_loc, axis=0)
-    out = comms.psum(out[:, None, :], mi.tp_axes, "tp")
+    out = comms.psum(out[:, None, :], mi.tp_axes,
+                     comms.site("tp", "ssm_out"))
     new_cache = {"conv": win[:, 1:], "state": S_new}
     return out, new_cache

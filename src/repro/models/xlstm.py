@@ -151,7 +151,8 @@ def mlstm_decode(p, x, cache, cfg, mi: MeshInfo):
         w_out = use(p["w_out"], mi).reshape(H, Pv, cfg.d_model)
         w_loc = lax.dynamic_slice_in_dim(w_out, i * Pv_loc, Pv_loc, axis=1)
         out = y @ w_loc.reshape(H * Pv_loc, cfg.d_model)
-        out = comms.psum(out[:, None], mi.tp_axes, "tp")
+        out = comms.psum(out[:, None], mi.tp_axes,
+                         comms.site("tp", "xlstm_out"))
     else:
         y = (y.reshape(B, di) * o).astype(x.dtype)
         out = (y @ use(p["w_out"], mi))[:, None]
@@ -228,13 +229,18 @@ def slstm_block(p, x, cfg, mi: MeshInfo, sp: bool = True,
     if not sp or tp == 1:
         y, fin = _slstm_scan(p, x, cfg, mi)
     elif B % tp == 0:
-        xt = comms.all_to_all(x, ax, 0, 1, "ep")      # [B/tp, S*tp, D]
+        xt = comms.all_to_all(x, ax, 0, 1,
+                              comms.site("ep", "slstm_transpose"))  # [B/tp, S*tp, D]
         y, fin = _slstm_scan(p, xt, cfg, mi)
-        y = comms.all_to_all(y, ax, 1, 0, "ep")       # back to [B, S_loc, D]
+        y = comms.all_to_all(y, ax, 1, 0,
+                             comms.site("ep", "slstm_transpose"))  # -> [B, S_loc, D]
         if want_cache:                                 # regather batch slices
-            fin = tuple(comms.all_gather(t, ax, 0, "tp") for t in fin)
+            fin = tuple(comms.all_gather(t, ax, 0,
+                                         comms.site("tp", "slstm_state"))
+                        for t in fin)
     else:
-        xg = comms.all_gather(x, ax, 1, "tp")         # [B, S_full, D]
+        xg = comms.all_gather(x, ax, 1,
+                              comms.site("tp", "slstm_seq"))  # [B, S_full, D]
         yg, fin = _slstm_scan(p, xg, cfg, mi)
         i = compat.axis_index(ax)
         y = lax.dynamic_slice_in_dim(yg, i * S, S, axis=1)

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import comms, compat, schemes
+from repro.core import comms, compat
+from repro.core import policy as policy_lib
 from repro.models import layers, transformer
 from repro.models.model import Model
 from repro.models.params import MeshInfo
@@ -41,7 +42,9 @@ class Server:
                  seq_axes=("model",), ring_bidir: bool = False):
         self.model = model
         self.mesh = mesh
-        self.scheme = schemes.get(scheme)
+        # compile the policy against this mesh once; prefill/decode bind
+        # the resulting plan (scheme names go through the rule adapter)
+        self.plan = policy_lib.compile_plan(scheme, model.mi)
         # resolve the logical "model" entry to the joint axis (AxisPair on
         # a tp-node-factored mesh) so decode combines span the full tp ways
         self.seq_axes = tuple(model.mi.tp_axes if ax == "model" else ax
@@ -55,7 +58,7 @@ class Server:
         pspecs = model.specs()
 
         def prefill_fn(params, batch):
-            with schemes.use(self.scheme), \
+            with policy_lib.use_plan(self.plan), \
                     comms.ring_options(self.ring_bidir):
                 logits, caches, _ = model.forward(params, batch,
                                                   phase="prefill")
@@ -63,7 +66,7 @@ class Server:
             return tok, caches
 
         def decode_fn(params, token, caches, index):
-            with schemes.use(self.scheme), comms.vma_mode(False), \
+            with policy_lib.use_plan(self.plan), comms.vma_mode(False), \
                     comms.ring_options(self.ring_bidir):
                 x = layers.embed(params["embed"], token, cfg, mi, sp=False)
                 pos3 = None

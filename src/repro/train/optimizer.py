@@ -176,7 +176,8 @@ class Adam:
         c_vals = [g.v for g, c in zip(gleaves, classes) if c == "C"]
         if c_vals and mi.tp > 1:
             cflat = _flat_concat(c_vals)
-            cflat = comms.psum(cflat, mi.tp_axes, "tp_bwd")
+            cflat = comms.psum(cflat, mi.tp_axes,
+                               comms.Site("tp", "grad_rep", "bwd"))
             out, off = [], 0
             for g, c in zip(gleaves, classes):
                 if c == "C":
@@ -199,7 +200,9 @@ class Adam:
                     if c != "A" and "stage" not in g.spec]
             if srep:
                 sflat = _flat_concat([g.v for _, g in srep])
-                sflat = comms.psum(sflat, mi.stage_axes, "pp_bwd")
+                sflat = comms.psum(sflat, mi.stage_axes,
+                                   comms.Site("pp", "grad_stage_rep",
+                                              "bwd"))
                 off = 0
                 for i, g in srep:
                     n = g.v.size
@@ -237,13 +240,17 @@ class Adam:
                 continue
             gv = g.v.astype(_F32)
             if "model" not in g.spec:
-                gv = comms.psum(gv, mi.tp_axes, "tp_bwd")
+                gv = comms.psum(gv, mi.tp_axes,
+                                comms.Site("tp", "grad_fsdp", "bwd"))
             # (no stage fold here: fsdp only annotates layer-group plans,
             # which are always stage-stacked on a pipeline mesh)
             if mi.node_axis:
-                gv = comms.psum(gv, mi.node_axis, "dp_outer")
+                gv = comms.psum(gv, mi.node_axis,
+                                comms.Site("dp", "grad_fsdp",
+                                           level="outer"))
             if mi.pod_axis:
-                gv = comms.psum(gv, mi.pod_axis, "dp")
+                gv = comms.psum(gv, mi.pod_axis,
+                                comms.Site("dp", "grad_fsdp_pod"))
             st = state["fsdp"][i]
             master, m, v = self._adam_update(gv * scale, st["m"], st["v"],
                                              st["master"], step)
@@ -260,19 +267,24 @@ class Adam:
         # non-level-aware schemes.
         hier = mi.node_axis is not None
         gchunk = comms.reduce_scatter_flat(
-            gflat, mi.data_axis, "dp_inner" if hier else "dp")
+            gflat, mi.data_axis,
+            comms.Site("dp", "zero1_grad", level="inner" if hier else None))
         if hier:
-            gchunk = comms.psum(gchunk, mi.node_axis, "dp_outer")
+            gchunk = comms.psum(gchunk, mi.node_axis,
+                                comms.Site("dp", "zero1_grad",
+                                           level="outer"))
         if mi.pod_axis:
-            gchunk = comms.psum(gchunk, mi.pod_axis, "dp")
+            gchunk = comms.psum(gchunk, mi.pod_axis,
+                                comms.Site("dp", "zero1_grad_pod"))
         m = self._state_decode(state["m"])
         v = self._state_decode(state["v"])
         master, m, v = self._adam_update(gchunk, m, v, state["master"], step)
         # hpZ: master chunks are replicated per node, so this all-gather
         # rides only fast intra-node links
-        flat_new = comms.all_gather_flat(master, mi.data_axis,
-                                         self.flat_size(params),
-                                         "zero_inner" if hier else "zero")
+        flat_new = comms.all_gather_flat(
+            master, mi.data_axis, self.flat_size(params),
+            comms.Site("zero", "zero1_param",
+                       level="inner" if hier else None))
         off = 0
         for i, (l, c) in enumerate(zip(leaves, classes)):
             if c == "A":

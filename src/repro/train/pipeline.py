@@ -89,7 +89,9 @@ def pipeline_loss_fn(model: Model, n_micro: int):
             y, num, den, aux = carry
             # 1. handoff: my previous tick's output moves one stage down
             #    the pipe (pp_fwd codec; bwd returns the grad under pp_bwd)
-            recv = comms.stage_send(y, stage_ax) if pp > 1 else None
+            recv = comms.stage_send(y, stage_ax,
+                                    comms.site("pp", "stage_handoff")) \
+                if pp > 1 else None
             # 2. stage-0 input: the microbatch entering the pipe this tick
             #    (clamped during drain — those outputs never reach the
             #    last stage within T ticks, so their grads are zero)

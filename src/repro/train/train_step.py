@@ -17,7 +17,8 @@ from __future__ import annotations
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import compat, schemes
+from repro.core import compat
+from repro.core import policy as policy_lib
 from repro.models.model import Model
 from repro.models.params import MeshInfo
 from repro.train.optimizer import Adam, AdamConfig, _split_classes
@@ -40,13 +41,22 @@ METRIC_SPECS = {"loss": P(), "xent": P(), "tokens": P(),
 
 
 class Trainer:
-    """Builds the jitted train/init steps for (model, scheme, optimizer)."""
+    """Builds the jitted train/init steps for (model, policy, optimizer).
+
+    ``scheme`` is anything :func:`repro.core.policy.compile_plan` accepts:
+    a registered scheme name, a :class:`~repro.core.schemes.Scheme` (the
+    adapter path — every named scheme is sugar over rules), or a
+    :class:`~repro.core.policy.CommPolicy` of explicit rules.  It is
+    compiled against the model's mesh ONCE here; the jitted step binds
+    the resulting immutable :class:`~repro.core.policy.CommPlan`, so no
+    comms call re-resolves a thread-local scheme at trace time."""
 
     def __init__(self, model: Model, mesh, scheme="baseline",
                  opt_cfg: AdamConfig | None = None, ring_bidir: bool = False):
         self.model = model
         self.mesh = mesh
-        self.scheme = schemes.get(scheme)
+        self.policy = policy_lib.as_policy(scheme)
+        self.plan = self.policy.compile(model.mi)
         self.ring_bidir = ring_bidir
         self.opt = Adam(opt_cfg or AdamConfig(), model.mi)
         self._check_mesh()
@@ -100,7 +110,7 @@ class Trainer:
         loss_fn = self._loss_fn()
 
         def step_fn(params, opt_state, batch):
-            with schemes.use(self.scheme), comms.vma_mode(False), \
+            with policy_lib.use_plan(self.plan), comms.vma_mode(False), \
                     comms.ring_options(self.ring_bidir):
                 (loss, metrics), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, batch)

@@ -59,3 +59,12 @@ def test_train_loop_and_elastic_restart():
 def test_serve_prefill_decode_equivalence():
     out = run_script("serve_check.py", timeout=1800)
     assert "SERVE DECODE OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_compiled_plan_path_vs_legacy_scheme_path():
+    """Explicit CommPolicy trainers bit-exact vs scheme-name trainers;
+    hier ledger totals byte-identical; size rules move wire bytes."""
+    out = run_script("plan_check.py", timeout=1800)
+    assert "PLAN PATH OK" in out

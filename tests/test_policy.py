@@ -1,0 +1,286 @@
+"""Policy/plan suite: the rule-based CommPolicy layer and its compiled
+CommPlan must (a) reproduce the legacy Scheme tag-fallback resolution for
+every registered scheme (plan-vs-legacy equivalence), (b) resolve rules
+first-match-wins under any ordering, and (c) reject unknown codecs, axes,
+dimensions, directions, and levels eagerly — at construction/compile
+time, not deep inside the first traced collective."""
+
+import random
+
+import pytest
+
+from repro.core import codecs, comms, policy, schemes
+from repro.models.params import MeshInfo
+
+
+def _all_queries():
+    """The full (dim, direction, level) query space — the legacy 24-field
+    Scheme space exactly."""
+    out = []
+    for dim in policy.DIMS:
+        dirs = policy.DIRECTIONS if dim in policy.DIRECTED_DIMS else (None,)
+        for dr in dirs:
+            for lvl in policy.LEVELS:
+                out.append((dim, dr, lvl))
+    return out
+
+
+def _legacy_tag(dim, dr, lvl):
+    t = dim if dr is None else f"{dim}_{dr}"
+    return t if lvl == "flat" else f"{t}_{lvl}"
+
+
+# --------------------------------------------------------------------------
+# plan-vs-legacy equivalence (satellite acceptance)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_plan_matches_scheme_fallback(name):
+    """For every registered scheme, the compiled CommPlan resolves every
+    level tag to the same codec as Scheme.codec's fallback chain."""
+    s = schemes.get(name)
+    plan = s.as_policy().compile()
+    for dim, dr, lvl in _all_queries():
+        want = s.codec(_legacy_tag(dim, dr, lvl)).name
+        got = plan.codec(dim, dr, lvl).name
+        assert want == got, (name, dim, dr, lvl, want, got)
+
+
+@pytest.mark.parametrize("name", schemes.names())
+def test_codec_pair_parity_via_context(name):
+    """comms._codec_pair under the legacy schemes.use context resolves
+    through the adapter plan to the legacy pair semantics: bare directed
+    tags split into (fwd, bwd); pinned direction/level tags and
+    undirected dims return the same codec both ways."""
+    s = schemes.get(name)
+    with schemes.use(name):
+        for dim in policy.DIRECTED_DIMS:
+            f, b = comms._codec_pair(dim)
+            assert f.name == s.codec(f"{dim}_fwd").name
+            assert b.name == s.codec(f"{dim}_bwd").name
+            f, b = comms._codec_pair(f"{dim}_bwd")
+            assert f.name == b.name == s.codec(f"{dim}_bwd").name
+        for tag in ("dp", "zero", "dp_inner", "zero_outer"):
+            f, b = comms._codec_pair(tag)
+            assert f.name == b.name == s.codec(tag).name
+        for tag in ("dp", "zero", "tp_fwd", "pp_bwd", "ep_fwd"):
+            (ci_f, ci_b), (co_f, co_b) = comms._hier_codec_pairs(tag)
+            assert ci_f.name == s.codec(f"{tag}_inner").name
+            assert co_f.name == s.codec(f"{tag}_outer").name
+
+
+def test_named_site_resolves_like_unnamed_without_name_rules():
+    """A site name is inert under pure scheme policies (no name rules):
+    the ledger tag changes, the codec does not."""
+    plan = policy.compile_plan("zhybrid_16_8")
+    for dim, dr, lvl in _all_queries():
+        assert plan.codec(dim, dr, lvl, nbytes=1 << 20, name="anything") \
+            .name == plan.codec(dim, dr, lvl).name
+
+
+# --------------------------------------------------------------------------
+# rule ordering: first match wins
+# --------------------------------------------------------------------------
+
+def test_rule_order_first_match_wins():
+    p = policy.CommPolicy("t", rules=(
+        policy.Rule("bq4", dim="dp"),
+        policy.Rule("bq16", dim="dp"),          # shadowed
+        policy.Rule("bq8"),                     # catch-all for the rest
+    ))
+    assert p.codec_name(policy.TagQuery("dp")) == "bq4"
+    assert p.codec_name(policy.TagQuery("zero")) == "bq8"
+
+
+def test_with_rules_prepends_overrides():
+    base = schemes.get("zhybrid_16_8").as_policy()
+    override = base.with_rules(policy.Rule("bq4", dim="dp"), name="o")
+    assert override.name == "o"
+    assert override.compile().codec("dp").name == "bq4"
+    # the base policy is untouched (policies are data)
+    assert base.compile().codec("dp").name == "bq8"
+    # non-dp resolution is unchanged
+    assert override.compile().codec("tp", "fwd").name == \
+        base.compile().codec("tp", "fwd").name
+
+
+def test_rule_order_property_random_shuffles():
+    """Property-style: for random rule lists, CommPolicy resolution
+    equals a reference first-match scan, under every shuffle."""
+    rng = random.Random(0)
+    dims = list(policy.DIMS)
+    codec_names = ["none", "bq4", "bq8", "bq16"]
+    for trial in range(20):
+        rules = [policy.Rule(rng.choice(codec_names),
+                             dim=rng.choice(dims + [None]),
+                             level=rng.choice([None, "flat", "inner",
+                                               "outer"]))
+                 for _ in range(rng.randint(1, 6))]
+        rng.shuffle(rules)
+        p = policy.CommPolicy("t", rules=tuple(rules), default="mpc")
+        for dim, dr, lvl in _all_queries():
+            q = policy.TagQuery(dim, dr, lvl)
+            want = next((r.codec for r in rules if r.matches(q)), "mpc")
+            assert p.codec_name(q) == want, (trial, q, rules)
+
+
+# --------------------------------------------------------------------------
+# size-threshold and per-tensor-name rules
+# --------------------------------------------------------------------------
+
+def test_size_threshold_rule():
+    p = schemes.get("zhybrid_16_8").as_policy().with_rules(
+        policy.Rule("none", max_bytes=64 << 10))
+    plan = p.compile()
+    assert plan.dynamic
+    assert plan.codec("dp", nbytes=(64 << 10) - 1).name == "none"
+    assert plan.codec("dp", nbytes=64 << 10).name == "bq8"     # exclusive
+    # unknown size never matches a size rule
+    assert plan.codec("dp").name == "bq8"
+
+
+def test_size_window_and_min_bytes():
+    p = policy.CommPolicy("t", rules=(
+        policy.Rule("bq4", min_bytes=1 << 20),
+        policy.Rule("bq16", min_bytes=1 << 10, max_bytes=1 << 20),
+    ), default="none")
+    plan = p.compile()
+    assert plan.codec("dp", nbytes=1 << 22).name == "bq4"
+    assert plan.codec("dp", nbytes=1 << 12).name == "bq16"
+    assert plan.codec("dp", nbytes=512).name == "none"
+    with pytest.raises(ValueError):
+        policy.Rule("bq8", min_bytes=100, max_bytes=100)   # empty window
+
+
+def test_per_tensor_name_rule():
+    p = schemes.get("zhybrid_16_8").as_policy().with_rules(
+        policy.Rule("bq4", dim="zero", name="embed*"))
+    plan = p.compile()
+    assert plan.codec("zero", nbytes=1, name="embed_table").name == "bq4"
+    assert plan.codec("zero", nbytes=1, name="mlp_w1").name == "bq16"
+    # nameless queries never match name rules
+    assert plan.codec("zero", nbytes=1).name == "bq16"
+
+
+# --------------------------------------------------------------------------
+# eager validation: construction/compile-time rejection
+# --------------------------------------------------------------------------
+
+def test_rule_rejects_unknown_codec_and_fields():
+    with pytest.raises(KeyError):
+        policy.Rule("bq9")
+    with pytest.raises(KeyError):
+        policy.Rule("bq8", dim="xx")
+    with pytest.raises(KeyError):
+        policy.Rule("bq8", dim=("dp", "xx"))
+    with pytest.raises(KeyError):
+        policy.Rule("bq8", direction="sideways")
+    with pytest.raises(KeyError):
+        policy.Rule("bq8", level="middle")
+
+
+def test_policy_rejects_unknown_default_and_non_rules():
+    with pytest.raises(KeyError):
+        policy.CommPolicy("t", default="nope")
+    with pytest.raises(TypeError):
+        policy.CommPolicy("t", rules=("bq8",))
+
+
+def test_scheme_rejects_unknown_codec_eagerly():
+    """Satellite acceptance: a typo'd Scheme codec field fails at
+    construction, not at trace time inside the first collective."""
+    with pytest.raises(KeyError):
+        schemes.Scheme(name="bad", dp="bq9")
+    with pytest.raises(KeyError):
+        schemes.Scheme(name="bad", tp_fwd_inner="zfp8")
+    with pytest.raises(KeyError):
+        schemes.Scheme.uniform("bad", "bq7")
+
+
+def test_site_and_tag_parse_errors():
+    for bad in ("xx", "xx_fwd_inner", "tp_fwd_bogus", "inner", "tp_middle",
+                "not_a_tag", "dp_fwd"):
+        with pytest.raises(KeyError):
+            policy.as_site(bad)
+    with pytest.raises(KeyError):
+        policy.Site("dp", direction="fwd")     # dp carries no direction
+    with pytest.raises(KeyError):
+        policy.Site("tp", level="outer")       # needs a direction
+
+
+def test_plan_rejects_unknown_queries():
+    plan = policy.compile_plan("baseline")
+    with pytest.raises(KeyError):
+        plan.codec("xx")
+    with pytest.raises(KeyError):
+        plan.codec("tp")                       # directed dims need fwd/bwd
+    with pytest.raises(KeyError):
+        plan.codec("dp", "fwd")                # dp takes no direction
+    with pytest.raises(KeyError):
+        plan.codec("dp", None, "middle")
+
+
+def test_ledger_tag_roundtrip():
+    cases = {
+        "tp": policy.Site("tp"),
+        "tp_bwd": policy.Site("tp", direction="bwd"),
+        "dp_outer": policy.Site("dp", level="outer"),
+        "ep@moe_dispatch": policy.Site("ep", "moe_dispatch"),
+        "tp_fwd_inner": policy.Site("tp", direction="fwd", level="inner"),
+    }
+    for tag, want in cases.items():
+        st = policy.as_site(tag)
+        assert st == want, tag
+        assert st.ledger_tag == tag
+        assert policy.as_site(st) is st
+
+
+# --------------------------------------------------------------------------
+# axis bindings + plan context
+# --------------------------------------------------------------------------
+
+def test_compile_binds_axes_per_mesh():
+    flat = MeshInfo()
+    plan = policy.compile_plan("baseline", flat)
+    assert plan.axis("dp") == "data"
+    assert plan.axis("tp") == "model"
+    assert plan.axis("zero") == "data"
+    with pytest.raises(KeyError):
+        plan.axis("pp")                        # no stage axis on this mesh
+    hier = MeshInfo(dp=4, node=2, node_axis="node", tp=4, tp_node=2,
+                    tp_node_axis="tpnode", pp=2, stage_axis="stage")
+    hplan = policy.compile_plan("hier_tpp_8_16", hier)
+    assert hplan.axis("dp") == comms.AxisPair("node", "data")
+    assert hplan.axis("tp") == comms.AxisPair("tpnode", "model")
+    assert hplan.axis("ep") == hplan.axis("tp")
+    assert hplan.axis("pp") == "stage"
+    assert hplan.axis("zero") == "data"        # hpZ: intra-node gathers
+    # mesh-free plans have no axis bindings
+    with pytest.raises(KeyError):
+        policy.compile_plan("baseline").axis("dp")
+
+
+def test_use_plan_context_nesting_and_fallback():
+    base = policy.current_plan()
+    assert base.name == "baseline"             # adapter of schemes.current()
+    with schemes.use("mzhybrid8"):
+        assert policy.current_plan().name == "mzhybrid8"
+    with policy.use_plan("zhybrid_16_8") as outer_plan:
+        assert policy.current_plan() is outer_plan
+        with policy.use_plan(schemes.get("naive_mpc").as_policy()):
+            assert policy.current_plan().name == "naive_mpc"
+            # an explicit plan shadows the thread-local scheme entirely
+            with schemes.use("baseline"):
+                assert policy.current_plan().name == "naive_mpc"
+        assert policy.current_plan() is outer_plan
+    assert policy.current_plan().name == "baseline"
+
+
+def test_compile_walks_full_query_space():
+    """compile() touches every (dim, direction, level) triple, so each
+    plan's static table carries exactly the legacy 24-field space."""
+    plan = policy.compile_plan("hier_tpp_8_16")
+    assert set(plan._table) == set(_all_queries())
+    assert len(plan._table) == 24
+    for c in plan._table.values():
+        assert isinstance(c, codecs.Codec)

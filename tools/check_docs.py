@@ -9,7 +9,12 @@ dirs), extracts ``[text](target)`` links, and fails if
   present in the target file (GitHub-style slugs), or
 * an inline-code CLI flag (`` `--pp ...` ``) names a flag no
   ``add_argument`` in the repo's entry points defines — stale flag docs
-  (e.g. a renamed ``--pp``) fail instead of rotting.
+  (e.g. a renamed ``--pp``) fail instead of rotting, or
+* a scheme-field / comm-tag token (``tp_fwd_inner``-shaped:
+  ``<dim>_<fwd|bwd|inner|outer>...``) names a field the ``Scheme``
+  dataclass no longer declares — docs referencing removed scheme fields
+  fail instead of rotting (the field list is parsed from
+  ``src/repro/core/schemes.py``, no import needed).
 
 ``--xla*`` flags (XLA's own) are exempt.  External links (``http://`` /
 ``https://`` / ``mailto:``) are not fetched — CI must not depend on
@@ -119,14 +124,45 @@ def check_flags(src: pathlib.Path, text: str, known: set[str]) -> list[str]:
     return errors
 
 
+# a scheme-field-shaped token: a comm dimension plus one or more
+# direction/level suffixes.  Deliberately narrow — bench row names like
+# `tp_allreduce` or scheme names like `hier_zpp_8_16` never match.
+_SCHEME_FIELD_RE = re.compile(
+    r"\b(?:dp|zero|tp|pp|ep)(?:_(?:fwd|bwd|inner|outer))+\b")
+_FIELD_DECL_RE = re.compile(r"^    (\w+): str(?:\s*\|\s*None)? =",
+                            re.MULTILINE)
+
+
+def scheme_fields() -> set[str]:
+    """The Scheme dataclass's tag-field names, parsed (not imported) from
+    src/repro/core/schemes.py — stdlib-only, like the rest of this
+    checker."""
+    src = (ROOT / "src" / "repro" / "core" / "schemes.py") \
+        .read_text(encoding="utf-8")
+    return set(_FIELD_DECL_RE.findall(src))
+
+
+def check_scheme_tags(src: pathlib.Path, text: str,
+                      known: set[str]) -> list[str]:
+    errors = []
+    for tok in sorted(set(_SCHEME_FIELD_RE.findall(text))):
+        if tok not in known:
+            errors.append(
+                f"{src.relative_to(ROOT)}: stale scheme-field reference "
+                f"`{tok}` (no such Scheme field / comm tag)")
+    return errors
+
+
 def check() -> list[str]:
     errors = []
     known_flags = defined_flags()
+    known_fields = scheme_fields()
     for src in md_files():
         raw = src.read_text(encoding="utf-8")
         text = _FENCE_RE.sub("", raw)
         # flags are checked in fenced blocks too — usage examples live there
         errors += check_flags(src, raw, known_flags)
+        errors += check_scheme_tags(src, raw, known_fields)
         targets = [m.group(1) for m in _LINK_RE.finditer(text)]
         targets += [m.group(1) for m in _IMG_RE.finditer(text)]
         for t in targets:
