@@ -43,7 +43,8 @@ def _trace_step_bytes(arch, scheme, mesh):
     binputs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32)}
     with comms.record_traffic() as events:
-        trainer.step.lower(pstructs, ostructs, binputs)
+        trainer.step.lower(pstructs, ostructs,
+                           trainer.codec_structs(), binputs)
     return rl.ledger_summary(events, train=True)
 
 
@@ -224,7 +225,8 @@ def _hier_step_sweep(rows):
         binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
                    "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
         with comms.record_traffic() as events:
-            trainer.step.lower(pstructs, ostructs, binputs)
+            trainer.step.lower(pstructs, ostructs,
+                           trainer.codec_structs(), binputs)
         lb = rl.link_bytes(events, train=True, slow_axes=slow_axes)
         led = rl.ledger_summary(events, train=True)
         rows.append((f"train_step_{arch}_{name}_{scheme}",
@@ -257,7 +259,8 @@ def _pp_step_sweep(rows):
         binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
                    "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
         with comms.record_traffic() as events:
-            trainer.step.lower(pstructs, ostructs, binputs)
+            trainer.step.lower(pstructs, ostructs,
+                           trainer.codec_structs(), binputs)
         led = rl.ledger_summary(events, train=True)
         assert led["per_dim"].get("pp", 0) > 0, "no pp bytes in the ledger"
         rows.append((f"train_step_{arch}_{name}_{scheme}",

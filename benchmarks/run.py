@@ -85,7 +85,8 @@ def _ledger_events(arch: str) -> list:
     binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
                "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
     with comms.record_traffic() as events:
-        trainer.step.lower(pstructs, ostructs, binputs)
+        trainer.step.lower(pstructs, ostructs, trainer.codec_structs(),
+                           binputs)
     jax.clear_caches()
     return events
 

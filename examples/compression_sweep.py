@@ -68,11 +68,12 @@ def main():
         # same adapter and resolves identically.
         trainer = Trainer(model, mesh, scheme=pol,
                           opt_cfg=AdamConfig(lr=3e-3))
-        params, ostate = trainer.init_all(jax.random.key(0))
+        params, ostate, cstate = trainer.init_all(jax.random.key(0))
         with comms.record_traffic() as events:
             trainer.step.lower(
                 jax.tree.map(compat.typeof, params),
                 jax.tree.map(compat.typeof, ostate),
+                jax.tree.map(compat.typeof, cstate),
                 {k: compat.typeof(jax.numpy.asarray(v))
                  for k, v in data.batch(0).items()})
         led = rl.ledger_summary(events, train=True)
@@ -82,7 +83,8 @@ def main():
         for s in range(args.steps):
             b = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in data.batch(s).items()}
-            params, ostate, m = trainer.step(params, ostate, b)
+            params, ostate, cstate, m = trainer.step(params, ostate,
+                                                     cstate, b)
             losses.append(float(m["loss"]))
         final = float(np.mean(losses[-8:]))
         print(f"{pol.name:16s} {final:10.4f} {led['total_bytes']/1e6:13.2f} "

@@ -34,7 +34,7 @@ def main():
 
     for scheme in ("baseline", "zhybrid_16_8"):
         trainer = Trainer(model, mesh, scheme=scheme)
-        params, ostate = trainer.init_all(jax.random.key(0))
+        params, ostate, cstate = trainer.init_all(jax.random.key(0))
         bspecs = batch_specs(cfg, mi)
         batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in data.batch(0).items()}
@@ -43,6 +43,7 @@ def main():
             trainer.step.lower(
                 jax.tree.map(lambda x: compat.typeof(x), params),
                 jax.tree.map(lambda x: compat.typeof(x), ostate),
+                jax.tree.map(lambda x: compat.typeof(x), cstate),
                 jax.tree.map(lambda x: compat.typeof(x), batch))
         led = rl.ledger_summary(events, train=True)
         # and actually run a few steps
@@ -50,7 +51,8 @@ def main():
         for s in range(5):
             b = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in data.batch(s).items()}
-            params, ostate, m = trainer.step(params, ostate, b)
+            params, ostate, cstate, m = trainer.step(params, ostate,
+                                                     cstate, b)
             losses.append(float(m["loss"]))
         print(f"[{scheme:14s}] losses {['%.3f' % l for l in losses]}  "
               f"wire/step = {led['total_bytes'] / 1e6:.2f} MB  "

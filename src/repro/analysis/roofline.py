@@ -44,11 +44,17 @@ _ITEMSIZE = {"float32": 4, "bfloat16": 2, "float16": 2, "int32": 4,
              "int8": 1, "uint8": 1, "int16": 2, "bool": 1}
 
 
-def _bpv(codec_name: str, dtype: str) -> float:
+def _wire_bytes(codec_name: str, elems: int, dtype: str) -> float:
+    """Wire bytes of an ``elems``-value payload under ``codec_name``.
+
+    Constant-rate codecs price as elems x bits-per-value; shape-aware
+    codecs (``plr<r>``: rank * (rows + cols) floats vs rows * cols — and
+    ``ef:*`` at its inner codec's cost) answer through
+    ``Codec.wire_nbytes_for``."""
     c = codecs.get(codec_name)
     if c.is_identity:
-        return _ITEMSIZE.get(dtype, 4)
-    return c.wire_bits_per_value() / 8.0
+        return elems * _ITEMSIZE.get(dtype, 4)
+    return c.wire_nbytes_for(elems)
 
 
 def event_bytes(ev: dict, train: bool) -> dict:
@@ -64,14 +70,15 @@ def event_bytes(ev: dict, train: bool) -> dict:
     factor = _PER_DEVICE_FACTOR[ev["op"]](n)
     if ev.get("bidir"):
         factor *= 0.5  # two-direction rings: each link carries half
-    fwd = ev["elems"] * _bpv(ev["codec_fwd"], ev["dtype"]) * factor
+    fwd = _wire_bytes(ev["codec_fwd"], ev["elems"], ev["dtype"]) * factor
     if train and ev.get("remat"):
         fwd *= 2                 # forward re-executes in the remat bwd
     bwd = 0.0
     if train and ev.get("bwd_op"):
         bwd_factor = factor if ev["op"] != "none" else \
             _PER_DEVICE_FACTOR[ev["bwd_op"]](n)
-        bwd = ev["elems"] * _bpv(ev["codec_bwd"], ev["dtype"]) * bwd_factor
+        bwd = _wire_bytes(ev["codec_bwd"], ev["elems"], ev["dtype"]) \
+            * bwd_factor
     return {"fwd": fwd * ev["mult"], "bwd": bwd * ev["mult"]}
 
 
@@ -240,11 +247,16 @@ def _two_level_ar_events(scheme_name: str, elems: int, n_inner: int,
 
 # mild -> aggressive outer codec, with the registered scheme realizing it
 # (all rungs share the mild bq16 inner codec; only the inter-node stage
-# tightens as the ladder descends)
+# tightens as the ladder descends).  The rate-4 rung is the ERROR-FEEDBACK
+# wrapped ef:bq4 — same wire bytes as raw bq4, but convergence-safe (the
+# carried residual re-injects the quantization error), so raw bq4 is never
+# the right pick; the final rung is the low-rank plr codec, whose
+# rank*(m+n) wire is priced shape-aware via recost_events.
 _SUGGEST_LADDER = (
     ("hier_zpp_16_16", "bq16"),
     ("hier_zpp_8_16", "bq8"),
-    ("hier_zpp_4_16", "bq4"),
+    ("hier_zpp_ef4_16", "ef:bq4"),
+    ("hier_zpp_plr8_16", "plr8"),
 )
 
 

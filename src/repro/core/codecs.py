@@ -7,38 +7,94 @@
   benefit (§IV-D) while perfectly preserving loss.
 * ``bq8/bq16/bq24`` — fixed-rate lossy block quantization, the TPU-native
   analogue of ZFP rate:8/16/24 (DESIGN.md §2).
+* ``ef:<codec>`` — error-feedback wrapper around any lossy codec
+  (compensate with the stashed residual -> encode -> stash the new
+  quantization error).  The fix for the naive-scheme loss degradation the
+  paper measures in §IV: the bias of the inner codec is re-injected next
+  step instead of lost.
+* ``plr<rank>`` — PowerSGD-style low-rank projection (arXiv:1905.13727)
+  with warm-started power-iteration factors; wire is ``r*(m+n)`` floats
+  instead of ``m*n`` (kernels in :mod:`repro.kernels.lowrank`).
 
 A codec turns a tensor into a *wire pytree* whose leaves are what actually
 crosses the interconnect; collectives in ``comms.py`` operate leaf-wise on
 that pytree, so the byte reduction is visible in the lowered HLO.
+
+Stateful protocol
+-----------------
+Codecs carry optional per-site state::
+
+    state  = codec.init_state(shape, dtype)      # None for stateless codecs
+    wire, state = codec.encode(x, state)
+    x~     = codec.decode(wire, shape, dtype)
+
+``state is None`` is the zero-cost path: every pre-existing codec
+(``none``/``mpc``/``bq*``/``gq*``/``tq*``) returns ``None`` from
+``init_state`` and threads nothing, so its wires stay byte-identical to
+the stateless era.  ``ef:*`` carries the error-feedback residual (plus
+the inner codec's state, if any — ``ef:plr8`` is PowerSGD with error
+feedback); ``plr*`` carries the warm projection factor ``Q``.  The
+trainers thread a pytree of these states through the jitted step next to
+``opt_state`` (template: ``CommPlan.codec_state_template``); the comms
+entry points read/write it through ``comms.codec_state_io``.
+
+Parameterized names (``ef:bq4``, ``plr8``) parse and validate eagerly —
+``codecs.get`` at :class:`~repro.core.policy.Rule`/Scheme construction
+rejects a typo'd inner codec or rank before anything traces.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
+import re
 
 import jax.numpy as jnp
 
-from repro.kernels import ops
+from repro.kernels import lowrank, ops
 from repro.kernels.ref import BLOCK
 
 
 @dataclasses.dataclass(frozen=True)
 class Codec:
-    """Base codec: identity (uncompressed) wire."""
+    """Base codec: identity (uncompressed) wire, no carried state."""
 
     name: str = "none"
     lossless: bool = True
 
+    # -- carried-state protocol -------------------------------------------
+    # ``kind`` is the comms-layer dispatch key for stateful families
+    # ("ef" / "lowrank"); None for stateless codecs.  A new stateful
+    # family must set it (comms raises on unknown kinds rather than
+    # guessing).
+    kind: str | None = dataclasses.field(default=None, init=False,
+                                         repr=False)
+
+    @property
+    def stateful(self) -> bool:
+        return False
+
+    def init_state(self, shape, dtype):
+        """Per-site state template for a payload of ``shape``/``dtype``;
+        ``None`` for stateless codecs (no pytree bloat in the step)."""
+        return None
+
     # -- wire interface ----------------------------------------------------
-    def encode(self, x):
-        return {"raw": x}
+    def encode(self, x, state=None):
+        """x [, state] -> (wire pytree, state').  Stateless codecs ignore
+        and return ``None`` state."""
+        return {"raw": x}, None
 
     def decode(self, wire, shape, dtype):
         return wire["raw"].reshape(shape).astype(dtype)
 
     def wire_bits_per_value(self, dtype=jnp.float32) -> float:
         return jnp.dtype(dtype).itemsize * 8
+
+    def wire_nbytes_for(self, n_elems: int) -> float:
+        """Wire bytes for an ``n_elems``-value payload (shape-aware codecs
+        like ``plr`` override: their rate is not per-value-constant)."""
+        return n_elems * self.wire_bits_per_value() / 8.0
 
     @property
     def is_identity(self) -> bool:
@@ -68,8 +124,8 @@ class BqCodec(Codec):
     def __post_init__(self):
         object.__setattr__(self, "name", f"bq{self.bits}")
 
-    def encode(self, x):
-        return ops.bq_encode(x, self.bits, self.backend)
+    def encode(self, x, state=None):
+        return ops.bq_encode(x, self.bits, self.backend), None
 
     def decode(self, wire, shape, dtype):
         return ops.bq_decode(wire, self.bits, shape, dtype, self.backend)
@@ -112,9 +168,9 @@ class GqCodec(Codec):
     def _qmax(self):
         return float(2 ** (self.bits - 1) - 1)
 
-    def encode(self, x):
+    def encode(self, x, state=None):
         from repro.kernels import ops as kops
-        return self.encode_blocks(kops.to_blocks(x))
+        return self.encode_blocks(kops.to_blocks(x)), None
 
     def decode(self, wire, shape, dtype):
         from repro.kernels import ops as kops
@@ -169,22 +225,209 @@ class TqCodec(GqCodec):
         return {"q_hi": q, "q_lo": None, "scale": scale}
 
 
+# --------------------------------------------------------------------------
+# stateful codec families
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EfCodec(Codec):
+    """Error-feedback wrapper: carry the inner codec's quantization error
+    as a residual and re-inject it before the next encode.
+
+    The classic EF-SGD construction (1-bit Adam / EF-signSGD lineage):
+    ``xc = x + e_t``; transmit ``C(xc)``; ``e_{t+1} = xc - D(C(xc))``.
+    Any *biased* inner codec (the truncating ``tq``, aggressive ``bq4``)
+    becomes unbiased-in-the-limit, which is what lets the DP gradient
+    dimension run aggressive rates without the §IV loss degradation.
+    Wire and rate are exactly the inner codec's; only the carried
+    residual (one f32 per payload element, optimizer-side) is new.
+    ``ef:plr<r>`` nests the low-rank codec's factor state under
+    ``state["inner"]`` — PowerSGD with error feedback."""
+
+    name: str = "ef"
+    lossless: bool = False
+    inner: Codec = None
+
+    kind = "ef"
+
+    def __post_init__(self):
+        if not isinstance(self.inner, Codec):
+            raise KeyError("ef codec needs an inner codec ('ef:<codec>')")
+        if self.inner.is_identity:
+            raise KeyError(
+                f"ef wraps *lossy* codecs (there is no error to feed back "
+                f"for {self.inner.name!r})")
+        if isinstance(self.inner, EfCodec):
+            raise KeyError("ef:ef:* is redundant — one residual suffices")
+        object.__setattr__(self, "name", f"ef:{self.inner.name}")
+
+    @property
+    def stateful(self) -> bool:
+        return True
+
+    def init_state(self, shape, dtype):
+        st = {"residual": jnp.zeros(shape, jnp.float32)}
+        inner_st = self.inner.init_state(shape, dtype)
+        if inner_st is not None:
+            st["inner"] = inner_st
+        return st
+
+    def compensate(self, x, state):
+        """x + stashed residual (the 'compensate' step), in f32."""
+        return x.astype(jnp.float32) + state["residual"].reshape(x.shape)
+
+    def _residual_state(self, xc, wire, inner_state):
+        """State after transmitting ``wire`` for compensated ``xc``: the
+        roundtrip error is the new residual."""
+        dec = self.inner.decode(wire, xc.shape, jnp.float32)
+        st = {"residual": xc - dec}
+        if inner_state is not None:
+            st["inner"] = inner_state
+        return st
+
+    def next_state(self, xc, inner_state=None):
+        """New state after transmitting ``xc``: the local roundtrip error
+        of the inner codec (the standard local-quantization-error proxy
+        for ring collectives, whose hop re-encodes are not observable)."""
+        wire, inner_state = self.inner.encode(xc, inner_state)
+        return self._residual_state(xc, wire, inner_state)
+
+    def encode(self, x, state=None):
+        if state is None:
+            state = self.init_state(x.shape, x.dtype)
+        xc = self.compensate(x, state)
+        wire, inner_st = self.inner.encode(xc, state.get("inner"))
+        return wire, self._residual_state(xc, wire, inner_st)
+
+    def decode(self, wire, shape, dtype):
+        return self.inner.decode(wire, shape, dtype)
+
+    def wire_bits_per_value(self, dtype=jnp.float32) -> float:
+        return self.inner.wire_bits_per_value(dtype)
+
+    def wire_nbytes_for(self, n_elems: int) -> float:
+        return self.inner.wire_nbytes_for(n_elems)
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+
+@dataclasses.dataclass(frozen=True)
+class PlrCodec(Codec):
+    """PowerSGD-style low-rank projection with a warm-started factor.
+
+    The payload is viewed as a near-square matrix ``M (m, n)``
+    (:func:`repro.kernels.lowrank.mat_shape`); the wire is the factor pair
+    ``(P^, Q') = (orth(M Q), M^T P^)`` — ``r*(m+n)`` floats vs ``m*n`` —
+    and the carried state is ``Q`` (one warm power-iteration step per
+    training step).  Both wire factors are LINEAR in ``M``, which is what
+    lets the comms layer all-reduce them raw and reconstruct the summed
+    gradient (``comms._lowrank_psum_impl``)."""
+
+    name: str = "plr"
+    lossless: bool = False
+    rank: int = 8
+    backend: str | None = None  # None -> ops default
+
+    kind = "lowrank"
+
+    # the unrolled Gram-Schmidt in kernels/lowrank.py is O(rank^2) traced
+    # ops — cap the rank so a fat-fingered 'plr256' fails eagerly instead
+    # of hanging the first trace
+    MAX_RANK = 64
+
+    def __post_init__(self):
+        if not 1 <= self.rank <= self.MAX_RANK:
+            raise KeyError(f"plr rank must be in [1, {self.MAX_RANK}], "
+                           f"got {self.rank}")
+        object.__setattr__(self, "name", f"plr{self.rank}")
+
+    @property
+    def stateful(self) -> bool:
+        return True
+
+    def init_state(self, shape, dtype):
+        n = math.prod(shape)
+        _, ncols = lowrank.mat_shape(n)
+        return {"q": lowrank.init_factor(ncols, lowrank.rank_for(n, self.rank))}
+
+    def encode(self, x, state=None):
+        if state is None:
+            state = self.init_state(x.shape, x.dtype)
+        mat = lowrank.to_mat(x.reshape(-1))
+        p = lowrank.matmul(mat, state["q"], self.backend)
+        phat = lowrank.orthonormalize(p)
+        q_new = lowrank.matmul(mat.T, phat, self.backend)
+        return {"p": phat, "q": q_new}, {"q": lowrank.orthonormalize(q_new)}
+
+    def decode(self, wire, shape, dtype):
+        out = lowrank.matmul(wire["p"], wire["q"].T, self.backend)
+        return lowrank.from_mat(out, math.prod(shape)).reshape(shape) \
+            .astype(dtype)
+
+    def wire_nbytes_for(self, n_elems: int) -> float:
+        m, ncols = lowrank.mat_shape(n_elems)
+        return float(lowrank.rank_for(n_elems, self.rank) * (m + ncols) * 4)
+
+    def wire_bits_per_value(self, dtype=jnp.float32) -> float:
+        # nominal asymptotic rate (m >> n): 32 * r / ncols bits/value; the
+        # exact, shape-aware pricing is wire_nbytes_for
+        return 32.0 * self.rank / lowrank.NCOLS_MAX
+
+    @property
+    def is_identity(self) -> bool:
+        return False
+
+
 NONE = Codec()
 MPC = MpcCodec()
 GQ8 = GqCodec(bits=8)
 TQ8 = TqCodec(bits=8)
+TQ4 = TqCodec(bits=4)   # rate-4 truncation: the aggressive-DP knee finder
 BQ4 = BqCodec(bits=4)   # beyond-paper: nibble-packed rate 4 (knee finder)
 BQ8 = BqCodec(bits=8)
 BQ16 = BqCodec(bits=16)
 BQ24 = BqCodec(bits=24)
 
-_REGISTRY = {c.name: c for c in (NONE, MPC, GQ8, TQ8, BQ4, BQ8, BQ16, BQ24)}
+_REGISTRY = {c.name: c for c in (NONE, MPC, GQ8, TQ8, TQ4, BQ4, BQ8, BQ16,
+                                 BQ24)}
+
+# parameterized instances (ef:bq4, plr8, ...) are parsed once and cached
+_PARAMETRIC: dict = {}
+
+_PLR_RE = re.compile(r"plr(\d+)$")
+
+
+def names() -> list[str]:
+    """Registered concrete codec names (parameterized families — the
+    ``ef:<codec>`` wrappers and ``plr<rank>`` — are constructed on demand
+    by :func:`get` and are not enumerated here)."""
+    return sorted(_REGISTRY)
+
+
+def _parse(name: str) -> Codec:
+    if name.startswith("ef:"):
+        return EfCodec(inner=get(name[3:]))
+    m = _PLR_RE.match(name)
+    if m:
+        return PlrCodec(rank=int(m.group(1)))
+    raise KeyError(
+        f"unknown codec {name!r}; registered: {names()}; parameterized "
+        f"forms: 'ef:<lossy codec>' (error feedback, e.g. 'ef:bq4') and "
+        f"'plr<rank>' (low-rank projection, e.g. 'plr8')")
 
 
 def get(name) -> Codec:
     if isinstance(name, Codec):
         return name
-    try:
-        return _REGISTRY[name]
-    except KeyError:
-        raise KeyError(f"unknown codec {name!r}; have {sorted(_REGISTRY)}") from None
+    c = _REGISTRY.get(name)
+    if c is not None:
+        return c
+    c = _PARAMETRIC.get(name)
+    if c is None:
+        if not isinstance(name, str):
+            raise KeyError(f"unknown codec {name!r}; have {names()}")
+        c = _parse(name)           # eager: a typo'd inner codec fails HERE
+        _PARAMETRIC[name] = c
+    return c

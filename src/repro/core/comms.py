@@ -27,6 +27,19 @@ gradients crossing MP collectives in the backward pass get the MP codec).
 Compression itself is straight-through for gradients — it is a wire-level,
 semantically-identity transform.
 
+Codec state: stateful codecs (``ef:*`` error-feedback residuals, ``plr*``
+low-rank warm factors — see :mod:`repro.core.codecs`) are carried-state
+transforms, supported at the optimizer's flat dp/zero sync sites
+(``psum`` outside autodiff, ``reduce_scatter_flat``, ``all_gather_flat``).
+The trainer threads the state pytree through the jitted step next to
+``opt_state`` and binds it around the optimizer with
+:class:`codec_state_io`; each site reads its slot (keyed by the site's
+ledger tag), rides the wire, and writes the updated state back.  A
+stateful codec resolving at an autodiff or hierarchical-stage site raises
+at trace time with the rule to exempt it — gradients are where the
+carried-state math (and the paper's aggressive-DP-compression story)
+applies.
+
 Hierarchy: every public entry point accepts ``axis`` as a plain name, a
 plain tuple of names (stock single-stage collective over the joint axis),
 or a :class:`repro.core.compat.AxisPair` ``(outer, inner)``.  An
@@ -208,6 +221,83 @@ def _codec_pair(tag, nbytes: int | None = None):
     return policy.current_plan().codec_pair(policy.as_site(tag), nbytes)
 
 
+def _require_stateless(s, *cs):
+    """Trace-time guard: carried-state codecs cannot ride autodiff twins
+    or hierarchical stage decompositions — their state read/write has no
+    home inside a ``custom_vjp`` backward or a two-level stage chain."""
+    for c in cs:
+        if getattr(c, "stateful", False):
+            raise NotImplementedError(
+                f"stateful codec {c.name!r} resolved at site "
+                f"{s.ledger_tag!r}: error-feedback / low-rank codecs ride "
+                f"only the optimizer's flat dp/zero sync sites "
+                f"(zero1_grad / zero1_param).  Exempt this site with a "
+                f"policy rule, e.g. Rule('bq8', dim='{s.dim}') ordered "
+                f"before the stateful rule.")
+
+
+# --------------------------------------------------------------------------
+# codec-state io: the carried state of stateful codecs (ef:*, plr*)
+# --------------------------------------------------------------------------
+
+_state = threading.local()
+
+
+class codec_state_io:
+    """Bind the codec-state pytree for the optimizer's sync region.
+
+    The trainer passes the step's codec-state dict (one slot per stateful
+    site, keyed by the site's ledger tag — the template comes from
+    ``CommPlan.codec_state_template``); each stateful comms site reads
+    its slot and writes the updated state back.  ``collect()`` returns
+    the post-region dict (same structure — slots of sites that did not
+    fire, e.g. on a trivial axis, keep their old value), which the step
+    returns next to ``opt_state``.  Thread-local, so parallel tracing
+    stays correct."""
+
+    def __init__(self, states: dict | None):
+        self.states = dict(states or {})
+
+    def __enter__(self):
+        self.prev = getattr(_state, "io", None)
+        _state.io = self
+        return self
+
+    def __exit__(self, *exc):
+        _state.io = self.prev
+        return False
+
+    def read(self, key: str):
+        try:
+            return self.states[key]
+        except KeyError:
+            raise KeyError(
+                f"no codec-state slot for site {key!r} (have "
+                f"{sorted(self.states)}); the trainer's state template "
+                f"(Trainer.codec_sites) does not cover this site — route "
+                f"it to a stateless codec with a policy rule") from None
+
+    def write(self, key: str, st):
+        self.states[key] = st
+
+    def collect(self) -> dict:
+        return dict(self.states)
+
+
+def _state_slot(s, c):
+    """(io, key, state) for a stateful codec at a supported site."""
+    io = getattr(_state, "io", None)
+    key = s.ledger_tag
+    if io is None:
+        raise RuntimeError(
+            f"stateful codec {c.name!r} resolved for site {key!r} outside "
+            f"a codec-state region: ef:*/plr* codecs ride only the "
+            f"optimizer's dp/zero sync sites, which the trainers wrap in "
+            f"comms.codec_state_io(...).  Route this site to a stateless "
+            f"codec with a policy rule (e.g. Rule('bq8', dim='{s.dim}')).")
+    return io, key, io.read(key)
+
+
 AxisPair = compat.AxisPair
 
 
@@ -379,7 +469,7 @@ def _all_gather_impl(x, axis, axis_dim, codec):
     if codec.is_identity:
         _log("all_gather", "-", codec, x.size * x.dtype.itemsize, n - 1)
         return lax.all_gather(x, axis, axis=axis_dim, tiled=True)
-    wire = codec.encode(x)
+    wire, _ = codec.encode(x)
     _log("all_gather", "-", codec, ops.wire_nbytes(wire), n - 1)
     gathered = jax.tree.map(
         lambda l: lax.all_gather(l, axis, axis=0, tiled=False), wire)
@@ -397,7 +487,7 @@ def _ppermute_impl(x, axis, perm, codec):
     if codec.is_identity:
         _log("ppermute", "-", codec, x.size * x.dtype.itemsize, 1)
         return lax.ppermute(x, axis, perm)
-    wire = codec.encode(x)
+    wire, _ = codec.encode(x)
     _log("ppermute", "-", codec, ops.wire_nbytes(wire), 1)
     wire = jax.tree.map(lambda l: lax.ppermute(l, axis, perm), wire)
     return codec.decode(wire, x.shape, x.dtype)
@@ -570,11 +660,18 @@ _f_vjp.defvjp(_f_fwd, _f_bwd)
 def psum(x, axis, tag):
     """All-reduce-sum over ``axis`` under the active plan's codec for ``tag``.
 
-    AxisPair axes route to :func:`hier_all_reduce`."""
+    AxisPair axes route to :func:`hier_all_reduce`.  A stateful codec
+    (``ef:*``/``plr*``) routes through the carried-state sum path — valid
+    only at the optimizer's sync sites (inside ``codec_state_io``), never
+    under autodiff."""
     s = policy.as_site(tag)
     if _is_pair(axis):
         return hier_all_reduce(x, axis.inner, axis.outer, s)
     c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    if c_fwd.stateful or c_bwd.stateful:
+        if s.dim in policy.DIRECTED_DIMS:
+            _require_stateless(s, c_fwd, c_bwd)  # raises
+        return _stateful_psum(x, axis, s, c_fwd)
     _account("all_reduce", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="all_reduce", level=s.level or "flat")
     return _psum_vjp(x, axis, c_fwd, c_bwd)
@@ -587,6 +684,7 @@ def all_gather(x, axis, axis_dim: int, tag):
     if _is_pair(axis):
         return hier_all_gather(x, axis.inner, axis.outer, axis_dim, s)
     c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    _require_stateless(s, c_fwd, c_bwd)
     _account("all_gather", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="reduce_scatter", level=s.level or "flat")
     return _ag_vjp(x, axis, axis_dim, c_fwd, c_bwd)
@@ -599,6 +697,7 @@ def reduce_scatter(x, axis, axis_dim: int, tag):
     if _is_pair(axis):
         return hier_reduce_scatter(x, axis.inner, axis.outer, axis_dim, s)
     c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    _require_stateless(s, c_fwd, c_bwd)
     _account("reduce_scatter", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="all_gather", level=s.level or "flat")
     return _rs_vjp(x, axis, axis_dim, c_fwd, c_bwd)
@@ -615,6 +714,7 @@ def ppermute(x, axis, perm, tag):
         return hier_ppermute(x, axis.inner, axis.outer, perm, s)
     nbytes = _payload_nbytes(x)
     c_fwd, c_bwd = _codec_pair(s, nbytes)
+    _require_stateless(s, c_fwd, c_bwd)
     perm = tuple(perm)
     # pro-rate partial permutations: only len(perm)/n ranks send, so the
     # average per-device bytes scale by the edge fraction (matches the
@@ -667,6 +767,7 @@ def all_to_all(x, axis, split_axis: int, concat_axis: int, tag):
         return hier_all_to_all(x, axis.inner, axis.outer, split_axis,
                                concat_axis, s)
     c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    _require_stateless(s, c_fwd, c_bwd)
     _account("all_to_all", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="all_to_all", level=s.level or "flat")
     return _a2a_vjp(x, axis, split_axis, concat_axis, c_fwd, c_bwd)
@@ -691,6 +792,7 @@ def copy_fwd_psum_bwd(x, axis, tag):
             {"inner": nbytes, "outer": chunk * x.dtype.itemsize})
         return _hier_g_vjp(x, axis.inner, axis.outer, (ci_b, co_b))
     _, c_bwd = _codec_pair(s, nbytes)
+    _require_stateless(s, c_bwd)
     _account("none", s.ledger_tag, x, axis, c_bwd, c_bwd,
              bwd_op="all_reduce", level=s.level or "flat")
     return _g_vjp(x, axis, c_bwd)
@@ -716,6 +818,7 @@ def psum_fwd_copy_bwd(x, axis, tag):
             {"inner": nbytes, "outer": chunk * x.dtype.itemsize})
         return _hier_f_vjp(x, axis.inner, axis.outer, (ci_f, co_f))
     c_fwd, _ = _codec_pair(s, nbytes)
+    _require_stateless(s, c_fwd)
     _account("all_reduce", s.ledger_tag, x, axis, c_fwd, c_fwd,
              bwd_op=None, level=s.level or "flat")
     return _f_vjp(x, axis, c_fwd)
@@ -749,8 +852,11 @@ def _hier_codec_pairs(tag, nbytes_inner: int | None = None,
     ``nbytes_*`` carry the per-stage payload sizes — the outer stage of a
     two-level op moves only a 1/n_inner chunk, so size rules see what
     actually crosses the slow links."""
-    return policy.current_plan().hier_codec_pairs(
-        policy.as_site(tag), nbytes_inner, nbytes_outer)
+    s = policy.as_site(tag)
+    pairs = policy.current_plan().hier_codec_pairs(s, nbytes_inner,
+                                                   nbytes_outer)
+    _require_stateless(s, *pairs[0], *pairs[1])
+    return pairs
 
 
 def _hier_psum_impl(x, inner, outer, c_in, c_out):
@@ -1226,16 +1332,31 @@ pmax.defvjp(_pmax_fwd, _pmax_bwd)
 
 
 # --------------------------------------------------------------------------
-# flat-vector paths for the optimizer (outside autodiff)
+# flat-vector paths for the optimizer (outside autodiff).  These are the
+# sites that support carried-state codecs: the paper's aggressive-DP
+# compression target is exactly this gradient sync.
 # --------------------------------------------------------------------------
 
 def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag="dp",
                         mean: bool = False) -> jnp.ndarray:
-    """1-D sum-reduce-scatter: rank i returns padded chunk i (len ceil(n/axis))."""
+    """1-D sum-reduce-scatter: rank i returns padded chunk i (len ceil(n/axis)).
+
+    Stateful codecs: ``ef:*`` compensates with the stashed residual, rides
+    the inner codec's ring on the compensated vector, and stashes the new
+    local quantization error; ``plr*`` runs the two-factor low-rank
+    all-reduce and slices this rank's chunk of the reconstruction."""
     s = policy.as_site(tag)
     c, _ = _codec_pair(s, _payload_nbytes(flat))
+    if c.stateful and axis_size(axis) > 1:
+        return _stateful_reduce_scatter_flat(flat, axis, s, c, mean)
+    if c.stateful:          # trivial axis: nothing crosses the wire
+        c = codecs.NONE
     _account("reduce_scatter", s.ledger_tag, flat, axis, c, c, bwd_op=None,
              level=s.level or "flat")
+    return _reduce_scatter_flat_impl(flat, axis, c, mean)
+
+
+def _reduce_scatter_flat_impl(flat, axis, c, mean):
     n = axis_size(axis)
     if n == 1:
         # still tile-pad: consumers (the ZeRO-1 master chunk) size their
@@ -1245,7 +1366,7 @@ def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag="dp",
         return flat / n if mean else flat
     xb = _chunked_blocks(flat, n)
     if c.is_identity:
-        _log("reduce_scatter", tag, c, flat.size * flat.dtype.itemsize, 1)
+        _log("reduce_scatter", "-", c, flat.size * flat.dtype.itemsize, 1)
         chunk = lax.psum_scatter(xb, axis, scatter_dimension=0, tiled=False)
     else:
         chunk, _ = _ring_reduce_scatter(xb, axis, c)
@@ -1255,22 +1376,159 @@ def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag="dp",
 
 def all_gather_flat(chunk: jnp.ndarray, axis: str, total: int,
                     tag="zero") -> jnp.ndarray:
-    """Inverse of reduce_scatter_flat: gather padded chunks, trim to ``total``."""
+    """Inverse of reduce_scatter_flat: gather padded chunks, trim to ``total``.
+
+    ``ef:*`` codecs compensate the local chunk before encoding (qwZ-style
+    error feedback on the lossy param broadcast); low-rank codecs ride sum
+    collectives only and raise here."""
     s = policy.as_site(tag)
     c, _ = _codec_pair(s, _payload_nbytes(chunk))
+    if c.stateful and axis_size(axis) > 1:
+        if c.kind != "ef" or c.inner.stateful:
+            raise NotImplementedError(
+                f"codec {c.name!r} at gather site {s.ledger_tag!r}: "
+                "low-rank codecs ride sum collectives only (ef:<bq*> "
+                "works on gathers)")
+        io, key, st = _state_slot(s, c)
+        xc = c.compensate(chunk, st)
+        _account("all_gather", s.ledger_tag, xc, axis, c, c, bwd_op=None,
+                 level=s.level or "flat")
+        # one encode serves both the wire and the residual (unlike the
+        # ring paths, the gathered wire IS the local encode)
+        wire = c.inner.encode_blocks(xc.reshape(-1, BLOCK))
+        dec = c.inner.decode_blocks(wire).reshape(xc.shape)
+        io.write(key, {"residual": xc - dec})
+        gathered = jax.tree.map(
+            lambda l: lax.all_gather(l, axis, axis=0, tiled=True), wire)
+        return c.inner.decode_blocks(gathered).reshape(-1)[:total]
+    if c.stateful:
+        c = codecs.NONE
     _account("all_gather", s.ledger_tag, chunk, axis, c, c, bwd_op=None,
              level=s.level or "flat")
+    return _all_gather_flat_impl(chunk, axis, total, c)
+
+
+def _all_gather_flat_impl(chunk, axis, total, c):
     n = axis_size(axis)
     if n == 1:
         return chunk[:total]
     if c.is_identity:
-        _log("all_gather", tag, c, chunk.size * chunk.dtype.itemsize, n - 1)
+        _log("all_gather", "-", c, chunk.size * chunk.dtype.itemsize, n - 1)
         full = lax.all_gather(chunk, axis, axis=0, tiled=True)
     else:
         x2d = chunk.reshape(-1, BLOCK)
         wire = c.encode_blocks(x2d)
-        _log("all_gather", tag, c, ops.wire_nbytes(wire), n - 1)
+        _log("all_gather", "-", c, ops.wire_nbytes(wire), n - 1)
         gathered = jax.tree.map(
             lambda l: lax.all_gather(l, axis, axis=0, tiled=True), wire)
         full = c.decode_blocks(gathered).reshape(-1)
     return full[:total]
+
+
+# ---- carried-state sum collectives (ef:* and plr*) -----------------------
+
+def _lowrank_psum_impl(x, axis, c, state, want_local=False):
+    """PowerSGD-shaped two-factor all-reduce (arXiv:1905.13727).
+
+    Every rank holds the same warm factor ``Q`` (deterministic init, and
+    both updates below are computed from all-reduced values):
+
+        P   = allreduce_sum(M_i @ Q)        wire: m x r floats
+        P^  = orth(P)                       local, identical on all ranks
+        Q'  = allreduce_sum(M_i^T @ P^)     wire: n x r floats
+        sum ~ P^ @ Q'^T                     = low-rank approx of sum(M_i)
+
+    Returns ``(sum, state')`` — plus this rank's own reconstruction
+    ``P^ @ (M_i^T P^)^T`` when ``want_local`` (the error-feedback wrapper
+    needs the local transmitted approximation for its residual)."""
+    from repro.kernels import lowrank
+    n_ranks = axis_size(axis)
+    flatx = x.reshape(-1).astype(jnp.float32)
+    mat = lowrank.to_mat(flatx)
+    q = state["q"]
+    p = lowrank.matmul(mat, q, c.backend)
+    if n_ranks > 1:
+        p = lax.psum(p, axis)
+    phat = lowrank.orthonormalize(p)
+    q_loc = lowrank.matmul(mat.T, phat, c.backend)
+    q_new = lax.psum(q_loc, axis) if n_ranks > 1 else q_loc
+    out = lowrank.from_mat(lowrank.matmul(phat, q_new.T, c.backend),
+                           flatx.shape[0])
+    out = out.reshape(x.shape)
+    state2 = {"q": lowrank.orthonormalize(q_new)}
+    if want_local:
+        rec = lowrank.from_mat(lowrank.matmul(phat, q_loc.T, c.backend),
+                               flatx.shape[0]).reshape(x.shape)
+        return out, state2, rec
+    return out, state2
+
+
+def _stateful_psum(x, axis, s, c):
+    """All-reduce under a carried-state codec (optimizer-side, no VJP)."""
+    io, key, st = _state_slot(s, c)
+    if axis_size(axis) == 1:
+        return x        # nothing crosses the wire; the slot carries over
+    # accounting note: bwd_op matches what the stateless psum path records
+    # at the same site, so stateful-vs-stateless byte comparisons at one
+    # site (ef:bq4 vs raw bq4 — identical wires) stay apples-to-apples
+    if c.kind == "lowrank":
+        _account("all_reduce", s.ledger_tag, x, axis, c, c,
+                 bwd_op="all_reduce", level=s.level or "flat")
+        out, st2 = _lowrank_psum_impl(x, axis, c, st)
+        io.write(key, st2)
+        return out.astype(x.dtype)
+    if c.kind != "ef":
+        raise NotImplementedError(
+            f"carried-state codec {c.name!r} (kind={c.kind!r}) has no "
+            "sum-collective implementation in comms")
+    # error feedback: compensate -> ride the inner codec -> stash residual
+    xc = c.compensate(x, st)
+    _account("all_reduce", s.ledger_tag, xc, axis, c, c,
+             bwd_op="all_reduce", level=s.level or "flat")
+    if c.inner.stateful:    # ef:plr* — PowerSGD with error feedback
+        out, inner_st2, rec = _lowrank_psum_impl(xc, axis, c.inner,
+                                                 st["inner"],
+                                                 want_local=True)
+        io.write(key, {"residual": xc - rec, "inner": inner_st2})
+    else:
+        io.write(key, c.next_state(xc))
+        out = _psum_impl(xc, axis, c.inner)
+    return out.astype(x.dtype)
+
+
+def _stateful_reduce_scatter_flat(flat, axis, s, c, mean):
+    io, key, st = _state_slot(s, c)
+    n = axis_size(axis)
+    chunk_len = ops.padded_rows(-(-flat.shape[0] // n)) * BLOCK
+
+    def _take_chunk(total_vec):
+        padded = jnp.pad(total_vec, (0, n * chunk_len - total_vec.shape[0]))
+        chunk = lax.dynamic_index_in_dim(padded.reshape(n, chunk_len),
+                                         lax.axis_index(axis), 0,
+                                         keepdims=False)
+        return chunk / n if mean else chunk
+
+    if c.kind == "lowrank":
+        # the low-rank op is inherently an all-reduce; RS = AR + local slice
+        _account("all_reduce", s.ledger_tag, flat, axis, c, c, bwd_op=None,
+                 level=s.level or "flat")
+        total, st2 = _lowrank_psum_impl(flat, axis, c, st)
+        io.write(key, st2)
+        return _take_chunk(total)
+    if c.kind != "ef":
+        raise NotImplementedError(
+            f"carried-state codec {c.name!r} (kind={c.kind!r}) has no "
+            "reduce-scatter implementation in comms")
+    xc = c.compensate(flat, st)
+    if c.inner.stateful:    # ef:plr* — PowerSGD with error feedback
+        _account("all_reduce", s.ledger_tag, xc, axis, c, c, bwd_op=None,
+                 level=s.level or "flat")
+        total, inner_st2, rec = _lowrank_psum_impl(xc, axis, c.inner,
+                                                   st["inner"],
+                                                   want_local=True)
+        io.write(key, {"residual": xc - rec, "inner": inner_st2})
+        return _take_chunk(total)
+    _account("reduce_scatter", s.ledger_tag, xc, axis, c, c, bwd_op=None,
+             level=s.level or "flat")
+    io.write(key, c.next_state(xc))
+    return _reduce_scatter_flat_impl(xc, axis, c.inner, mean)

@@ -199,6 +199,12 @@ class Rule:
                 and self.min_bytes >= self.max_bytes:
             raise ValueError(f"empty size window [{self.min_bytes}, "
                              f"{self.max_bytes})")
+        if self.direction is not None and self.dim is not None \
+                and not any(d in DIRECTED_DIMS for d in self.dim):
+            raise KeyError(
+                f"rule pins direction {self.direction!r} but its "
+                f"dimension(s) {self.dim} carry no direction — the rule "
+                f"could never match")
 
     @property
     def dynamic(self) -> bool:
@@ -359,6 +365,45 @@ class CommPlan:
             return c, c
         return (self.codec(site_.dim, "fwd", "flat", nbytes, site_.name),
                 self.codec(site_.dim, "bwd", "flat", nbytes, site_.name))
+
+    def stateful_sites(self, sites) -> dict:
+        """Resolve the carried-state sites of this plan, ONCE.
+
+        ``sites`` is an iterable of ``(Site, local_shape, dtype)`` — the
+        carried-state-capable call sites a trainer emits (the optimizer's
+        flat dp/zero sync) with their per-rank payload shapes.  Each
+        site's codec is resolved exactly as the comms entry point will
+        (same nbytes, same name); sites whose codec is stateful map
+        ``{ledger_tag: (codec, shape, dtype)}``, stateless sites are
+        dropped.  Both the state template below and the trainer's
+        concrete state init derive from this one resolution, so they can
+        never disagree about which slots exist."""
+        import math
+
+        import jax.numpy as jnp
+
+        out = {}
+        for site_, shape, dtype in sites:
+            nbytes = math.prod(shape) * jnp.dtype(dtype).itemsize
+            c_fwd, _ = self.codec_pair(site_, nbytes)
+            if getattr(c_fwd, "stateful", False):
+                out[site_.ledger_tag] = (c_fwd, tuple(shape), dtype)
+        return out
+
+    def codec_state_template(self, sites) -> dict:
+        """The CodecState pytree template the trainer threads through the
+        step: one ``{ledger_tag: init_state ShapeDtypeStructs}`` slot per
+        stateful site of :meth:`stateful_sites`; stateless codecs
+        contribute **nothing** — no pytree bloat in the jitted step for
+        the pre-existing codec families."""
+        import functools
+
+        import jax
+
+        return {key: jax.eval_shape(functools.partial(c.init_state,
+                                                      shape, dtype))
+                for key, (c, shape, dtype)
+                in self.stateful_sites(sites).items()}
 
     def hier_codec_pairs(self, site_: Site, nbytes_inner: int | None = None,
                          nbytes_outer: int | None = None):

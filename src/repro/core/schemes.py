@@ -236,6 +236,17 @@ HIER_TPP_4_16 = Scheme.hier("hier_tpp_4_16", ZHYBRID_16_8,
                             inner="bq16", outer="bq4", dims=DIMS)
 HIER_MTPP_8 = Scheme.hier("hier_mtpp_8", MZHYBRID8,
                           inner="mpc", outer="bq8", dims=DIMS)
+# carried-state codec schemes (stateful protocol, repro.core.codecs):
+# error feedback makes the aggressive rate-4 DP setting convergence-safe
+# (the residual re-injects the quantization error the naive scheme loses),
+# and plr rides the low-rank gradient structure the paper cites
+# (arXiv:2301.02654) directly.  DP-dimension only — the model-layer (MP)
+# traffic keeps the mild stateless codecs, per the paper's hybrid rule.
+EF_ZHYBRID_16_4 = Scheme.hybrid("ef_zhybrid_16_4", dp="ef:bq4", mp="bq16")
+HIER_ZPP_EF4_16 = Scheme.hier("hier_zpp_ef4_16", ZHYBRID_16_8,
+                              inner="bq16", outer="ef:bq4", dims=("dp",))
+HIER_ZPP_PLR8_16 = Scheme.hier("hier_zpp_plr8_16", ZHYBRID_16_8,
+                               inner="bq16", outer="plr8", dims=("dp",))
 
 _REGISTRY = {s.name: s for s in (
     BASELINE, NAIVE_ZFP8, NAIVE_ZFP16, NAIVE_MPC,
@@ -244,6 +255,7 @@ _REGISTRY = {s.name: s for s in (
     NAIVE_TQ8, MZHYBRID_T8, ZHYBRID_8_4,
     HIER_ZPP_16_16, HIER_ZPP_8_16, HIER_ZPP_4_16, HIER_MZPP_8,
     HIER_TPP_8_16, HIER_TPP_4_16, HIER_MTPP_8,
+    EF_ZHYBRID_16_4, HIER_ZPP_EF4_16, HIER_ZPP_PLR8_16,
 )}
 
 

@@ -50,7 +50,9 @@ def _lower_cell(cfg, mesh, scheme, shape_name, bidir=False):
         if spec["kind"] == "train":
             trainer = Trainer(model, mesh, scheme=scheme, ring_bidir=bidir)
             ostructs = jax.eval_shape(trainer.opt_init, pstructs)
-            lowered = trainer.step.lower(pstructs, ostructs, spec["inputs"])
+            lowered = trainer.step.lower(pstructs, ostructs,
+                                         trainer.codec_structs(),
+                                         spec["inputs"])
             tokens = spec["meta"]["seq"] * spec["meta"]["batch"]
             train = True
         elif spec["kind"] == "prefill":

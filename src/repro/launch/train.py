@@ -14,6 +14,13 @@
         --dp 2 --tp 2 --scheme zhybrid_16_8 \
         --no-compress-below 65536 --codec-for 'embed*=bq16'
 
+    # carried-state codecs on the DP gradient sync: error-feedback bq4
+    # (convergence-safe aggressive rate) scoped to the ZeRO-1 grad site;
+    # the codec state checkpoints/restores next to the optimizer state
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
+        --dp 4 --tp 2 --scheme zhybrid_16_8 \
+        --codec-for 'dp@zero1_grad*=ef:bq4' --ckpt-dir /tmp/ck
+
 Features exercised here: compressed-collective policies (named schemes
 are rule presets; --no-compress-below / --codec-for prepend override
 rules), ZeRO-1(+3),
@@ -59,6 +66,40 @@ def _restore_opt(trainer, params, opt_dir, step, mesh, checkpoint):
         return trainer.opt_init(params)
 
 
+def _restore_codec(trainer, codec_dir, step, mesh, checkpoint):
+    """Resume the carried codec state (ef residuals / plr factors) saved
+    alongside the params.
+
+    Loud fallbacks mirror :func:`_restore_opt`: a pre-stateful-codec
+    checkpoint (no ``codec/`` subdir) or a topology change that reshapes
+    the flat sync vectors reinitializes the state with a warning —
+    resetting an error-feedback residual silently would quietly re-bias
+    the very gradients the ef codec exists to de-bias."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    template = trainer.codec_structs()
+    if not jax.tree_util.tree_leaves(template):
+        return {}
+    if not codec_dir or checkpoint.latest_step(codec_dir) != step:
+        print("WARNING: no codec-state checkpoint for this step — "
+              "reinitializing error-feedback/low-rank codec state "
+              "(pre-stateful-codec checkpoint?)")
+        return trainer.init_codec_state()
+    shardings = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), trainer.codec_state_specs(),
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    try:
+        cstate, _ = checkpoint.restore(codec_dir, template, step=step,
+                                       shardings=shardings)
+        print(f"restored codec state at step {step}")
+        return cstate
+    except (ValueError, AssertionError) as e:
+        print(f"WARNING: codec state not portable to this topology "
+              f"({e}) — reinitializing")
+        return trainer.init_codec_state()
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -99,10 +140,14 @@ def main():
                          "uncompressed (latency-bound small collectives "
                          "gain nothing from encode/decode)")
     ap.add_argument("--codec-for", action="append", default=[],
-                    metavar="NAME_GLOB=CODEC",
+                    metavar="[DIM@]NAME_GLOB=CODEC",
                     help="policy rule: override the codec for comm sites "
-                         "whose name matches the glob (repeatable; e.g. "
-                         "embed*=bq16 keeps embedding gathers mild)")
+                         "whose name matches the glob, optionally pinned "
+                         "to one parallelism dimension (repeatable; e.g. "
+                         "embed*=bq16 keeps embedding gathers mild, "
+                         "dp@zero1_grad*=ef:bq4 puts error-feedback rate-4 "
+                         "on the ZeRO-1 DP gradient sync, dp=plr8 covers a "
+                         "whole dimension)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--opt-state-bits", type=int, default=32)
     ap.add_argument("--ckpt-dir", default="")
@@ -152,8 +197,18 @@ def main():
     for spec in args.codec_for:
         pat, _, codec = spec.partition("=")
         if not pat or not codec:
-            ap.error(f"--codec-for wants NAME_GLOB=CODEC, got {spec!r}")
-        overrides.append(policy_lib.Rule(codec, name=pat))
+            ap.error(f"--codec-for wants [DIM@]NAME_GLOB=CODEC, got {spec!r}")
+        dim, at, name = pat.partition("@")
+        try:
+            if at and dim:                       # dp@zero1_grad*=ef:bq4
+                overrides.append(policy_lib.Rule(codec, dim=dim,
+                                                 name=name or None))
+            elif pat in policy_lib.DIMS:         # dp=plr8 (whole dimension)
+                overrides.append(policy_lib.Rule(codec, dim=pat))
+            else:                                # embed*=bq16 (name glob)
+                overrides.append(policy_lib.Rule(codec, name=pat))
+        except KeyError as e:                    # eager codec/dim validation
+            ap.error(f"--codec-for {spec!r}: {e}")
     if overrides:
         comm_policy = comm_policy.with_rules(
             *overrides, name=f"{comm_policy.name}+cli")
@@ -167,13 +222,15 @@ def main():
         global_batch=args.global_batch, seed=args.seed))
 
     opt_dir = os.path.join(args.ckpt_dir, "opt") if args.ckpt_dir else ""
+    codec_dir = os.path.join(args.ckpt_dir, "codec") if args.ckpt_dir else ""
     pending = []
 
     def save_all(step, blocking):
         t1 = checkpoint.save(args.ckpt_dir, step, params, blocking=blocking)
         t2 = checkpoint.save(opt_dir, step, ostate, blocking=blocking)
+        t3 = checkpoint.save(codec_dir, step, cstate, blocking=blocking)
         if not blocking:
-            pending.extend([t1, t2])
+            pending.extend([t1, t2, t3])
 
     start = 0
     if args.resume and args.ckpt_dir and \
@@ -184,10 +241,11 @@ def main():
         start = man["step"]
         ostate = _restore_opt(trainer, params, opt_dir, start, mesh,
                               checkpoint)
+        cstate = _restore_codec(trainer, codec_dir, start, mesh, checkpoint)
         print(f"resumed from step {start} (elastic onto dp={args.dp} "
               f"tp={args.tp} pp={args.pp})")
     else:
-        params, ostate = trainer.init_all(jax.random.key(args.seed))
+        params, ostate, cstate = trainer.init_all(jax.random.key(args.seed))
 
     bspecs = batch_specs(cfg, mi)
     if args.ckpt_dir:
@@ -201,7 +259,8 @@ def main():
         np_batch = data.batch(step)
         batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in np_batch.items()}
-        params, ostate, metrics = trainer.step(params, ostate, batch)
+        params, ostate, cstate, metrics = trainer.step(params, ostate,
+                                                       cstate, batch)
         info = mon.end(step)
         if step % 5 == 0 or step == start + args.steps - 1:
             print(f"step {step:5d} loss={float(metrics['loss']):.4f} "

@@ -36,6 +36,15 @@ intra-node links under ``zero_inner``.
 
 Optional 8-bit optimizer state (paper future-work [42]): m/v stored as
 bq8 blocks, decode -> update -> re-encode each step.
+
+Carried-state codecs: the flat ZeRO-1 sync sites below (``zero1_grad``
+reduce-scatter + its hier/pod psums, ``zero1_param`` all-gather) are the
+sites that support stateful codecs (``ef:*`` error feedback, ``plr*``
+low-rank) — the trainer wraps this ``apply`` in
+``comms.codec_state_io(codec_state)`` and each site reads/writes its slot
+keyed by the site's ledger tag.  ``Trainer.codec_sites`` enumerates these
+sites with their payload shapes; keep the two in lockstep when adding a
+sync site here.
 """
 
 from __future__ import annotations
@@ -244,13 +253,16 @@ class Adam:
                                 comms.Site("tp", "grad_fsdp", "bwd"))
             # (no stage fold here: fsdp only annotates layer-group plans,
             # which are always stage-stacked on a pipeline mesh)
+            # per-leaf site names: each class-A leaf is its own payload,
+            # so each gets its own codec-state slot under stateful dp
+            # codecs (Trainer.codec_sites enumerates the same indices)
             if mi.node_axis:
                 gv = comms.psum(gv, mi.node_axis,
-                                comms.Site("dp", "grad_fsdp",
+                                comms.Site("dp", f"grad_fsdp{i}",
                                            level="outer"))
             if mi.pod_axis:
                 gv = comms.psum(gv, mi.pod_axis,
-                                comms.Site("dp", "grad_fsdp_pod"))
+                                comms.Site("dp", f"grad_fsdp{i}_pod"))
             st = state["fsdp"][i]
             master, m, v = self._adam_update(gv * scale, st["m"], st["v"],
                                              st["master"], step)

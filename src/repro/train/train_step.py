@@ -4,6 +4,20 @@ One step = forward -> backward -> (compressed) gradient sync -> ZeRO-1
 update -> (compressed) param all-gather, all inside a single XLA program so
 the latency-hiding scheduler can overlap ring hops with compute.
 
+Codec state: stateful codecs (``ef:*`` error-feedback residuals, ``plr*``
+low-rank warm factors) carry a per-site state pytree that threads through
+the jitted step NEXT TO ``opt_state``::
+
+    params, opt_state, codec_state, metrics = trainer.step(
+        params, opt_state, codec_state, batch)
+
+The template is enumerated once per (plan, model) by
+:meth:`Trainer.codec_sites` + ``CommPlan.codec_state_template`` — one slot
+per stateful grad-sync site, keyed by the site's ledger tag; stateless
+policies yield an EMPTY pytree (zero cost, nothing donated, nothing
+checkpointed).  The step binds the state around the optimizer with
+``comms.codec_state_io`` so the sync sites can read/write their slots.
+
 Note on ``check_vma=False``: the updated class-B/C params come out of an
 all-gather over the data axis — *values* replicated, but typed "varying"
 by the vma system, which would reject the replicated out_specs.  The math
@@ -14,10 +28,13 @@ semantics.
 
 from __future__ import annotations
 
-import jax
-from jax.sharding import PartitionSpec as P
+import math
 
-from repro.core import compat
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import comms, compat
 from repro.core import policy as policy_lib
 from repro.models.model import Model
 from repro.models.params import MeshInfo
@@ -99,23 +116,131 @@ class Trainer:
         return {"fsdp": fsdp, "master": zero1, "m": mv, "v": mv, "step": P()}
 
     # ------------------------------------------------------------------
+    # codec state: template, specs, and host-side init
+    # ------------------------------------------------------------------
+    def _local_leaves(self):
+        """(local_shape, class) per param leaf — the shard shapes the
+        optimizer sees inside shard_map (via ``params.local_shape``, the
+        one canonical spec-to-mesh-axis division)."""
+        import types
+
+        from repro.models.params import local_shape
+        mi = self.model.mi
+        leaves, _, classes = _split_classes(self.model.structs())
+        return [(local_shape(types.SimpleNamespace(shape=l.v.shape,
+                                                   spec=l.spec), mi), c)
+                for l, c in zip(leaves, classes)]
+
+    def codec_sites(self):
+        """The carried-state-capable comm sites this trainer's step emits
+        — the optimizer's flat ZeRO-1 dp/zero sync plus the per-leaf fsdp
+        grad psums of node/pod meshes — with their per-rank payload
+        shapes.  Mirrors :meth:`repro.train.optimizer.Adam.apply` exactly
+        (site names, pinned levels, payload sizes), so the template built
+        from it matches what the traced step reads."""
+        mi = self.model.mi
+        local = self._local_leaves()
+        n = sum(math.prod(shape) for shape, c in local if c != "A")
+        chunk = self.opt._chunk_len(n)
+        hier = mi.node_axis is not None
+        f32 = jnp.float32
+        sites = []
+        # class-A (fsdp) leaves: one dp psum per leaf on node/pod meshes
+        for i, (shape, c) in enumerate(local):
+            if c != "A":
+                continue
+            if hier:
+                sites.append((comms.Site("dp", f"grad_fsdp{i}",
+                                         level="outer"), shape, f32))
+            if mi.pod_axis:
+                sites.append((comms.Site("dp", f"grad_fsdp{i}_pod"),
+                              shape, f32))
+        sites.append((comms.Site("dp", "zero1_grad",
+                                 level="inner" if hier else None),
+                      (n,), f32))
+        if hier:
+            sites.append((comms.Site("dp", "zero1_grad", level="outer"),
+                          (chunk,), f32))
+        if mi.pod_axis:
+            sites.append((comms.Site("dp", "zero1_grad_pod"), (chunk,), f32))
+        sites.append((comms.Site("zero", "zero1_param",
+                                 level="inner" if hier else None),
+                      (chunk,), f32))
+        return sites
+
+    def codec_state_template(self) -> dict:
+        """Per-rank (local) ShapeDtypeStructs of the codec-state pytree;
+        empty for stateless policies — no pytree bloat in the step."""
+        return self.plan.codec_state_template(self.codec_sites())
+
+    def _codec_joint_spec(self):
+        # every state leaf varies per rank in general (residuals track
+        # each rank's own gradient shard), so dim 0 shards honestly over
+        # the joint of ALL mesh axes — host round-trips are lossless
+        return P(tuple(self.model.mi.all_axes))
+
+    def codec_state_specs(self) -> dict:
+        spec = self._codec_joint_spec()
+        return jax.tree.map(lambda _: spec, self.codec_state_template())
+
+    def _codec_rep(self) -> int:
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        rep = 1
+        for a in self.model.mi.all_axes:
+            rep *= sizes[a]
+        return rep
+
+    def codec_structs(self) -> dict:
+        """GLOBAL ShapeDtypeStructs of the codec state (for ``.lower``
+        tracing and checkpoint restore)."""
+        rep = self._codec_rep()
+        return jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct((l.shape[0] * rep,) + l.shape[1:],
+                                           l.dtype),
+            self.codec_state_template())
+
+    def init_codec_state(self) -> dict:
+        """Device-resident initial codec state (host-built: zeros for
+        error-feedback residuals, the deterministic warm factor for plr —
+        identical on every rank, stored per-rank under the joint spec).
+        Derives its slots from the SAME ``plan.stateful_sites`` resolution
+        as the template, so init and traced-step expectations never
+        desync."""
+        rep = self._codec_rep()
+        sharding = NamedSharding(self.mesh, self._codec_joint_spec())
+        out = {}
+        for key, (c, shape, dtype) in \
+                self.plan.stateful_sites(self.codec_sites()).items():
+            st = c.init_state(shape, dtype)
+            out[key] = jax.tree.map(
+                lambda l: jax.device_put(
+                    jnp.tile(l, (rep,) + (1,) * (l.ndim - 1)), sharding), st)
+        return out
+
+    # ------------------------------------------------------------------
     def _build(self):
         model, opt = self.model, self.opt
         pspecs = model.specs()
         bspecs = batch_specs(model.cfg, model.mi)
         ospecs = self.opt_state_specs()
-
-        from repro.core import comms
+        cspecs = self.codec_state_specs()
 
         loss_fn = self._loss_fn()
 
-        def step_fn(params, opt_state, batch):
+        def step_fn(params, opt_state, codec_state, batch):
             with policy_lib.use_plan(self.plan), comms.vma_mode(False), \
                     comms.ring_options(self.ring_bidir):
                 (loss, metrics), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, batch)
-                params, opt_state, stats = opt.apply(params, grads, opt_state)
-            return params, opt_state, {"loss": loss, **metrics, **stats}
+                # the optimizer's sync sites read/write their codec-state
+                # slots through this io region; everything the model emits
+                # under autodiff stays stateless (guarded in comms)
+                with comms.codec_state_io(codec_state) as cio:
+                    params, opt_state, stats = opt.apply(params, grads,
+                                                         opt_state)
+                codec_state = cio.collect()
+            return params, opt_state, codec_state, \
+                {"loss": loss, **metrics, **stats}
 
         def opt_init_fn(params):
             with comms.vma_mode(False):
@@ -126,15 +251,18 @@ class Trainer:
             out_specs=ospecs, check_vma=False))
         self.step = jax.jit(
             compat.shard_map(step_fn, mesh=self.mesh,
-                             in_specs=(pspecs, ospecs, bspecs),
-                             out_specs=(pspecs, ospecs, METRIC_SPECS),
+                             in_specs=(pspecs, ospecs, cspecs, bspecs),
+                             out_specs=(pspecs, ospecs, cspecs,
+                                        METRIC_SPECS),
                              check_vma=False),
-            donate_argnums=(0, 1))
+            donate_argnums=(0, 1, 2))
 
     def init_all(self, key):
-        """Initialize params + optimizer state (device-resident, sharded)."""
+        """Initialize params + optimizer state + codec state (device-
+        resident, sharded).  Returns ``(params, opt_state, codec_state)``;
+        the codec state is ``{}`` under stateless policies."""
         params = self.model.init(key)
-        return params, self.opt_init(params)
+        return params, self.opt_init(params), self.init_codec_state()
 
 
 def make_trainer(model: Model, mesh, scheme="baseline",

@@ -43,13 +43,13 @@ mi = MeshInfo.from_mesh(mesh)
 def run_losses(scheme_or_policy):
     model = Model(cfg, mi)
     tr = make_trainer(model, mesh, scheme=scheme_or_policy, n_micro=2)
-    params, ostate = tr.init_all(jax.random.key(0))
+    params, ostate, cstate = tr.init_all(jax.random.key(0))
     bspecs = batch_specs(cfg, mi)
     losses = []
     for step in range(STEPS):
         batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in data.batch(step).items()}
-        params, ostate, m = tr.step(params, ostate, batch)
+        params, ostate, cstate, m = tr.step(params, ostate, cstate, batch)
         losses.append(float(m["loss"]))
     jax.clear_caches()
     return losses
@@ -76,7 +76,7 @@ def trace_step(scheme_or_policy, mesh):
     binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
                "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
     with comms.record_traffic() as events:
-        tr.step.lower(pstructs, ostructs, binputs)
+        tr.step.lower(pstructs, ostructs, tr.codec_structs(), binputs)
     jax.clear_caches()
     return events
 

@@ -45,13 +45,13 @@ def run_losses(mesh):
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
     tr = PipelineTrainer(model, mesh, scheme="baseline", n_micro=MICRO)
-    params, ostate = tr.init_all(jax.random.key(0))
+    params, ostate, cstate = tr.init_all(jax.random.key(0))
     bspecs = batch_specs(cfg, mi)
     losses = []
     for step in range(STEPS):
         batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in data.batch(step).items()}
-        params, ostate, m = tr.step(params, ostate, batch)
+        params, ostate, cstate, m = tr.step(params, ostate, cstate, batch)
         losses.append(float(m["loss"]))
     jax.clear_caches()
     return losses

@@ -29,7 +29,7 @@ def run(mesh_shape, steps, resume_from=None, ckpt_dir=None, lr=3e-3, scheme="zhy
     model = Model(cfg, mi)
     tr = Trainer(model, mesh, scheme=scheme, opt_cfg=AdamConfig(lr=lr, warmup=5))
     if resume_from is None:
-        params, ostate = tr.init_all(jax.random.key(0))
+        params, ostate, cstate = tr.init_all(jax.random.key(0))
         start = 0
     else:
         pshard = checkpoint.resharded_specs(model.structs(), mesh)
@@ -38,11 +38,12 @@ def run(mesh_shape, steps, resume_from=None, ckpt_dir=None, lr=3e-3, scheme="zhy
         # re-init opt state fresh after elastic restart of params only?
         # no — restore it too (saved separately)
         ostate = tr.opt_init(params)
+        cstate = tr.init_codec_state()
         start = man["step"]
     losses = []
     for s in range(start, start + steps):
         b = put_batch(mesh, cfg, data.batch(s))
-        params, ostate, m = tr.step(params, ostate, b)
+        params, ostate, cstate, m = tr.step(params, ostate, cstate, b)
         losses.append(float(m["loss"]))
     return params, ostate, losses, mesh, model
 
@@ -63,8 +64,9 @@ with tempfile.TemporaryDirectory() as d:
     p3, _ = checkpoint.restore(d, model2.structs(), shardings=sh2)
     tr2 = Trainer(model2, mesh2, scheme="zhybrid_24_8", opt_cfg=AdamConfig(lr=3e-3, warmup=5))
     o3 = tr2.opt_init(p3)
+    c3 = tr2.init_codec_state()
     b = put_batch(mesh2, cfg, data.batch(30))
-    p3, o3, m = tr2.step(p3, o3, b)
+    p3, o3, c3, m = tr2.step(p3, o3, c3, b)
     print(f"elastic-restart loss={float(m['loss']):.4f} (last train loss {losses[-1]:.4f})")
     assert abs(float(m["loss"]) - losses[-1]) < 1.0
 print("TRAIN LOOP + ELASTIC RESTART OK")

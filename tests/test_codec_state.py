@@ -1,0 +1,273 @@
+"""Stateful codec protocol: parse/validation, state-pytree invariants, the
+error-feedback and low-rank codec math, and the trainer-side template +
+threading (single-device; the 8-device checkpoint-resume check lives in
+``tests/multidev/ef_check.py``)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codecs, comms, policy, schemes
+from repro.kernels import lowrank
+
+STATEFUL = ("ef:bq4", "ef:bq8", "ef:tq8", "plr4", "plr8", "ef:plr4")
+STATELESS = ("none", "mpc", "bq4", "bq8", "bq16", "bq24", "gq8", "tq8")
+
+
+def _rand(n, seed=0, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=(n,)) * scale).astype(np.float32))
+
+
+# --------------------------------------------------------------------------
+# parse + eager validation (satellite: codecs.get introspection/errors)
+# --------------------------------------------------------------------------
+
+def test_parameterized_names_parse():
+    assert codecs.get("ef:bq4").name == "ef:bq4"
+    assert codecs.get("ef:bq4") is codecs.get("ef:bq4")     # cached
+    assert codecs.get("plr8").rank == 8
+    assert codecs.get("ef:plr4").inner.rank == 4
+    assert codecs.get("ef:tq8").inner is codecs.get("tq8")
+
+
+def test_unknown_codec_error_lists_registered_names():
+    with pytest.raises(KeyError) as e:
+        codecs.get("zstd")
+    msg = str(e.value)
+    for name in codecs.names():
+        assert name in msg
+    assert "ef:<lossy codec>" in msg and "plr<rank>" in msg
+
+
+@pytest.mark.parametrize("bad", ["ef:", "ef:none", "ef:mpc", "ef:ef:bq4",
+                                 "plr0", "plrx", "ef:bq9", "plr",
+                                 "plr256"])   # rank cap: unrolled MGS
+def test_bad_parameterized_names_rejected(bad):
+    with pytest.raises(KeyError):
+        codecs.get(bad)
+
+
+def test_rule_and_scheme_validate_parameterized_codecs_eagerly():
+    # satellite: the parse path validates at Rule/Scheme construction,
+    # like PR 4's eager codec validation — not at trace time
+    policy.Rule("ef:bq4", dim="dp")
+    policy.Rule("plr8", dim="dp", name="zero1_grad*")
+    with pytest.raises(KeyError):
+        policy.Rule("ef:bq9", dim="dp")
+    with pytest.raises(KeyError):
+        policy.Rule("plr0")
+    schemes.Scheme(name="tmp_ok", dp="ef:bq4")
+    with pytest.raises(KeyError):
+        schemes.Scheme(name="tmp_bad", dp="ef:zfp8")
+
+
+def test_names_helper():
+    ns = codecs.names()
+    assert ns == sorted(ns)
+    assert set(STATELESS) <= set(ns)
+    assert "ef:bq4" not in ns           # parameterized forms are on-demand
+
+
+# --------------------------------------------------------------------------
+# state-pytree invariants (satellite: template == what encode returns)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STATELESS)
+def test_stateless_codecs_have_no_state(name):
+    c = codecs.get(name)
+    assert not c.stateful
+    assert c.init_state((256,), jnp.float32) is None
+    wire, st = c.encode(_rand(256))
+    assert st is None
+
+
+@pytest.mark.parametrize("name", STATEFUL)
+@pytest.mark.parametrize("n", [100, 1000, 1 << 14])
+def test_init_state_template_matches_encode_output(name, n):
+    c = codecs.get(name)
+    assert c.stateful
+    x = _rand(n, seed=n)
+    st0 = c.init_state(x.shape, x.dtype)
+    tmpl = jax.eval_shape(lambda: c.init_state(x.shape, x.dtype))
+    _, st1 = c.encode(x, st0)
+    # same structure, same shapes, same dtypes as the template — the
+    # invariant the trainer's state threading relies on
+    assert jax.tree_util.tree_structure(st1) == \
+        jax.tree_util.tree_structure(tmpl)
+    for a, b in zip(jax.tree_util.tree_leaves(st1),
+                    jax.tree_util.tree_leaves(tmpl)):
+        assert a.shape == b.shape and a.dtype == b.dtype, name
+    # a second step threads cleanly
+    _, st2 = c.encode(x, st1)
+    assert jax.tree_util.tree_structure(st2) == \
+        jax.tree_util.tree_structure(tmpl)
+
+
+def test_plan_codec_state_template():
+    pol = schemes.get("zhybrid_16_8").as_policy().with_rules(
+        policy.Rule("ef:bq4", dim="dp", name="zero1_grad*"))
+    plan = pol.compile()
+    sites = [(policy.Site("dp", "zero1_grad"), (1000,), jnp.float32),
+             (policy.Site("zero", "zero1_param"), (250,), jnp.float32)]
+    tmpl = plan.codec_state_template(sites)
+    assert sorted(tmpl) == ["dp@zero1_grad"]      # zero site is stateless
+    assert tmpl["dp@zero1_grad"]["residual"].shape == (1000,)
+    # a fully stateless plan contributes nothing — no pytree bloat
+    assert schemes.get("zhybrid_16_8").as_policy().compile() \
+        .codec_state_template(sites) == {}
+
+
+# --------------------------------------------------------------------------
+# error-feedback math
+# --------------------------------------------------------------------------
+
+def test_ef_residual_is_inner_quantization_error():
+    c = codecs.get("ef:bq4")
+    x = _rand(512, seed=7, scale=10.0)
+    st = c.init_state(x.shape, x.dtype)
+    wire, st1 = c.encode(x, st)
+    dec = c.decode(wire, x.shape, x.dtype)
+    np.testing.assert_allclose(np.asarray(st1["residual"]),
+                               np.asarray(x - dec), rtol=1e-6, atol=1e-7)
+
+
+def test_ef_debiases_truncating_codec():
+    """The biased tq codec (truncation toward zero) systematically
+    underestimates; with error feedback the running mean of the decoded
+    stream converges to the true value — the convergence mechanism."""
+    raw = codecs.get("tq8")
+    ef = codecs.get("ef:tq8")
+    x = _rand(2048, seed=9, scale=3.0)
+    wire, _ = raw.encode(x)
+    raw_err = float(jnp.mean(jnp.abs(raw.decode(wire, x.shape, x.dtype) - x)))
+    st = ef.init_state(x.shape, x.dtype)
+    dec_sum = jnp.zeros_like(x)
+    K = 16
+    for _ in range(K):
+        wire, st = ef.encode(x, st)
+        dec_sum = dec_sum + ef.decode(wire, x.shape, x.dtype)
+    ef_err = float(jnp.mean(jnp.abs(dec_sum / K - x)))
+    assert ef_err < 0.25 * raw_err, (ef_err, raw_err)
+    # the residual stays bounded (it is the one-step quantization error)
+    assert float(jnp.abs(st["residual"]).max()) < float(jnp.abs(x).max())
+
+
+# --------------------------------------------------------------------------
+# low-rank codec math
+# --------------------------------------------------------------------------
+
+def test_plr_exact_on_low_rank_payload():
+    """A payload whose matrix view has rank <= r reconstructs exactly in
+    one shot: orth(M Q0) spans col(M) for a generic Q0."""
+    m, ncols = lowrank.mat_shape(8 * 128)
+    a = _rand(m * 4, seed=1).reshape(m, 4)
+    b = _rand(4 * ncols, seed=2).reshape(4, ncols)
+    x = jnp.dot(a, b).reshape(-1)                  # rank 4
+    c = codecs.get("plr8")
+    wire, _ = c.encode(x)
+    dec = c.decode(wire, x.shape, x.dtype)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(x),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_plr_warm_factor_improves_over_steps():
+    """Power iteration: re-encoding the same full-rank payload with the
+    warm factor monotonically (weakly) improves the approximation."""
+    c = codecs.get("plr4")
+    x = _rand(1 << 14, seed=3)
+    st = c.init_state(x.shape, x.dtype)
+    errs = []
+    for _ in range(6):
+        wire, st = c.encode(x, st)
+        dec = c.decode(wire, x.shape, x.dtype)
+        errs.append(float(jnp.linalg.norm(dec - x)))
+    assert errs[-1] <= errs[0] * (1 + 1e-6), errs
+
+
+def test_plr_wire_smaller_than_flat_at_scale():
+    n = 1 << 20
+    c = codecs.get("plr8")
+    assert c.wire_nbytes_for(n) < 0.02 * n * 4
+    m, ncols = lowrank.mat_shape(n)
+    assert c.wire_nbytes_for(n) == 8 * (m + ncols) * 4
+    wire, _ = c.encode(_rand(1 << 14, seed=4))
+    nbytes = sum(l.size * l.dtype.itemsize
+                 for l in jax.tree_util.tree_leaves(wire))
+    mm, nc = lowrank.mat_shape(1 << 14)
+    assert nbytes == 8 * (mm + nc) * 4
+
+
+# --------------------------------------------------------------------------
+# comms guards + trainer threading (single device)
+# --------------------------------------------------------------------------
+
+def test_stateful_codec_rejected_at_autodiff_sites():
+    pol = policy.CommPolicy("bad", rules=(policy.Rule("ef:bq4"),))
+    plan = pol.compile()
+    with policy.use_plan(plan):
+        with pytest.raises(NotImplementedError, match="stateful codec"):
+            comms.all_gather(jnp.zeros((8,)), "data", 0, "tp")
+        with pytest.raises(NotImplementedError, match="stateful codec"):
+            comms._hier_codec_pairs("dp")
+
+
+def test_stateful_codec_outside_state_region_raises():
+    plan = policy.CommPolicy(
+        "ef_dp", rules=(policy.Rule("ef:bq4", dim="dp"),)).compile()
+    with policy.use_plan(plan):
+        with pytest.raises(RuntimeError, match="codec-state region"):
+            comms._stateful_psum(jnp.zeros((8,)), ("data",),
+                                 policy.Site("dp", "zero1_grad"),
+                                 codecs.get("ef:bq4"))
+
+
+def _mini_trainer(codec_rule):
+    from repro import configs
+    from repro.launch.mesh import make_mesh
+    from repro.models.model import Model
+    from repro.models.params import MeshInfo
+    from repro.train.train_step import Trainer
+    mesh = make_mesh(1, 1)
+    cfg = configs.get("gemma3-1b").reduced().replace(vocab_size=64)
+    model = Model(cfg, MeshInfo.from_mesh(mesh))
+    pol = schemes.get("zhybrid_16_8").as_policy()
+    if codec_rule is not None:
+        pol = pol.with_rules(codec_rule, name="test")
+    return Trainer(model, mesh, scheme=pol), cfg, mesh
+
+
+def test_trainer_codec_state_template_and_threading():
+    tr, cfg, mesh = _mini_trainer(
+        policy.Rule("ef:bq4", dim="dp", name="zero1_grad*"))
+    tmpl = tr.codec_state_template()
+    assert sorted(tmpl) == ["dp@zero1_grad"]
+    n = tr.opt.flat_size(tr.model.structs())
+    assert tmpl["dp@zero1_grad"]["residual"].shape == (n,)
+    params, ostate, cstate = tr.init_all(jax.random.key(0))
+    assert sorted(cstate) == ["dp@zero1_grad"]
+    np.testing.assert_array_equal(
+        np.asarray(cstate["dp@zero1_grad"]["residual"]), np.zeros((n,)))
+    # the state threads through the jitted step (trivial dp axis: wire
+    # never crosses, so the slot is carried through unchanged)
+    from repro.train.train_step import batch_specs
+    from repro.data.pipeline import DataConfig, SyntheticCorpus
+    from jax.sharding import NamedSharding
+    data = SyntheticCorpus(DataConfig(vocab_size=64, seq_len=16,
+                                      global_batch=4))
+    mi = tr.model.mi
+    bspecs = batch_specs(cfg, mi)
+    for s in range(2):
+        b = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+             for k, v in data.batch(s).items()}
+        params, ostate, cstate, m = tr.step(params, ostate, cstate, b)
+    assert sorted(cstate) == ["dp@zero1_grad"]
+    assert np.isfinite(float(m["loss"]))
+
+
+def test_trainer_stateless_policy_has_empty_codec_state():
+    tr, cfg, mesh = _mini_trainer(None)
+    assert tr.codec_state_template() == {}       # no pytree bloat
+    params, ostate, cstate = tr.init_all(jax.random.key(0))
+    assert cstate == {}

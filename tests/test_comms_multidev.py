@@ -68,3 +68,13 @@ def test_compiled_plan_path_vs_legacy_scheme_path():
     hier ledger totals byte-identical; size rules move wire bytes."""
     out = run_script("plan_check.py", timeout=1800)
     assert "PLAN PATH OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_codec_state_ef_and_lowrank():
+    """Carried codec state: ef:bq4 DP-grad training with bit-exact
+    checkpoint round-trip of the residual, load-bearing-state divergence
+    when it is dropped, and plr wire bytes below flat on the ledger."""
+    out = run_script("ef_check.py", timeout=1800)
+    assert "EF CHECK OK" in out

@@ -129,7 +129,9 @@ def test_codec_registry_and_ratio():
                           ("bq8", 8.25), ("bq16", 16.25), ("bq24", 24.25)]:
         c = codecs.get(name)
         assert abs(c.wire_bits_per_value() - bits_pv) < 1e-9
-        y = c.decode(c.encode(x), x.shape, jnp.float32)
+        wire, state = c.encode(x)
+        assert state is None        # stateless codecs thread no state
+        y = c.decode(wire, x.shape, jnp.float32)
         if c.lossless:
             np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
     with pytest.raises(KeyError):
@@ -145,8 +147,8 @@ def test_to_from_blocks_roundtrip():
 
 def test_wire_nbytes():
     x = jnp.zeros((1024,), jnp.float32)
-    w8 = codecs.get("bq8").encode(x)
-    w24 = codecs.get("bq24").encode(x)
+    w8, _ = codecs.get("bq8").encode(x)
+    w24, _ = codecs.get("bq24").encode(x)
     assert ops.wire_nbytes(w8) == 1024 + 8 * 4        # int8 + 8 block scales
     assert ops.wire_nbytes(w24) == 1024 * 3 + 8 * 4   # int16+uint8 planes
-    assert ops.wire_nbytes(codecs.get("none").encode(x)) == 4096
+    assert ops.wire_nbytes(codecs.get("none").encode(x)[0]) == 4096

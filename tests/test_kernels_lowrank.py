@@ -1,0 +1,89 @@
+"""Low-rank kernel validation: Pallas (interpret mode) vs the jnp oracle,
+layout helpers, and the orthonormalization the distributed path relies on
+being deterministic and rank-deficiency-safe."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.kernels import lowrank
+
+SHAPES = [((8, 128), (128, 8)), ((16, 512), (512, 3)),
+          ((512, 40), (40, 8)), ((8, 8), (8, 8)), ((24, 130), (130, 5))]
+
+
+def _rand(shape, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.normal(size=shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("ab", SHAPES)
+def test_matmul_pallas_matches_ref(ab):
+    a = jnp.asarray(_rand(ab[0], 1))
+    b = jnp.asarray(_rand(ab[1], 2))
+    ref = lowrank.matmul_ref(a, b)
+    pal = lowrank.matmul_pallas(a, b, interpret=True)
+    assert pal.shape == ref.shape == (ab[0][0], ab[1][1])
+    np.testing.assert_allclose(np.asarray(pal), np.asarray(ref),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_backend_dispatch():
+    a = jnp.asarray(_rand((8, 128)))
+    b = jnp.asarray(_rand((128, 4)))
+    np.testing.assert_allclose(
+        np.asarray(lowrank.matmul(a, b, backend="jnp")),
+        np.asarray(lowrank.matmul(a, b, backend="pallas_interpret")),
+        rtol=1e-5, atol=1e-5)
+
+
+def test_mat_shape_properties():
+    for n in (1, 100, 128 * 128, 128 * 128 + 1, 1 << 20, 12345678):
+        m, ncols = lowrank.mat_shape(n)
+        assert m * ncols >= n
+        assert m % lowrank.TILE_M == 0
+        assert lowrank.NCOLS_MIN <= ncols <= lowrank.NCOLS_MAX
+        assert ncols & (ncols - 1) == 0            # power of two
+    # large payloads saturate at the widest view
+    assert lowrank.mat_shape(1 << 24)[1] == lowrank.NCOLS_MAX
+    # effective rank never exceeds the matrix view
+    assert lowrank.rank_for(100, 64) <= min(*lowrank.mat_shape(100))
+    assert lowrank.rank_for(1 << 20, 8) == 8
+
+
+def test_to_from_mat_roundtrip():
+    for n in (1, 127, 128, 1000, 4097):
+        x = jnp.asarray(_rand((n,), seed=n))
+        m = lowrank.to_mat(x)
+        assert m.shape == lowrank.mat_shape(n)
+        np.testing.assert_array_equal(np.asarray(lowrank.from_mat(m, n)),
+                                      np.asarray(x))
+
+
+def test_orthonormalize_columns():
+    p = jnp.asarray(_rand((64, 6), 3))
+    q = lowrank.orthonormalize(p)
+    gram = np.asarray(lowrank.matmul_ref(q.T, q))
+    np.testing.assert_allclose(gram, np.eye(6), atol=1e-5)
+    # span is preserved: projecting p onto q recovers p
+    rec = lowrank.matmul_ref(q, lowrank.matmul_ref(q.T, p))
+    np.testing.assert_allclose(np.asarray(rec), np.asarray(p),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_orthonormalize_rank_deficient_gives_zero_columns():
+    # two identical columns: the second orthogonalizes to exactly zero
+    # (NOT an arbitrary basis vector — determinism across ranks matters)
+    v = _rand((32, 1), 4)
+    p = jnp.asarray(np.concatenate([v, v], axis=1))
+    q = np.asarray(lowrank.orthonormalize(p))
+    np.testing.assert_allclose(np.linalg.norm(q[:, 0]), 1.0, rtol=1e-5)
+    np.testing.assert_array_equal(q[:, 1], np.zeros(32, np.float32))
+
+
+def test_init_factor_deterministic_and_orthonormal():
+    q1 = lowrank.init_factor(128, 8)
+    q2 = lowrank.init_factor(128, 8)
+    np.testing.assert_array_equal(np.asarray(q1), np.asarray(q2))
+    gram = np.asarray(lowrank.matmul_ref(q1.T, q1))
+    np.testing.assert_allclose(gram, np.eye(8), atol=1e-5)

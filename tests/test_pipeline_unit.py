@@ -139,18 +139,26 @@ def test_suggest_scheme_tracks_link_ratio():
     # ~16x slower DCN: rate-8 outer stage rebalances the pools
     mid = rl.suggest_scheme(bw, bw / 16)
     assert mid["scheme"] == "hier_zpp_8_16" and mid["outer_codec"] == "bq8"
-    # ~32x: the aggressive rate-4 outer codec
+    # ~32x: the aggressive rate-4 rung — ERROR-FEEDBACK wrapped (same wire
+    # bytes as raw bq4, convergence-safe), so raw bq4 is never suggested
     hard = rl.suggest_scheme(bw, bw / 32)
-    assert hard["scheme"] == "hier_zpp_4_16" and hard["outer_codec"] == "bq4"
-    # extreme ratio: most aggressive candidate wins even if still slow-bound
-    assert rl.suggest_scheme(bw, bw / 1000)["scheme"] == "hier_zpp_4_16"
+    assert hard["scheme"] == "hier_zpp_ef4_16" \
+        and hard["outer_codec"] == "ef:bq4"
+    # extreme ratio: the low-rank rung (rank*(m+n) wire) is the last resort
+    assert rl.suggest_scheme(bw, bw / 1000)["scheme"] == "hier_zpp_plr8_16"
     # the decision rule: picked candidate's slow pool no longer dominates
     c = mid["candidates"]["hier_zpp_8_16"]
     assert c["slow_s"] <= c["fast_s"]
+    # the plr rung must price strictly below the rate-4 rung on the slow
+    # pool (that is the whole point of the low-rank wire)
+    cand = rl.suggest_scheme(bw, bw / 1000)["candidates"]
+    assert cand["hier_zpp_plr8_16"]["slow_s"] \
+        < cand["hier_zpp_ef4_16"]["slow_s"]
     # pricing is exposed for every rung, with the codecs the registered
     # scheme ACTUALLY resolves for dp_inner/dp_outer
     assert set(mid["candidates"]) == \
-        {"hier_zpp_16_16", "hier_zpp_8_16", "hier_zpp_4_16"}
+        {"hier_zpp_16_16", "hier_zpp_8_16", "hier_zpp_ef4_16",
+         "hier_zpp_plr8_16"}
     from repro.core import schemes
     for name, info in mid["candidates"].items():
         assert schemes.get(name).codec("dp_outer").name == \
@@ -228,7 +236,8 @@ def test_microbatch_grad_accum_supports_shared_attn():
     ostructs = jax.eval_shape(tr.opt_init, pstructs)
     binputs = {"tokens": jax.ShapeDtypeStruct((4, 16), jnp.int32),
                "labels": jax.ShapeDtypeStruct((4, 16), jnp.int32)}
-    tr.step.lower(pstructs, ostructs, binputs)  # must trace cleanly
+    tr.step.lower(pstructs, ostructs, tr.codec_structs(),
+                  binputs)  # must trace cleanly
 
 
 @pytest.mark.parametrize("arch", ["whisper-base", "qwen2-vl-72b"])

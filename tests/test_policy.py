@@ -64,6 +64,13 @@ def test_codec_pair_parity_via_context(name):
             f, b = comms._codec_pair(tag)
             assert f.name == b.name == s.codec(tag).name
         for tag in ("dp", "zero", "tp_fwd", "pp_bwd", "ep_fwd"):
+            if s.codec(f"{tag}_inner").stateful or \
+                    s.codec(f"{tag}_outer").stateful:
+                # carried-state codecs cannot ride hierarchical stage
+                # decompositions — comms rejects them at resolution
+                with pytest.raises(NotImplementedError):
+                    comms._hier_codec_pairs(tag)
+                continue
             (ci_f, ci_b), (co_f, co_b) = comms._hier_codec_pairs(tag)
             assert ci_f.name == s.codec(f"{tag}_inner").name
             assert co_f.name == s.codec(f"{tag}_outer").name
@@ -177,6 +184,10 @@ def test_rule_rejects_unknown_codec_and_fields():
         policy.Rule("bq8", direction="sideways")
     with pytest.raises(KeyError):
         policy.Rule("bq8", level="middle")
+    with pytest.raises(KeyError):
+        # a direction pin on direction-free dims can never match
+        policy.Rule("bq8", dim="dp", direction="bwd")
+    policy.Rule("bq8", dim=("dp", "tp"), direction="bwd")   # tp can match
 
 
 def test_policy_rejects_unknown_default_and_non_rules():

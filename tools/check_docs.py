@@ -14,7 +14,13 @@ dirs), extracts ``[text](target)`` links, and fails if
   ``<dim>_<fwd|bwd|inner|outer>...``) names a field the ``Scheme``
   dataclass no longer declares — docs referencing removed scheme fields
   fail instead of rotting (the field list is parsed from
-  ``src/repro/core/schemes.py``, no import needed).
+  ``src/repro/core/schemes.py``, no import needed), or
+* a codec-shaped inline-code token (``bq16``, ``gq8``, ``plr8``,
+  ``ef:bq4``) names a codec the registry cannot construct: quantization
+  rates are parsed from ``kernels/ref.py``/``core/codecs.py`` and the
+  parameterized grammar (``ef:<lossy codec>``, ``plr<rank>``) is
+  validated structurally — so ``ef:bq4`` is recognized as a valid
+  parameterized codec, while a stale ``bq12`` or ``ef:none`` fails.
 
 ``--xla*`` flags (XLA's own) are exempt.  External links (``http://`` /
 ``https://`` / ``mailto:``) are not fetched — CI must not depend on
@@ -153,16 +159,71 @@ def check_scheme_tags(src: pathlib.Path, text: str,
     return errors
 
 
+# a codec-shaped token inside an inline code span: quantization families
+# with a rate suffix, low-rank plr<rank>, and ef:-prefixed wrappers.
+# Deliberately narrow — scheme names like `hier_zpp_8_16` never match.
+_CODEC_TOKEN_RE = re.compile(r"`((?:ef:)?(?:bq|gq|tq)\d+|ef:plr\d+|plr\d+"
+                             r"|ef:(?:none|mpc|ef:[a-z0-9:]*))`")
+_QMAX_RE = re.compile(r"_QMAX\s*=\s*\{([^}]*)\}")
+_QINST_RE = re.compile(r"(Gq|Tq)Codec\(bits=(\d+)\)")
+_MAX_RANK_RE = re.compile(r"MAX_RANK\s*=\s*(\d+)")
+
+
+def codec_rates() -> dict:
+    """Valid rates per quantization family, parsed (not imported) from
+    the kernel/codec sources: ``bq`` rates from ref.py's _QMAX table,
+    ``gq``/``tq`` from the instantiations codecs.py registers."""
+    ref = (ROOT / "src" / "repro" / "kernels" / "ref.py") \
+        .read_text(encoding="utf-8")
+    m = _QMAX_RE.search(ref)
+    bq = {int(k) for k in re.findall(r"(\d+)\s*:", m.group(1))} if m \
+        else set()
+    src = (ROOT / "src" / "repro" / "core" / "codecs.py") \
+        .read_text(encoding="utf-8")
+    fam = {"bq": bq, "gq": set(), "tq": set()}
+    for f, bits in _QINST_RE.findall(src):
+        fam[f.lower()].add(int(bits))            # Gq -> gq, Tq -> tq
+    m = _MAX_RANK_RE.search(src)
+    fam["plr_max"] = int(m.group(1)) if m else 64
+    return fam
+
+
+def _codec_token_valid(tok: str, rates: dict) -> bool:
+    if tok.startswith("ef:"):
+        inner = tok[3:]
+        # ef wraps lossy, non-ef codecs only (mirrors codecs._parse)
+        if inner in ("none", "mpc") or inner.startswith("ef:") or not inner:
+            return False
+        return _codec_token_valid(inner, rates)
+    if tok.startswith("plr"):
+        return tok[3:].isdigit() and 1 <= int(tok[3:]) <= rates["plr_max"]
+    m = re.match(r"(bq|gq|tq)(\d+)$", tok)
+    return bool(m) and int(m.group(2)) in rates[m.group(1)]
+
+
+def check_codec_names(src: pathlib.Path, text: str,
+                      rates: dict) -> list[str]:
+    errors = []
+    for tok in sorted(set(_CODEC_TOKEN_RE.findall(text))):
+        if not _codec_token_valid(tok, rates):
+            errors.append(
+                f"{src.relative_to(ROOT)}: stale codec reference `{tok}` "
+                f"(the registry cannot construct it)")
+    return errors
+
+
 def check() -> list[str]:
     errors = []
     known_flags = defined_flags()
     known_fields = scheme_fields()
+    known_rates = codec_rates()
     for src in md_files():
         raw = src.read_text(encoding="utf-8")
         text = _FENCE_RE.sub("", raw)
         # flags are checked in fenced blocks too — usage examples live there
         errors += check_flags(src, raw, known_flags)
         errors += check_scheme_tags(src, raw, known_fields)
+        errors += check_codec_names(src, raw, known_rates)
         targets = [m.group(1) for m in _LINK_RE.finditer(text)]
         targets += [m.group(1) for m in _IMG_RE.finditer(text)]
         for t in targets:
