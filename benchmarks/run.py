@@ -6,6 +6,11 @@ Prints ``name,us_per_call,derived`` CSV rows.
   bench_collectives  wire bytes per parallelism dim/scheme (paper Fig 1, §III)
   bench_convergence  loss curves per scheme               (paper Figs 7c-11)
   bench_throughput   modeled throughput uplift            (paper Figs 7a-10b)
+  bench_step_time    measured fused vs three-pass wall time (paper §IV-A)
+
+A bench module that crashes is recorded as a ``FAILED:...`` CSV row and
+the harness keeps going — but the exit code is nonzero if anything
+failed (a crashing bench used to exit 0 and green-wash CI).
 
 The bench harness needs a multi-device host mesh to exercise the schemes;
 it sets its own 8-device flag (NOT the dry-run's 512) before jax init.
@@ -25,7 +30,7 @@ import sys           # noqa: E402
 import time          # noqa: E402
 
 MODULES = ("bench_codec", "bench_collectives", "bench_convergence",
-           "bench_throughput")
+           "bench_throughput", "bench_step_time")
 
 
 def main() -> None:
@@ -49,6 +54,7 @@ def main() -> None:
         return
     mods = [args.only] if args.only else list(MODULES)
     print("name,us_per_call,derived")
+    failed = []
     for name in mods:
         mod = importlib.import_module(f"benchmarks.{name}")
         t0 = time.time()
@@ -56,11 +62,15 @@ def main() -> None:
             rows = mod.run()
         except Exception as e:  # keep the harness going; record the failure
             print(f"{name},0.0,FAILED:{e!r}")
+            failed.append(name)
             continue
         for r in rows:
             print(f"{r[0]},{r[1]:.2f},{r[2]}")
         print(f"{name}_total,{(time.time() - t0) * 1e6:.0f},wall",
               file=sys.stderr)
+    if failed:
+        print(f"bench modules FAILED: {', '.join(failed)}", file=sys.stderr)
+        raise SystemExit(1)
 
 
 def _ledger_events(arch: str) -> list:

@@ -57,28 +57,104 @@ def _wire_bytes(codec_name: str, elems: int, dtype: str) -> float:
     return c.wire_nbytes_for(elems)
 
 
+def _block_codec(codec_name: str):
+    """The codec object iff it rides the block ring (bq/gq/tq families —
+    the ones with fused decode+add+encode hops), else None.  ``ef:*``
+    transmits exactly its inner codec's wire through the same ring
+    (``_stateful_psum`` compensates, then calls the inner ``_psum_impl``),
+    so it prices at the inner codec's chunk geometry, to the byte."""
+    c = codecs.get(codec_name)
+    if getattr(c, "kind", None) == "ef":
+        c = c.inner
+    return c if hasattr(c, "decode_add_encode_blocks") else None
+
+
+def _ring_hop_bytes(c, rows: int, parts=None) -> float:
+    """Wire bytes one device puts on the links per ring hop: the codec's
+    cost of the full (rows x 128) padded chunk, summed per sub-ring part
+    when the realized schedule split the rows (per-part scale planes make
+    the split marginally dearer for per-tensor-scale codecs)."""
+    if parts:
+        return sum(c.wire_nbytes_for((hi - lo) * 128) for lo, hi, _ in parts)
+    return c.wire_nbytes_for(rows * 128)
+
+
+def _coll_bytes(op: str, codec_name: str, elems: int, dtype: str, n: int,
+                bidir: bool, ring: dict | None) -> float:
+    """Per-device link bytes of one collective.
+
+    Identity codecs (and the non-block compressed families) keep the
+    analytic per-device factors — they lower to stock XLA collectives.
+    Block codecs price from the chunk geometry the compressed lowering
+    actually runs:
+
+      * all_gather      -> (n-1) hops of the padded-block wire of the
+                           local shard (encode once, gather the wire);
+      * reduce_scatter  -> (n-1) ppermute hops of the padded chunk wire,
+                           per the recorded/re-derived ring schedule —
+                           halved only when the bidirectional split was
+                           REALIZED (the silent single-ring fallback used
+                           to inherit the halving and underprice 2x);
+      * all_reduce      -> the ring reduce-scatter above plus the
+                           all-gather of the final compressed chunk —
+                           the (n-1) hops the ledger used to drop.
+    """
+    c = _block_codec(codec_name)
+    if c is None or op in ("ppermute", "all_to_all", "none"):
+        factor = _PER_DEVICE_FACTOR[op](n)
+        if bidir:
+            factor *= 0.5  # two-direction rings: each link carries half
+        return _wire_bytes(codec_name, elems, dtype) * factor
+    from repro.kernels import ops
+    if op == "all_gather":
+        hop = _ring_hop_bytes(c, ops.padded_rows(int(elems)))
+        return (n - 1) * hop * (0.5 if bidir else 1.0)
+    # ring-lowered reduce_scatter / all_reduce
+    if ring is not None:
+        rows, ring_bidir, parts = ring["rows"], ring["bidir"], ring["parts"]
+    else:  # synthetic/hand-built event: re-derive the realized schedule
+        from repro.core import comms
+        sched = comms._ring_schedule(ops.padded_rows(-(-int(elems) // n)),
+                                     bidir=bool(bidir), chunks=1)
+        rows, ring_bidir, parts = sched.rows, sched.bidir, sched.parts
+    hop = _ring_hop_bytes(c, rows, parts)
+    out = (n - 1) * hop * (0.5 if ring_bidir else 1.0)
+    if op == "all_reduce":
+        # + all-gather of the final compressed chunk (XLA-native, so the
+        # requested-bidir torus credit applies regardless of ring fallback)
+        out += (n - 1) * hop * (0.5 if bidir else 1.0)
+    return out
+
+
 def event_bytes(ev: dict, train: bool) -> dict:
     """Per-device link bytes for one ledger event (fwd + analytic bwd).
 
     The transpose of a collective moves exactly the bytes of its forward
     (AG of E-elem shards <-> RS whose cotangent is the n*E gather output;
-    both come to (n-1)*E per device), so the backward twin reuses the
-    forward formula with the backward codec."""
+    both come to (n-1)*E per device), so the backward twin is priced as
+    its own collective on the transposed payload with the backward codec.
+    Events carrying ``ring`` facts (attached at trace time by the comms
+    recorder) are priced from the realized hop schedule — see
+    :func:`_coll_bytes`."""
     n = ev["n"]
     if n <= 1:
         return {"fwd": 0.0, "bwd": 0.0}
-    factor = _PER_DEVICE_FACTOR[ev["op"]](n)
-    if ev.get("bidir"):
-        factor *= 0.5  # two-direction rings: each link carries half
-    fwd = _wire_bytes(ev["codec_fwd"], ev["elems"], ev["dtype"]) * factor
+    fwd = _coll_bytes(ev["op"], ev["codec_fwd"], ev["elems"], ev["dtype"],
+                      n, bool(ev.get("bidir")), ev.get("ring"))
     if train and ev.get("remat"):
         fwd *= 2                 # forward re-executes in the remat bwd
     bwd = 0.0
     if train and ev.get("bwd_op"):
-        bwd_factor = factor if ev["op"] != "none" else \
-            _PER_DEVICE_FACTOR[ev["bwd_op"]](n)
-        bwd = _wire_bytes(ev["codec_bwd"], ev["elems"], ev["dtype"]) \
-            * bwd_factor
+        op_b = ev["bwd_op"]
+        if ev["op"] == "all_gather" and op_b == "reduce_scatter":
+            e_b = ev["elems"] * n        # cotangent of the gather output
+        elif ev["op"] == "reduce_scatter" and op_b == "all_gather":
+            e_b = -(-ev["elems"] // n)   # cotangent of the scattered chunk
+        else:
+            e_b = ev["elems"]
+        ring_b = ev.get("ring") if op_b == ev["op"] else None
+        bwd = _coll_bytes(op_b, ev["codec_bwd"], e_b, ev["dtype"],
+                          n, bool(ev.get("bidir")), ring_b)
     return {"fwd": fwd * ev["mult"], "bwd": bwd * ev["mult"]}
 
 

@@ -137,8 +137,16 @@ class BqCodec(Codec):
     def decode_blocks(self, wire):
         return ops.bq_decode_blocks(wire, self.bits, self.backend)
 
-    def decode_add_encode_blocks(self, wire, local2d):
-        return ops.bq_decode_add_encode_blocks(wire, local2d, self.bits, self.backend)
+    def decode_add_encode_blocks(self, wire, local2d, want_sum=True):
+        return ops.bq_decode_add_encode_blocks(wire, local2d, self.bits,
+                                               self.backend,
+                                               want_sum=want_sum)
+
+    def decode_add_blocks(self, wire, local2d):
+        """Final ring hop: local + decode(wire), no re-encode (the
+        reduce-scatter tail keeps the f32 chunk and sends nothing)."""
+        return ops.bq_decode_add_blocks(wire, local2d, self.bits,
+                                        self.backend)
 
     def wire_bits_per_value(self, dtype=jnp.float32) -> float:
         return self.bits + 32.0 / BLOCK  # mantissa + per-block f32 scale
@@ -191,12 +199,18 @@ class GqCodec(Codec):
         return wire["q_hi"].astype(jnp.float32) \
             * (wire["scale"] / self._qmax())
 
-    def decode_add_encode_blocks(self, wire, local2d):
+    def decode_add_encode_blocks(self, wire, local2d, want_sum=True):
         s = self.decode_blocks(wire) + local2d.astype(jnp.float32)
-        return self.encode_blocks(s), s
+        return self.encode_blocks(s), s if want_sum else None
+
+    def decode_add_blocks(self, wire, local2d):
+        return self.decode_blocks(wire) + local2d.astype(jnp.float32)
 
     def wire_bits_per_value(self, dtype=jnp.float32) -> float:
-        return float(self.bits)  # scale overhead ~0
+        # the VALUE granularity is per-tensor, but the wire broadcasts the
+        # scale per 128-lane row (bq layout, see encode_blocks) — price the
+        # bytes actually on the link, not the information content
+        return self.bits + 32.0 / BLOCK
 
     @property
     def is_identity(self) -> bool:

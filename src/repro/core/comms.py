@@ -57,6 +57,7 @@ the named axis (or both sub-axes of an ``AxisPair``).
 
 from __future__ import annotations
 
+import collections
 import functools
 import threading
 
@@ -81,6 +82,18 @@ site = policy.site
 _rec = threading.local()
 
 
+class _EventLog(list):
+    """The ledger ``record_traffic`` yields: the list itself holds the
+    analytic per-call events (``_account``), and ``.wire`` the measured
+    per-phase wire events the low-level impls emit (``_log``) — actual
+    encoded-pytree bytes per hop, so analytic pricing can be cross-checked
+    against what the rings really put on the links."""
+
+    def __init__(self):
+        super().__init__()
+        self.wire = []
+
+
 class record_traffic:
     """Trace-time collective ledger.
 
@@ -97,12 +110,18 @@ class record_traffic:
 
     with bpv = codec.wire_bits_per_value(dtype)/8.  The backward twin of a
     collective (its transpose under the bwd codec) moves the same element
-    count, so training traffic = fwd + analytic bwd.  These formulas match
-    what the implementations below actually emit into HLO (the rings are
-    unrolled ppermute chains of exactly those payloads)."""
+    count, so training traffic = fwd + analytic bwd.  Ring-lowered events
+    (compressed all-reduce / reduce-scatter) additionally carry a ``ring``
+    fact — the hop schedule :func:`_ring_schedule` actually ran (row
+    partition, realized bidir, fallback) — so the roofline prices the
+    exact per-hop wire payloads, tile padding and all.
+
+    The yielded object is a list (the analytic events) with a ``.wire``
+    attribute: the measured wire events from the low-level impls (actual
+    ``ops.wire_nbytes`` per hop payload, hop count, phase op, site tag)."""
 
     def __enter__(self):
-        self.events = []
+        self.events = _EventLog()
         _rec.events = self.events
         return self.events
 
@@ -160,46 +179,109 @@ def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None, level="flat",
     dt = leaves[0].dtype if leaves else jnp.float32
     if nbytes is None:
         nbytes = int(elems) * jnp.dtype(dt).itemsize
-    events.append(dict(
-        op=op, tag=tag, axis=axis, n=int(compat.axis_size(axis)),
+    n = int(compat.axis_size(axis))
+    ev = dict(
+        op=op, tag=tag, axis=axis, n=n,
         elems=int(elems), dtype=str(dt), nbytes=int(nbytes),
         codec_fwd=c_fwd.name, codec_bwd=c_bwd.name,
         bwd_op=bwd_op, mult=int(getattr(_rec, "mult", 1)),
         remat=bool(getattr(_rec, "remat", False)),
-        bidir=_bidir(), level=level))
+        bidir=_bidir(), level=level)
+    # ring facts: the hop schedule a compressed lowering of this event
+    # would run (codec-independent — recost re-prices the same event under
+    # candidate codecs in either direction, so the facts must not depend
+    # on which codec happened to resolve here).  ``rows`` is the padded
+    # per-rank chunk height the ring actually permutes.
+    if op in ("all_reduce", "reduce_scatter") and n > 1:
+        sched = _ring_schedule(ops.padded_rows(-(-int(elems) // n)))
+        ev["ring"] = dict(rows=sched.rows, hops=n - 1,
+                          parts=[list(p) for p in sched.parts],
+                          bidir=sched.bidir, fallback=sched.fallback,
+                          chunks=sched.chunks)
+    events.append(ev)
 
 
-def _log(op, tag, codec, payload_bytes, hops):
-    # accounting moved to the public wrappers (_account); kept as a no-op so
-    # the low-level impls stay annotated with their traffic shapes.
-    return
+def _log(op, tag, codec, payload_bytes, hops, **facts):
+    """Measured wire event: ``payload_bytes`` actual encoded bytes put on
+    the link per hop (``ops.wire_nbytes`` of the real wire pytree, tile
+    padding included), repeated ``hops`` times.  Extra ``facts`` (the ring
+    schedule's realized part count / bidir / fallback) make what actually
+    ran visible next to the analytic events."""
+    events = getattr(_rec, "events", None)
+    if events is None or not hasattr(events, "wire"):
+        return
+    if not tag or tag == "-":
+        tag = getattr(_rec, "wire_tag", "-")
+    events.wire.append(dict(
+        op=op, tag=tag, codec=codec.name, payload_bytes=int(payload_bytes),
+        hops=int(hops), mult=int(getattr(_rec, "mult", 1)), **facts))
+
+
+class _wire_site:
+    """Best-effort site tag for the measured wire events: the public
+    wrappers bind their site's ledger tag around the (eagerly traced)
+    forward impl, so ``_log`` can attribute hops to a site.  Backward
+    impls trace later, outside any binding, and fall back to "-"."""
+
+    def __init__(self, tag: str):
+        self.tag = tag
+
+    def __enter__(self):
+        self.prev = getattr(_rec, "wire_tag", "-")
+        _rec.wire_tag = self.tag
+        return self
+
+    def __exit__(self, *exc):
+        _rec.wire_tag = self.prev
+        return False
 
 
 class ring_options:
-    """Hillclimb lever: bidirectional rings.
+    """Hillclimb levers for the compressed reduce-scatter rings.
 
-    When on, the compressed reduce-scatter ring splits its payload in two
-    and runs simultaneous CW and CCW ppermute chains — each ICI link
-    carries half the bytes (visible in HLO as paired collective-permutes).
-    The ledger credits the same 2-link utilization to the XLA-native
-    all-gather/all-to-all on the wire, which TPU tori perform
-    bidirectionally anyway (EXPERIMENTS.md §Perf)."""
+    ``bidir``: split the payload rows in two and run simultaneous CW and
+    CCW ppermute chains — each ICI link carries half the bytes (visible in
+    HLO as paired collective-permutes).  The ledger credits the same
+    2-link utilization to the XLA-native all-gather/all-to-all on the
+    wire, which TPU tori perform bidirectionally anyway (EXPERIMENTS.md
+    §Perf).
 
-    def __init__(self, bidir: bool):
+    ``chunks``: additionally split each directional ring into up to
+    ``chunks`` independent row-striped sub-rings.  The sub-rings share no
+    data dependencies, so the latency-hiding scheduler can overlap chunk
+    *k*'s collective-permute with chunk *k+1*'s fused decode-add-encode —
+    the transfer of one chunk hides behind the compute of the next.
+    For bq codecs (scales per 128-lane row) chunk striping is bit-exact
+    at any count under a fixed ``bidir`` setting; flipping ``bidir``
+    itself reverses the hop order for half the rows (different fp
+    addition order), and the per-tensor-scale ablation codec ``gq``
+    changes scale granularity with any row partition — both already true
+    of the pre-existing bidirectional split."""
+
+    def __init__(self, bidir: bool, chunks: int = 1):
+        assert chunks >= 1, f"ring chunks must be >= 1, got {chunks}"
         self.bidir = bidir
+        self.chunks = chunks
 
     def __enter__(self):
         self.prev = getattr(_rec, "bidir", False)
+        self.prev_chunks = getattr(_rec, "chunks", 1)
         _rec.bidir = self.bidir
+        _rec.chunks = self.chunks
         return self
 
     def __exit__(self, *exc):
         _rec.bidir = self.prev
+        _rec.chunks = self.prev_chunks
         return False
 
 
 def _bidir() -> bool:
     return bool(getattr(_rec, "bidir", False))
+
+
+def _ring_chunks() -> int:
+    return int(getattr(_rec, "chunks", 1))
 
 
 def _payload_nbytes(x) -> int:
@@ -391,9 +473,63 @@ def _chunk_to_shape(chunk2d: jnp.ndarray, shape, dtype):
 # the compressed ring (reduce-scatter core)
 # --------------------------------------------------------------------------
 
-def _ring_rs_dir(xb, axis, codec, direction: int):
+_RING_TILE = 8  # pallas TILE_M: every sub-ring keeps sublane alignment
+
+RingSchedule = collections.namedtuple(
+    "RingSchedule", ["parts", "rows", "bidir", "fallback", "chunks"])
+
+
+def _ring_schedule(m: int, bidir: bool | None = None,
+                   chunks: int | None = None) -> RingSchedule:
+    """Row partition of an ``[n, m, BLOCK]`` ring payload into independent
+    sub-rings — the SINGLE source of truth for what the compressed
+    reduce-scatter actually runs, consumed by both the implementation
+    (:func:`_ring_reduce_scatter`) and the ledger (``_account`` attaches
+    it as the event's ``ring`` fact), so recorded events can never drift
+    from the executed schedule.
+
+    ``parts`` is a tuple of ``(row_lo, row_hi, direction)`` sub-rings:
+    the bidirectional split first (rows halved across a CW and a CCW
+    ring — skipped, with ``fallback=True``, when the halves would break
+    the 8-row pallas tile alignment), then each directional segment
+    striped into up to ``ring_options.chunks`` tile-aligned chunks whose
+    ppermute chains are data-independent (transfer/encode overlap).
+    ``bidir`` / ``chunks`` record what was REALIZED, not what was asked
+    for.  The explicit ``bidir``/``chunks`` arguments let the roofline
+    re-derive the schedule an event would run outside the trace-time
+    thread-locals (which are the defaults)."""
+    want_bidir = _bidir() if bidir is None else bool(bidir)
+    want_chunks = _ring_chunks() if chunks is None else int(chunks)
+    half = (m // 2) // _RING_TILE * _RING_TILE
+    bidir = want_bidir and half >= _RING_TILE
+    fallback = want_bidir and not bidir
+    segs = [(0, half, +1), (half, m, -1)] if bidir else [(0, m, +1)]
+    parts = []
+    realized = 1
+    for lo, hi, d in segs:
+        tiles = (hi - lo) // _RING_TILE
+        k = max(1, min(want_chunks, tiles))
+        realized = max(realized, k)
+        base, rem = divmod(tiles, k)
+        at = lo
+        for i in range(k):
+            rows = (base + (1 if i < rem else 0)) * _RING_TILE
+            parts.append((at, at + rows, d))
+            at += rows
+        assert at == hi
+    return RingSchedule(tuple(parts), m, bidir, fallback, realized)
+
+
+def _ring_rs_dir(xb, axis, codec, direction: int, want_wire: bool = True):
     """One directional ring (direction=+1 CW, -1 CCW).  Rank i ends owning
-    the full sum of chunk i."""
+    the full sum of chunk i.  Returns ``(acc, wire, hop_nbytes)``.
+
+    Intermediate hops run the wire-only fused decode-add-encode kernel
+    (the f32 running sum is never read between hops, so it is never
+    written); the final hop either emits the fused wire+sum pair
+    (``want_wire`` — the all-reduce path gathers the compressed chunk) or
+    just the sum (plain reduce-scatter: the re-encode would be dead
+    code)."""
     n = xb.shape[0]
     idx = lax.axis_index(axis)
     perm = [(j, (j + direction) % n) for j in range(n)]
@@ -403,30 +539,53 @@ def _ring_rs_dir(xb, axis, codec, direction: int):
 
     acc = take(idx - direction)
     wire = codec.encode_blocks(acc)
+    hop_nbytes = ops.wire_nbytes(wire)
     for t in range(n - 1):
         wire = jax.tree.map(lambda l: lax.ppermute(l, axis, perm), wire)
         local = take(idx - direction * (2 + t))
-        wire, acc = codec.decode_add_encode_blocks(wire, local)
-    return acc, wire
+        if t < n - 2:
+            wire, _ = codec.decode_add_encode_blocks(wire, local,
+                                                     want_sum=False)
+        elif want_wire:
+            wire, acc = codec.decode_add_encode_blocks(wire, local)
+        else:
+            acc = codec.decode_add_blocks(wire, local)
+            wire = None
+    return acc, wire, hop_nbytes
 
 
-def _ring_reduce_scatter(xb: jnp.ndarray, axis: str, codec: codecs.BqCodec):
+def _ring_reduce_scatter(xb: jnp.ndarray, axis: str, codec: codecs.BqCodec,
+                         want_wire: bool = True):
     """xb: [n, M, BLOCK] per-device addends -> (sum chunk [M, BLOCK] f32 owned
-    by this rank (canonical: rank i owns chunk i), final compressed wire).
+    by this rank (canonical: rank i owns chunk i), final compressed wire —
+    ``None`` when ``want_wire`` is off and a final re-encode would be dead).
 
-    Bidirectional mode splits the block rows across two opposite-direction
-    rings, halving per-link bytes."""
-    n = xb.shape[0]
-    m = xb.shape[1]
-    half = (m // 2) // 8 * 8  # keep pallas tile alignment
-    if _bidir() and half >= 8:
-        a1, w1 = _ring_rs_dir(xb[:, :half], axis, codec, +1)
-        a2, w2 = _ring_rs_dir(xb[:, half:], axis, codec, -1)
-        acc = jnp.concatenate([a1, a2], axis=0)
-        wire = jax.tree.map(lambda x, y: jnp.concatenate([x, y], axis=0),
-                            w1, w2)
-        return acc, wire
-    return _ring_rs_dir(xb, axis, codec, +1)
+    The row partition comes from :func:`_ring_schedule`: the bidirectional
+    split halves per-link bytes across opposite-direction rings, and chunk
+    striping yields data-independent sub-rings the scheduler overlaps.
+    Row-striping is bit-exact (bq scales are per 128-lane row), so any
+    schedule produces identical sums and wires to the monolithic ring.
+    Logs one measured ``rs_ring`` wire event: actual encoded bytes per hop
+    across all sub-rings x (n-1) hops, stamped with the realized schedule
+    (parts / bidir / fallback)."""
+    n, m = xb.shape[0], xb.shape[1]
+    sched = _ring_schedule(m)
+    accs, wires, hop_nbytes = [], [], 0
+    for lo, hi, d in sched.parts:
+        part = xb if len(sched.parts) == 1 else xb[:, lo:hi]
+        acc, wire, nb = _ring_rs_dir(part, axis, codec, d,
+                                     want_wire=want_wire)
+        accs.append(acc)
+        wires.append(wire)
+        hop_nbytes += nb
+    _log("rs_ring", "-", codec, hop_nbytes, n - 1,
+         parts=len(sched.parts), bidir=sched.bidir, fallback=sched.fallback)
+    if len(sched.parts) == 1:
+        return accs[0], wires[0]
+    acc = jnp.concatenate(accs, axis=0)
+    wire = None if not want_wire else jax.tree.map(
+        lambda *ls: jnp.concatenate(ls, axis=0), *wires)
+    return acc, wire
 
 
 # --------------------------------------------------------------------------
@@ -442,6 +601,7 @@ def _psum_impl(x, axis, codec):
         return x
     xb = _chunked_blocks(x.reshape(-1), n)
     acc, wire = _ring_reduce_scatter(xb, axis, codec)
+    del acc  # the all-reduce gathers the final compressed chunk instead
     gathered = jax.tree.map(
         lambda l: lax.all_gather(l, axis, axis=0, tiled=False), wire)
     _log("ar_allgather", "-", codec, ops.wire_nbytes(wire), n - 1)
@@ -458,7 +618,9 @@ def _reduce_scatter_impl(x, axis, axis_dim, codec):
         _log("reduce_scatter", "-", codec, x.size * x.dtype.itemsize, 1)
         return lax.psum_scatter(x, axis, scatter_dimension=axis_dim, tiled=True)
     xb, chunk_shape = _split_for_scatter(x, axis_dim, n)
-    acc, _ = _ring_reduce_scatter(xb, axis, codec)
+    # want_wire=False: the ring logs its own per-hop wire bytes (rs_ring)
+    # and skips the dead final re-encode
+    acc, _ = _ring_reduce_scatter(xb, axis, codec, want_wire=False)
     return _chunk_to_shape(acc, chunk_shape, x.dtype)
 
 
@@ -671,10 +833,12 @@ def psum(x, axis, tag):
     if c_fwd.stateful or c_bwd.stateful:
         if s.dim in policy.DIRECTED_DIMS:
             _require_stateless(s, c_fwd, c_bwd)  # raises
-        return _stateful_psum(x, axis, s, c_fwd)
+        with _wire_site(s.ledger_tag):
+            return _stateful_psum(x, axis, s, c_fwd)
     _account("all_reduce", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="all_reduce", level=s.level or "flat")
-    return _psum_vjp(x, axis, c_fwd, c_bwd)
+    with _wire_site(s.ledger_tag):
+        return _psum_vjp(x, axis, c_fwd, c_bwd)
 
 
 def all_gather(x, axis, axis_dim: int, tag):
@@ -687,7 +851,8 @@ def all_gather(x, axis, axis_dim: int, tag):
     _require_stateless(s, c_fwd, c_bwd)
     _account("all_gather", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="reduce_scatter", level=s.level or "flat")
-    return _ag_vjp(x, axis, axis_dim, c_fwd, c_bwd)
+    with _wire_site(s.ledger_tag):
+        return _ag_vjp(x, axis, axis_dim, c_fwd, c_bwd)
 
 
 def reduce_scatter(x, axis, axis_dim: int, tag):
@@ -700,7 +865,8 @@ def reduce_scatter(x, axis, axis_dim: int, tag):
     _require_stateless(s, c_fwd, c_bwd)
     _account("reduce_scatter", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="all_gather", level=s.level or "flat")
-    return _rs_vjp(x, axis, axis_dim, c_fwd, c_bwd)
+    with _wire_site(s.ledger_tag):
+        return _rs_vjp(x, axis, axis_dim, c_fwd, c_bwd)
 
 
 def ppermute(x, axis, perm, tag):
@@ -723,7 +889,8 @@ def ppermute(x, axis, perm, tag):
     _account("ppermute", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="ppermute", elems=x.size * len(perm) // n,
              level=s.level or "flat", nbytes=nbytes)
-    return _pp_vjp(x, axis, perm, c_fwd, c_bwd)
+    with _wire_site(s.ledger_tag):
+        return _pp_vjp(x, axis, perm, c_fwd, c_bwd)
 
 
 def stage_send(x, axis, tag="pp"):
@@ -770,7 +937,8 @@ def all_to_all(x, axis, split_axis: int, concat_axis: int, tag):
     _require_stateless(s, c_fwd, c_bwd)
     _account("all_to_all", s.ledger_tag, x, axis, c_fwd, c_bwd,
              bwd_op="all_to_all", level=s.level or "flat")
-    return _a2a_vjp(x, axis, split_axis, concat_axis, c_fwd, c_bwd)
+    with _wire_site(s.ledger_tag):
+        return _a2a_vjp(x, axis, split_axis, concat_axis, c_fwd, c_bwd)
 
 
 def copy_fwd_psum_bwd(x, axis, tag):
@@ -816,12 +984,14 @@ def psum_fwd_copy_bwd(x, axis, tag):
              ("all_gather", axis.inner, "inner", chunk, None)],
             s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)],
             {"inner": nbytes, "outer": chunk * x.dtype.itemsize})
-        return _hier_f_vjp(x, axis.inner, axis.outer, (ci_f, co_f))
+        with _wire_site(s.ledger_tag):
+            return _hier_f_vjp(x, axis.inner, axis.outer, (ci_f, co_f))
     c_fwd, _ = _codec_pair(s, nbytes)
     _require_stateless(s, c_fwd)
     _account("all_reduce", s.ledger_tag, x, axis, c_fwd, c_fwd,
              bwd_op=None, level=s.level or "flat")
-    return _f_vjp(x, axis, c_fwd)
+    with _wire_site(s.ledger_tag):
+        return _f_vjp(x, axis, c_fwd)
 
 
 # --------------------------------------------------------------------------
@@ -869,19 +1039,27 @@ def _hier_psum_impl(x, inner, outer, c_in, c_out):
         return _psum_impl(x, outer, c_out)
     total = x.size
     xb = _chunked_blocks(x.reshape(-1), n_i)            # [n_i, M, BLOCK] f32
-    # stage 1: intra-node reduce-scatter — rank i owns sum-chunk i
+    # stage 1: intra-node reduce-scatter — rank i owns sum-chunk i.  On a
+    # single-node mesh (n_o == 1) the ring's final fused re-encode IS the
+    # stage-3 wire, so keep it; otherwise the chunk changes in stage 2 and
+    # the re-encode would be dead.
+    wire = None
     if c_in.is_identity:
         chunk = lax.psum_scatter(xb, inner, scatter_dimension=0, tiled=False)
     else:
-        chunk, _ = _ring_reduce_scatter(xb, inner, c_in)
+        chunk, wire = _ring_reduce_scatter(xb, inner, c_in,
+                                           want_wire=(n_o == 1))
     # stage 2: inter-node all-reduce of the 1/n_i chunk
     if n_o > 1:
         chunk = _psum_impl(chunk, outer, c_out)
+        wire = None
     # stage 3: intra-node all-gather of the fully-reduced chunks
     if c_in.is_identity:
         full = lax.all_gather(chunk, inner, axis=0, tiled=False)
     else:
-        wire = c_in.encode_blocks(chunk)
+        if wire is None:
+            wire = c_in.encode_blocks(chunk)
+        _log("ar_allgather", "-", c_in, ops.wire_nbytes(wire), n_i - 1)
         gathered = jax.tree.map(
             lambda l: lax.all_gather(l, inner, axis=0, tiled=False), wire)
         full = c_in.decode_blocks(gathered)             # [n_i, M, BLOCK]
@@ -1012,8 +1190,9 @@ def hier_all_reduce(x, inner_axis: str, outer_axis: str, tag):
          ("all_gather", inner_axis, "inner", chunk, "reduce_scatter")],
         s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b), (ci_f, ci_b)],
         {"inner": nbytes, "outer": chunk * x.dtype.itemsize})
-    return _hier_psum_vjp(x, inner_axis, outer_axis,
-                          (ci_f, ci_b), (co_f, co_b))
+    with _wire_site(s.ledger_tag):
+        return _hier_psum_vjp(x, inner_axis, outer_axis,
+                              (ci_f, ci_b), (co_f, co_b))
 
 
 # ZeRO++-style name kept alongside the lax-style one
@@ -1040,8 +1219,9 @@ def hier_reduce_scatter(x, inner_axis: str, outer_axis: str, axis_dim: int,
          ("reduce_scatter", outer_axis, "outer", x.size // n_i, "all_gather")],
         s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b)],
         {"inner": nbytes, "outer": x.size // n_i * x.dtype.itemsize})
-    return _hier_rs_vjp(x, inner_axis, outer_axis, axis_dim,
-                        (ci_f, ci_b), (co_f, co_b))
+    with _wire_site(s.ledger_tag):
+        return _hier_rs_vjp(x, inner_axis, outer_axis, axis_dim,
+                            (ci_f, ci_b), (co_f, co_b))
 
 
 def hier_all_gather(x, inner_axis: str, outer_axis: str, axis_dim: int,
@@ -1063,8 +1243,9 @@ def hier_all_gather(x, inner_axis: str, outer_axis: str, axis_dim: int,
          ("all_gather", inner_axis, "inner", x.size * n_o, "reduce_scatter")],
         s.ledger_tag, x, [(co_f, co_b), (ci_f, ci_b)],
         {"inner": nbytes * n_o, "outer": nbytes})
-    return _hier_ag_vjp(x, inner_axis, outer_axis, axis_dim,
-                        (ci_f, ci_b), (co_f, co_b))
+    with _wire_site(s.ledger_tag):
+        return _hier_ag_vjp(x, inner_axis, outer_axis, axis_dim,
+                            (ci_f, ci_b), (co_f, co_b))
 
 
 # --------------------------------------------------------------------------
@@ -1153,8 +1334,9 @@ def hier_all_to_all(x, inner_axis: str, outer_axis: str, split_axis: int,
          ("all_to_all", outer_axis, "outer", x.size, "all_to_all")],
         s.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b)],
         {"inner": nbytes, "outer": nbytes})
-    return _hier_a2a_vjp(x, inner_axis, outer_axis, split_axis, concat_axis,
-                         (ci_f, ci_b), (co_f, co_b))
+    with _wire_site(s.ledger_tag):
+        return _hier_a2a_vjp(x, inner_axis, outer_axis, split_axis,
+                             concat_axis, (ci_f, ci_b), (co_f, co_b))
 
 
 def _hier_ppermute_impl(x, inner, outer, perm, c_in, c_out):
@@ -1236,8 +1418,9 @@ def hier_ppermute(x, inner_axis: str, outer_axis: str, perm, tag):
          ("ppermute", outer_axis, "outer", x.size * k_out // n, "ppermute")],
         st.ledger_tag, x, [(ci_f, ci_b), (co_f, co_b)],
         {"inner": nbytes, "outer": nbytes})
-    return _hier_pp_vjp(x, inner_axis, outer_axis, perm,
-                        (ci_f, ci_b), (co_f, co_b))
+    with _wire_site(st.ledger_tag):
+        return _hier_pp_vjp(x, inner_axis, outer_axis, perm,
+                            (ci_f, ci_b), (co_f, co_b))
 
 
 # ---- hierarchical Megatron conjugate pair (decode-path f/g) --------------
@@ -1348,12 +1531,14 @@ def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag="dp",
     s = policy.as_site(tag)
     c, _ = _codec_pair(s, _payload_nbytes(flat))
     if c.stateful and axis_size(axis) > 1:
-        return _stateful_reduce_scatter_flat(flat, axis, s, c, mean)
+        with _wire_site(s.ledger_tag):
+            return _stateful_reduce_scatter_flat(flat, axis, s, c, mean)
     if c.stateful:          # trivial axis: nothing crosses the wire
         c = codecs.NONE
     _account("reduce_scatter", s.ledger_tag, flat, axis, c, c, bwd_op=None,
              level=s.level or "flat")
-    return _reduce_scatter_flat_impl(flat, axis, c, mean)
+    with _wire_site(s.ledger_tag):
+        return _reduce_scatter_flat_impl(flat, axis, c, mean)
 
 
 def _reduce_scatter_flat_impl(flat, axis, c, mean):
@@ -1369,7 +1554,7 @@ def _reduce_scatter_flat_impl(flat, axis, c, mean):
         _log("reduce_scatter", "-", c, flat.size * flat.dtype.itemsize, 1)
         chunk = lax.psum_scatter(xb, axis, scatter_dimension=0, tiled=False)
     else:
-        chunk, _ = _ring_reduce_scatter(xb, axis, c)
+        chunk, _ = _ring_reduce_scatter(xb, axis, c, want_wire=False)
     chunk = chunk.reshape(-1)
     return chunk / n if mean else chunk
 
@@ -1398,6 +1583,8 @@ def all_gather_flat(chunk: jnp.ndarray, axis: str, total: int,
         wire = c.inner.encode_blocks(xc.reshape(-1, BLOCK))
         dec = c.inner.decode_blocks(wire).reshape(xc.shape)
         io.write(key, {"residual": xc - dec})
+        _log("all_gather", s.ledger_tag, c, ops.wire_nbytes(wire),
+             axis_size(axis) - 1)
         gathered = jax.tree.map(
             lambda l: lax.all_gather(l, axis, axis=0, tiled=True), wire)
         return c.inner.decode_blocks(gathered).reshape(-1)[:total]
@@ -1405,7 +1592,8 @@ def all_gather_flat(chunk: jnp.ndarray, axis: str, total: int,
         c = codecs.NONE
     _account("all_gather", s.ledger_tag, chunk, axis, c, c, bwd_op=None,
              level=s.level or "flat")
-    return _all_gather_flat_impl(chunk, axis, total, c)
+    with _wire_site(s.ledger_tag):
+        return _all_gather_flat_impl(chunk, axis, total, c)
 
 
 def _all_gather_flat_impl(chunk, axis, total, c):

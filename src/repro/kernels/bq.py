@@ -6,14 +6,19 @@ Layout contract: the ops layer reshapes every tensor into a 2-D
 matches the sublane count, so a tile is exactly one (8, 128) vreg-shaped
 panel and the per-block max-abs reduction stays within registers.
 
-Three kernels:
+Four kernels:
   * ``bq_encode``            x -> (q_hi[, q_lo], scale)
   * ``bq_decode``            (q_hi[, q_lo], scale) -> x
-  * ``bq_decode_add_encode`` fused ring-hop: encode(local + decode(wire)),
-    also emitting the running f32 sum.  This fusion is the TPU analogue of
-    the paper's collective-level optimization of avoiding "superfluous
-    compression operations" between ring hops: one HBM round-trip instead
-    of three.
+  * ``bq_decode_add_encode`` fused ring-hop: encode(local + decode(wire)).
+    ``want_sum=True`` additionally emits the running f32 sum; the
+    intermediate hops of a ring reduce-scatter only forward the wire, so
+    the default wire-only variant skips the (M, 128) f32 HBM write
+    entirely.  This fusion is the TPU analogue of the paper's
+    collective-level optimization of avoiding "superfluous compression
+    operations" between ring hops: one HBM round-trip instead of three.
+  * ``bq_decode_add``        final ring-hop: local + decode(wire), sum
+    only — the reduce-scatter tail that keeps the f32 chunk and sends
+    nothing further, so the re-encode is skipped too.
 
 All kernels are bit-identical to the ``ref.py`` oracles (same jnp rounding
 primitives) and are validated in ``interpret=True`` mode on CPU.
@@ -113,6 +118,36 @@ def _dae24_kernel(qhi_ref, qlo_ref, scale_ref, local_ref,
     sum_o[...] = s
 
 
+def _daew_kernel(qhi_ref, scale_ref, local_ref, qhi_o, scale_o, *, bits):
+    # wire-only variant: intermediate ring hops never read the f32 sum,
+    # so skip its HBM write
+    s = _dequantize(qhi_ref[...], None, scale_ref[...], bits)
+    s = s + local_ref[...].astype(jnp.float32)
+    hi, _, sc = _quantize(s, bits)
+    qhi_o[...] = hi
+    scale_o[...] = sc
+
+
+def _daew24_kernel(qhi_ref, qlo_ref, scale_ref, local_ref,
+                   qhi_o, qlo_o, scale_o, *, bits):
+    s = _dequantize(qhi_ref[...], qlo_ref[...], scale_ref[...], bits)
+    s = s + local_ref[...].astype(jnp.float32)
+    hi, lo, sc = _quantize(s, bits)
+    qhi_o[...] = hi
+    qlo_o[...] = lo
+    scale_o[...] = sc
+
+
+def _da_kernel(qhi_ref, scale_ref, local_ref, sum_o, *, bits):
+    s = _dequantize(qhi_ref[...], None, scale_ref[...], bits)
+    sum_o[...] = s + local_ref[...].astype(jnp.float32)
+
+
+def _da24_kernel(qhi_ref, qlo_ref, scale_ref, local_ref, sum_o, *, bits):
+    s = _dequantize(qhi_ref[...], qlo_ref[...], scale_ref[...], bits)
+    sum_o[...] = s + local_ref[...].astype(jnp.float32)
+
+
 # --------------------------------------------------------------------------
 # pallas_call wrappers (operate on (M, 128) matrices, M % TILE_M == 0)
 # --------------------------------------------------------------------------
@@ -189,36 +224,75 @@ def bq_decode_pallas(q_hi, q_lo, scale, bits: int, interpret: bool = False):
     )(q_hi, scale)
 
 
-@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bits", "want_sum", "interpret"))
 def bq_decode_add_encode_pallas(q_hi, q_lo, scale, local, bits: int,
+                                want_sum: bool = True,
                                 interpret: bool = False):
-    """Fused ring hop. Returns (q_hi', q_lo'|None, scale', sum_f32)."""
+    """Fused ring hop. Returns (q_hi', q_lo'|None, scale', sum_f32|None).
+
+    ``want_sum=False`` selects the wire-only kernel (no f32 sum output) —
+    the shape intermediate reduce-scatter hops want."""
     m = q_hi.shape[0]
     if bits == 24:
+        kern = _dae24_kernel if want_sum else _daew24_kernel
+        specs = [_mat_spec(), _mat_spec(), _scale_spec()]
+        shapes = [
+            jax.ShapeDtypeStruct((m, BLOCK), jnp.int16),
+            jax.ShapeDtypeStruct((m, BLOCK), jnp.uint8),
+            jax.ShapeDtypeStruct((m, 1), jnp.float32),
+        ]
+        if want_sum:
+            specs.append(_mat_spec())
+            shapes.append(jax.ShapeDtypeStruct((m, BLOCK), jnp.float32))
         out = pl.pallas_call(
-            functools.partial(_dae24_kernel, bits=bits),
+            functools.partial(kern, bits=bits),
             grid=_grid(m),
             in_specs=[_mat_spec(), _mat_spec(), _scale_spec(), _mat_spec()],
-            out_specs=[_mat_spec(), _mat_spec(), _scale_spec(), _mat_spec()],
-            out_shape=[
-                jax.ShapeDtypeStruct((m, BLOCK), jnp.int16),
-                jax.ShapeDtypeStruct((m, BLOCK), jnp.uint8),
-                jax.ShapeDtypeStruct((m, 1), jnp.float32),
-                jax.ShapeDtypeStruct((m, BLOCK), jnp.float32),
-            ],
+            out_specs=specs,
+            out_shape=shapes,
             interpret=interpret,
         )(q_hi, q_lo, scale, local)
-        return out[0], out[1], out[2], out[3]
+        return out[0], out[1], out[2], out[3] if want_sum else None
+    kern = _dae_kernel if want_sum else _daew_kernel
+    specs = [_q_spec(bits), _scale_spec()]
+    shapes = [
+        jax.ShapeDtypeStruct((m, _hi_width(bits)), _hi_dtype(bits)),
+        jax.ShapeDtypeStruct((m, 1), jnp.float32),
+    ]
+    if want_sum:
+        specs.append(_mat_spec())
+        shapes.append(jax.ShapeDtypeStruct((m, BLOCK), jnp.float32))
     out = pl.pallas_call(
-        functools.partial(_dae_kernel, bits=bits),
+        functools.partial(kern, bits=bits),
         grid=_grid(m),
         in_specs=[_q_spec(bits), _scale_spec(), _mat_spec()],
-        out_specs=[_q_spec(bits), _scale_spec(), _mat_spec()],
-        out_shape=[
-            jax.ShapeDtypeStruct((m, _hi_width(bits)), _hi_dtype(bits)),
-            jax.ShapeDtypeStruct((m, 1), jnp.float32),
-            jax.ShapeDtypeStruct((m, BLOCK), jnp.float32),
-        ],
+        out_specs=specs,
+        out_shape=shapes,
         interpret=interpret,
     )(q_hi, scale, local)
-    return out[0], None, out[1], out[2]
+    return out[0], None, out[1], out[2] if want_sum else None
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def bq_decode_add_pallas(q_hi, q_lo, scale, local, bits: int,
+                         interpret: bool = False):
+    """Final ring hop: local + decode(wire) -> (M, 128) f32 sum only."""
+    m = q_hi.shape[0]
+    if bits == 24:
+        return pl.pallas_call(
+            functools.partial(_da24_kernel, bits=bits),
+            grid=_grid(m),
+            in_specs=[_mat_spec(), _mat_spec(), _scale_spec(), _mat_spec()],
+            out_specs=_mat_spec(),
+            out_shape=jax.ShapeDtypeStruct((m, BLOCK), jnp.float32),
+            interpret=interpret,
+        )(q_hi, q_lo, scale, local)
+    return pl.pallas_call(
+        functools.partial(_da_kernel, bits=bits),
+        grid=_grid(m),
+        in_specs=[_q_spec(bits), _scale_spec(), _mat_spec()],
+        out_specs=_mat_spec(),
+        out_shape=jax.ShapeDtypeStruct((m, BLOCK), jnp.float32),
+        interpret=interpret,
+    )(q_hi, scale, local)

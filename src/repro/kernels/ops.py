@@ -27,6 +27,17 @@ from repro.kernels.ref import BLOCK
 _encode_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_encode_ref)
 _decode_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_ref)
 _dae_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_add_encode_ref)
+_da_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_add_ref)
+
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def _daew_ref(q_hi, q_lo, scale, local, *, bits):
+    """Wire-only fused hop oracle: the running sum is dropped INSIDE the
+    jit so XLA provably DCEs its materialization (dropping an output of a
+    nested jitted call after the fact does not)."""
+    hi, lo, sc, _ = ref.bq_decode_add_encode_ref(q_hi, q_lo, scale, local,
+                                                 bits=bits)
+    return hi, lo, sc
 
 _TILE_ELEMS = bq.TILE_M * BLOCK
 
@@ -95,17 +106,40 @@ def bq_decode_blocks(wire: dict, bits: int, backend: str | None = None) -> jnp.n
 
 
 def bq_decode_add_encode_blocks(wire: dict, local2d: jnp.ndarray, bits: int,
-                                backend: str | None = None):
-    """Fused ring hop: returns (wire', sum_f32 (M,128))."""
+                                backend: str | None = None,
+                                want_sum: bool = True):
+    """Fused ring hop: returns (wire', sum_f32 (M,128)|None).
+
+    ``want_sum=False`` skips materializing the f32 running sum — the
+    intermediate hops of a ring reduce-scatter only forward the wire."""
     be = _resolve(backend)
     if be == "jnp":
-        hi, lo, scale, s = _dae_ref(
-            wire["q_hi"], wire["q_lo"], wire["scale"], local2d, bits=bits)
+        if want_sum:
+            hi, lo, scale, s = _dae_ref(
+                wire["q_hi"], wire["q_lo"], wire["scale"], local2d,
+                bits=bits)
+        else:
+            hi, lo, scale = _daew_ref(
+                wire["q_hi"], wire["q_lo"], wire["scale"], local2d,
+                bits=bits)
+            s = None
     else:
         hi, lo, scale, s = bq.bq_decode_add_encode_pallas(
             wire["q_hi"], wire["q_lo"], wire["scale"], local2d, bits,
-            interpret=(be == "pallas_interpret"))
+            want_sum=want_sum, interpret=(be == "pallas_interpret"))
     return {"q_hi": hi, "q_lo": lo, "scale": scale}, s
+
+
+def bq_decode_add_blocks(wire: dict, local2d: jnp.ndarray, bits: int,
+                         backend: str | None = None) -> jnp.ndarray:
+    """Final ring hop: local + decode(wire) -> (M,128) f32, no re-encode."""
+    be = _resolve(backend)
+    if be == "jnp":
+        return _da_ref(wire["q_hi"], wire["q_lo"], wire["scale"], local2d,
+                       bits=bits)
+    return bq.bq_decode_add_pallas(
+        wire["q_hi"], wire["q_lo"], wire["scale"], local2d, bits,
+        interpret=(be == "pallas_interpret"))
 
 
 # --------------------------------------------------------------------------

@@ -100,6 +100,18 @@ def bq_decode_add_encode_ref(q_hi, q_lo, scale, local: jnp.ndarray, bits: int):
     return hi, lo, sc, s
 
 
+def bq_decode_add_ref(q_hi, q_lo, scale, local: jnp.ndarray,
+                      bits: int) -> jnp.ndarray:
+    """Final ring-hop oracle: local + decode(wire), no re-encode.
+
+    The last reduce-scatter hop of a plain (non-all-reduce) ring keeps the
+    f32 sum and sends nothing further, so re-encoding it is wasted work;
+    this is the sum-only tail of :func:`bq_decode_add_encode_ref` and is
+    bit-identical to its ``sum_f32`` output.
+    """
+    return bq_decode_ref(q_hi, q_lo, scale, bits) + local.astype(jnp.float32)
+
+
 def max_abs_error_bound(scale: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Worst-case |x - D(E(x))| per block.
 

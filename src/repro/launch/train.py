@@ -148,6 +148,24 @@ def main():
                          "dp@zero1_grad*=ef:bq4 puts error-feedback rate-4 "
                          "on the ZeRO-1 DP gradient sync, dp=plr8 covers a "
                          "whole dimension)")
+    ap.add_argument("--ring-bidir", action="store_true",
+                    help="split compressed ring collectives into two "
+                         "counter-rotating half-rings (halves per-link "
+                         "bytes; falls back to one ring, visibly in the "
+                         "ledger, when the payload is under a tile per "
+                         "direction)")
+    ap.add_argument("--ring-chunks", type=int, default=1,
+                    help="stripe each compressed ring collective into N "
+                         "independently-pipelined row chunks so chunk k+1's "
+                         "encode overlaps chunk k's transfer (bit-exact for "
+                         "per-row-scale bq codecs at any count)")
+    ap.add_argument("--grad-buckets", type=int, default=1,
+                    help="split the flat ZeRO-1 DP gradient sync into N "
+                         "bucketed reduce-scatter chains with the clip "
+                         "scale applied post-sync, letting each bucket's "
+                         "ring hops dispatch as soon as backward produces "
+                         "its slice (opt-in: not bit-exact with the "
+                         "single-bucket path)")
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--opt-state-bits", type=int, default=32)
     ap.add_argument("--ckpt-dir", default="")
@@ -215,8 +233,11 @@ def main():
 
     trainer = make_trainer(model, mesh, scheme=comm_policy,
                            opt_cfg=AdamConfig(lr=args.lr,
-                                              state_bits=args.opt_state_bits),
-                           n_micro=args.microbatches)
+                                              state_bits=args.opt_state_bits,
+                                              grad_buckets=args.grad_buckets),
+                           n_micro=args.microbatches,
+                           ring_bidir=args.ring_bidir,
+                           ring_chunks=args.ring_chunks)
     data = SyntheticCorpus(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.global_batch, seed=args.seed))

@@ -39,7 +39,8 @@ def greedy_token(logits, cfg, mi: MeshInfo):
 
 class Server:
     def __init__(self, model: Model, mesh, scheme="baseline",
-                 seq_axes=("model",), ring_bidir: bool = False):
+                 seq_axes=("model",), ring_bidir: bool = False,
+                 ring_chunks: int = 1):
         self.model = model
         self.mesh = mesh
         # compile the policy against this mesh once; prefill/decode bind
@@ -50,6 +51,7 @@ class Server:
         self.seq_axes = tuple(model.mi.tp_axes if ax == "model" else ax
                               for ax in seq_axes)
         self.ring_bidir = ring_bidir
+        self.ring_chunks = ring_chunks
         self._build()
 
     # ------------------------------------------------------------------
@@ -59,7 +61,7 @@ class Server:
 
         def prefill_fn(params, batch):
             with policy_lib.use_plan(self.plan), \
-                    comms.ring_options(self.ring_bidir):
+                    comms.ring_options(self.ring_bidir, self.ring_chunks):
                 logits, caches, _ = model.forward(params, batch,
                                                   phase="prefill")
                 tok = greedy_token(logits[:, -1:], cfg, mi)
@@ -67,7 +69,7 @@ class Server:
 
         def decode_fn(params, token, caches, index):
             with policy_lib.use_plan(self.plan), comms.vma_mode(False), \
-                    comms.ring_options(self.ring_bidir):
+                    comms.ring_options(self.ring_bidir, self.ring_chunks):
                 x = layers.embed(params["embed"], token, cfg, mi, sp=False)
                 pos3 = None
                 if cfg.mrope:

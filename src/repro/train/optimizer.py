@@ -74,6 +74,15 @@ class AdamConfig:
     grad_clip: float = 1.0
     state_bits: int = 32            # 8 -> bq8-quantized m/v (ZeRO-1 path)
     warmup: int = 10
+    # > 1 splits the flat ZeRO-1 DP sync into that many contiguous bucket
+    # slices, each with its own reduce-scatter (+ hier/pod psum) chain, and
+    # moves the grad-clip scale AFTER the sync.  The wire ops then no
+    # longer depend on the global grad norm (a whole-backward barrier), so
+    # the XLA latency-hiding scheduler can launch bucket k's ring hops as
+    # soon as backward has produced its slice — DP sync overlaps the rest
+    # of backward instead of serializing after it.  Opt-in: clipping after
+    # the (lossy) encode is not bit-exact with the bucket-free path.
+    grad_buckets: int = 1
 
 
 def _is_pv(x):
@@ -123,11 +132,17 @@ class Adam:
         flat = _flat_concat([l.v for l, c in zip(leaves, classes)
                              if c != "A"])
         n = flat.shape[0]
-        chunk_len = self._chunk_len(n)
-        # master chunk holds this data-shard's slice of the flat params
-        idx = lax.axis_index(mi.data_axis) * chunk_len
-        master = lax.dynamic_slice_in_dim(
-            jnp.pad(flat, (0, chunk_len * mi.dp - n)), idx, chunk_len, 0)
+        # master chunk holds this data-shard's slice of the flat params —
+        # per grad-sync bucket, so the layout matches what apply's bucketed
+        # reduce-scatters produce (concat of per-bucket 1/dp chunks)
+        idx = lax.axis_index(mi.data_axis)
+        segs = []
+        for lo, hi in self._bucket_bounds(n):
+            cl = self._chunk_len(hi - lo)
+            pad = jnp.pad(flat[lo:hi], (0, cl * mi.dp - (hi - lo)))
+            segs.append(lax.dynamic_slice_in_dim(pad, idx * cl, cl, 0))
+        master = jnp.concatenate(segs)
+        chunk_len = master.shape[0]
         zc = jnp.zeros((chunk_len,), _F32)
         if self.cfg.state_bits == 8:
             m = kops.bq_encode_blocks(zc.reshape(-1, BLOCK), 8)
@@ -142,6 +157,18 @@ class Adam:
         comms.reduce_scatter_flat's padding)."""
         per = -(-n // self.mi.dp)
         return kops.padded_rows(per) * BLOCK
+
+    def _bucket_bounds(self, n: int) -> list:
+        """Contiguous (lo, hi) slices of the flat B/C vector, one per
+        grad-sync bucket (a single whole-vector bucket by default)."""
+        k = max(1, min(self.cfg.grad_buckets, n or 1))
+        base, rem = divmod(n, k)
+        bounds, at = [], 0
+        for i in range(k):
+            ln = base + (1 if i < rem else 0)
+            bounds.append((at, at + ln))
+            at += ln
+        return bounds
 
     @staticmethod
     def flat_size(params) -> int:
@@ -269,8 +296,14 @@ class Adam:
             new_fsdp.append({"master": master, "m": m, "v": v})
             new_leaves[i] = Pv(master.astype(l.v.dtype), l.spec)
 
-        # -- classes B + C: flat compressed DP reduce-scatter (ZeRO-1)
-        bc = [g.v * jnp.asarray(scale, g.v.dtype)
+        # -- classes B + C: flat compressed DP reduce-scatter (ZeRO-1).
+        # Bucketed mode (grad_buckets > 1) defers the clip scale until
+        # after the sync: the reduce-scatters then consume raw backward
+        # outputs (no data dependency on the global grad norm), so each
+        # bucket's ring hops dispatch as soon as its slice of backward is
+        # done — the async overlap the fused ring path is built for.
+        bucketed = cfg.grad_buckets > 1
+        bc = [g.v if bucketed else g.v * jnp.asarray(scale, g.v.dtype)
               for g, c in zip(gleaves, classes) if c != "A"]
         gflat = _flat_concat(bc)
         # two-level DP sync on a (node, data) factored mesh: intra-node RS
@@ -278,25 +311,45 @@ class Adam:
         # the dp_inner/dp_outer tags fall back to the flat dp codec under
         # non-level-aware schemes.
         hier = mi.node_axis is not None
-        gchunk = comms.reduce_scatter_flat(
-            gflat, mi.data_axis,
-            comms.Site("dp", "zero1_grad", level="inner" if hier else None))
-        if hier:
-            gchunk = comms.psum(gchunk, mi.node_axis,
-                                comms.Site("dp", "zero1_grad",
+        chunks = []
+        for b, (lo, hi) in enumerate(self._bucket_bounds(gflat.shape[0])):
+            sfx = str(b) if bucketed else ""
+            gc = comms.reduce_scatter_flat(
+                gflat[lo:hi], mi.data_axis,
+                comms.Site("dp", f"zero1_grad{sfx}",
+                           level="inner" if hier else None))
+            if hier:
+                gc = comms.psum(gc, mi.node_axis,
+                                comms.Site("dp", f"zero1_grad{sfx}",
                                            level="outer"))
-        if mi.pod_axis:
-            gchunk = comms.psum(gchunk, mi.pod_axis,
-                                comms.Site("dp", "zero1_grad_pod"))
+            if mi.pod_axis:
+                gc = comms.psum(gc, mi.pod_axis,
+                                comms.Site("dp", f"zero1_grad{sfx}_pod"))
+            chunks.append(gc)
+        gchunk = chunks[0] if len(chunks) == 1 else jnp.concatenate(chunks)
+        if bucketed:
+            gchunk = gchunk * scale     # post-sync clip (see above)
         m = self._state_decode(state["m"])
         v = self._state_decode(state["v"])
         master, m, v = self._adam_update(gchunk, m, v, state["master"], step)
         # hpZ: master chunks are replicated per node, so this all-gather
         # rides only fast intra-node links
-        flat_new = comms.all_gather_flat(
-            master, mi.data_axis, self.flat_size(params),
-            comms.Site("zero", "zero1_param",
-                       level="inner" if hier else None))
+        if not bucketed:
+            flat_new = comms.all_gather_flat(
+                master, mi.data_axis, self.flat_size(params),
+                comms.Site("zero", "zero1_param",
+                           level="inner" if hier else None))
+        else:
+            segs, at = [], 0
+            for b, (lo, hi) in enumerate(
+                    self._bucket_bounds(gflat.shape[0])):
+                cl = self._chunk_len(hi - lo)
+                segs.append(comms.all_gather_flat(
+                    master[at:at + cl], mi.data_axis, hi - lo,
+                    comms.Site("zero", f"zero1_param{b}",
+                               level="inner" if hier else None)))
+                at += cl
+            flat_new = jnp.concatenate(segs)
         off = 0
         for i, (l, c) in enumerate(zip(leaves, classes)):
             if c == "A":

@@ -161,10 +161,11 @@ class PipelineTrainer(Trainer):
     plain gradient accumulation over ``n_micro`` microbatches."""
 
     def __init__(self, model: Model, mesh, scheme="baseline", opt_cfg=None,
-                 n_micro: int = 1, ring_bidir: bool = False):
+                 n_micro: int = 1, ring_bidir: bool = False,
+                 ring_chunks: int = 1):
         self.n_micro = n_micro
         super().__init__(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
-                         ring_bidir=ring_bidir)
+                         ring_bidir=ring_bidir, ring_chunks=ring_chunks)
 
     def _check_mesh(self):
         pass  # any mesh: pp > 1 pipelines, pp == 1 just microbatches

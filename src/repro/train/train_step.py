@@ -69,12 +69,14 @@ class Trainer:
     comms call re-resolves a thread-local scheme at trace time."""
 
     def __init__(self, model: Model, mesh, scheme="baseline",
-                 opt_cfg: AdamConfig | None = None, ring_bidir: bool = False):
+                 opt_cfg: AdamConfig | None = None, ring_bidir: bool = False,
+                 ring_chunks: int = 1):
         self.model = model
         self.mesh = mesh
         self.policy = policy_lib.as_policy(scheme)
         self.plan = self.policy.compile(model.mi)
         self.ring_bidir = ring_bidir
+        self.ring_chunks = ring_chunks
         self.opt = Adam(opt_cfg or AdamConfig(), model.mi)
         self._check_mesh()
         self._build()
@@ -141,7 +143,6 @@ class Trainer:
         mi = self.model.mi
         local = self._local_leaves()
         n = sum(math.prod(shape) for shape, c in local if c != "A")
-        chunk = self.opt._chunk_len(n)
         hier = mi.node_axis is not None
         f32 = jnp.float32
         sites = []
@@ -155,17 +156,24 @@ class Trainer:
             if mi.pod_axis:
                 sites.append((comms.Site("dp", f"grad_fsdp{i}_pod"),
                               shape, f32))
-        sites.append((comms.Site("dp", "zero1_grad",
-                                 level="inner" if hier else None),
-                      (n,), f32))
-        if hier:
-            sites.append((comms.Site("dp", "zero1_grad", level="outer"),
-                          (chunk,), f32))
-        if mi.pod_axis:
-            sites.append((comms.Site("dp", "zero1_grad_pod"), (chunk,), f32))
-        sites.append((comms.Site("zero", "zero1_param",
-                                 level="inner" if hier else None),
-                      (chunk,), f32))
+        # flat ZeRO-1 sync, one site chain per grad-sync bucket (a single
+        # suffix-free chain when bucketing is off — the historic tags)
+        bucketed = self.opt.cfg.grad_buckets > 1
+        for b, (lo, hi) in enumerate(self.opt._bucket_bounds(n)):
+            sfx = str(b) if bucketed else ""
+            cl = self.opt._chunk_len(hi - lo)
+            sites.append((comms.Site("dp", f"zero1_grad{sfx}",
+                                     level="inner" if hier else None),
+                          (hi - lo,), f32))
+            if hier:
+                sites.append((comms.Site("dp", f"zero1_grad{sfx}",
+                                         level="outer"), (cl,), f32))
+            if mi.pod_axis:
+                sites.append((comms.Site("dp", f"zero1_grad{sfx}_pod"),
+                              (cl,), f32))
+            sites.append((comms.Site("zero", f"zero1_param{sfx}",
+                                     level="inner" if hier else None),
+                          (cl,), f32))
         return sites
 
     def codec_state_template(self) -> dict:
@@ -229,7 +237,7 @@ class Trainer:
 
         def step_fn(params, opt_state, codec_state, batch):
             with policy_lib.use_plan(self.plan), comms.vma_mode(False), \
-                    comms.ring_options(self.ring_bidir):
+                    comms.ring_options(self.ring_bidir, self.ring_chunks):
                 (loss, metrics), grads = jax.value_and_grad(
                     loss_fn, has_aux=True)(params, batch)
                 # the optimizer's sync sites read/write their codec-state
@@ -267,13 +275,14 @@ class Trainer:
 
 def make_trainer(model: Model, mesh, scheme="baseline",
                  opt_cfg: AdamConfig | None = None, n_micro: int = 1,
-                 ring_bidir: bool = False):
+                 ring_bidir: bool = False, ring_chunks: int = 1):
     """Trainer factory: the flat single-program step on an unfactored
     batch, or the microbatched 1F1B pipeline trainer when the mesh has a
     stage axis or gradient accumulation (``n_micro > 1``) is requested."""
     if model.mi.pp > 1 or n_micro > 1:
         from repro.train.pipeline import PipelineTrainer
         return PipelineTrainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
-                               n_micro=n_micro, ring_bidir=ring_bidir)
+                               n_micro=n_micro, ring_bidir=ring_bidir,
+                               ring_chunks=ring_chunks)
     return Trainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
-                   ring_bidir=ring_bidir)
+                   ring_bidir=ring_bidir, ring_chunks=ring_chunks)

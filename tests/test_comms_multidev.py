@@ -72,6 +72,18 @@ def test_compiled_plan_path_vs_legacy_scheme_path():
 
 @pytest.mark.slow
 @pytest.mark.multidev
+def test_fused_ring_matches_threepass():
+    """Acceptance: the fused one-pass compressed ring (wire-only fused
+    hops + overlap levers) is bit-exact vs the PR-5 three-pass lowering
+    for psum/RS/AG/grad over every axis of a (data=2, stage=2, model=2)
+    mesh, and bucketed ZeRO-1 grad sync tracks the unbucketed optimizer."""
+    out = run_script("fused_check.py", timeout=1800)
+    assert "fused == three-pass bit-exact" in out
+    assert "FUSED RING OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
 def test_codec_state_ef_and_lowrank():
     """Carried codec state: ef:bq4 DP-grad training with bit-exact
     checkpoint round-trip of the residual, load-bearing-state divergence

@@ -57,9 +57,27 @@ def test_ledger_event_bytes_formulas():
     # bidirectional rings halve per-link bytes
     b_bi = rl.event_bytes({**ev, "bidir": True}, train=True)
     assert b_bi["fwd"] == b["fwd"] / 2
+    # block codecs price the PADDED wire actually gathered: 1000 elems pad
+    # to one (8x128) tile = 1024 values at 8.25 bits each
     ev["codec_fwd"] = "bq8"
     b = rl.event_bytes(ev, train=True)
-    assert abs(b["fwd"] - 3 * 1000 * (8.25 / 8) * 2) < 1e-6
+    assert abs(b["fwd"] - 3 * 1024 * (8.25 / 8) * 2) < 1e-6
+    # compressed all_reduce = ring RS hops + all-gather of the final
+    # compressed chunk: both phases move (n-1) hops of the chunk wire
+    ar = dict(ev, op="all_reduce", bwd_op=None, remat=False, elems=4096)
+    chunk_wire = 1024 * (8.25 / 8)  # padded_rows(4096/4)=8 rows x 128
+    b_ar = rl.event_bytes(ar, train=True)
+    assert abs(b_ar["fwd"] - 2 * 3 * chunk_wire * 2) < 1e-6
+    # requesting bidir halves per-link bytes ONLY when the split is
+    # realized; 8 rows can't split (half-tile floor), so the ring phase
+    # keeps full price and only the XLA-native AG phase earns the credit
+    b_arb = rl.event_bytes({**ar, "bidir": True}, train=True)
+    assert abs(b_arb["fwd"] - (3 * chunk_wire + 1.5 * chunk_wire) * 2) < 1e-6
+    # big enough to split for real: both phases halve
+    big = dict(ar, elems=4 * 1024 * 128, bidir=True)
+    big_wire = 1024 * 128 * (8.25 / 8)
+    b_big = rl.event_bytes(big, train=True)
+    assert abs(b_big["fwd"] - 2 * 3 * big_wire * 0.5 * 2) < 1e-6
     # remat doubles the fwd only
     ev["remat"] = True
     b2 = rl.event_bytes(ev, train=True)

@@ -60,6 +60,31 @@ def test_fused_decode_add_encode_matches_ref(bits):
 
 
 @pytest.mark.parametrize("bits", BITS)
+def test_fused_wire_only_and_decode_add_match_full(bits):
+    """The wire-only dae variant and the sum-only decode_add variant are
+    each bit-identical to the corresponding half of the full fused hop,
+    on both backends."""
+    x2d = ops.to_blocks(jnp.asarray(_rand((4, 300), np.float32, seed=5)))
+    loc = ops.to_blocks(jnp.asarray(_rand((4, 300), np.float32, seed=6)))
+    w = ops.bq_encode_blocks(x2d, bits, backend="jnp")
+    w_full, s_full = ops.bq_decode_add_encode_blocks(w, loc, bits,
+                                                     backend="jnp")
+    for be in ("jnp", "pallas_interpret"):
+        w_only, s_none = ops.bq_decode_add_encode_blocks(
+            w, loc, bits, backend=be, want_sum=False)
+        assert s_none is None
+        for k in ("q_hi", "q_lo", "scale"):
+            if w_full[k] is None:
+                assert w_only[k] is None
+                continue
+            np.testing.assert_array_equal(np.asarray(w_full[k]),
+                                          np.asarray(w_only[k]))
+        s_only = ops.bq_decode_add_blocks(w, loc, bits, backend=be)
+        np.testing.assert_array_equal(np.asarray(s_full),
+                                      np.asarray(s_only))
+
+
+@pytest.mark.parametrize("bits", BITS)
 def test_error_bound(bits):
     x = jnp.asarray(_rand((2048,), np.float32, seed=3, scale=100.0))
     x2d = ops.to_blocks(x)

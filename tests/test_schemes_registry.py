@@ -156,6 +156,14 @@ def _bpv(codec):
 
 
 def test_flat_event_bytes_match_formulas():
+    """Identity codecs follow the analytic per-device factors; block codecs
+    on ring-lowered ops price the PADDED chunk wire the compressed lowering
+    actually ships per hop (E/n = 512 elems pads to one 8x128 tile)."""
+    from repro.kernels import ops
+
+    def _padded(elems):
+        return ops.padded_rows(elems) * 128
+
     E, n = 4096, 8
     for op, factor in (("all_gather", n - 1),
                        ("reduce_scatter", (n - 1) / n),
@@ -164,8 +172,13 @@ def test_flat_event_bytes_match_formulas():
                        ("all_to_all", (n - 1) / n)):
         for codec in ("none", "bq8", "bq16"):
             b = rl.event_bytes(_ev(op, n, E, codec), train=False)
-            want = E * _bpv(codec) * factor if codec != "none" else \
-                E * 4.0 * factor
+            if codec == "none" or op in ("ppermute", "all_to_all"):
+                want = E * (4.0 if codec == "none" else _bpv(codec)) * factor
+            elif op == "all_gather":
+                want = (n - 1) * codecs.get(codec).wire_nbytes_for(_padded(E))
+            else:  # ring-lowered RS / AR: hops x padded chunk wire
+                hop = codecs.get(codec).wire_nbytes_for(_padded(-(-E // n)))
+                want = (n - 1) * hop * (2 if op == "all_reduce" else 1)
             assert abs(b["fwd"] - want) < 1e-6, (op, codec)
             assert b["bwd"] == 0.0
 
