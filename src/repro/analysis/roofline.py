@@ -263,6 +263,25 @@ def pipelined_step_time(base_step_s: float, pp: int, n_micro: int) -> float:
 
 
 # --------------------------------------------------------------------------
+# context-parallel term: ring-attention KV hop pricing
+# --------------------------------------------------------------------------
+
+def cp_ring_seconds(events, train: bool, slow_axes=(),
+                    ici_bw: float = ICI_BW,
+                    dcn_bw: float = DCN_BW) -> float:
+    """Collective time of the ``cp``-dimension events alone — the
+    ring-attention KV rotations (cp-1 hops per attention layer, each hop
+    carrying the realized codec's wire bytes) plus the cp gradient fold.
+    Hop count x per-hop wire bytes is already encoded in the recorded
+    events (one ppermute event per hop, scan/remat multipliers applied by
+    ``event_bytes``); hier rings price their "outer" (node-crossing) hops
+    on the slow link, and a flat ring over an axis in ``slow_axes`` rides
+    DCN end-to-end."""
+    cp_ev = [ev for ev in events if tag_dim(ev["tag"]) == "cp"]
+    return collective_seconds(cp_ev, train, slow_axes, ici_bw, dcn_bw)
+
+
+# --------------------------------------------------------------------------
 # per-level codec autotune (pick codecs from the measured ICI/DCN ratio
 # via the collective_seconds pricing, over the model's own ledger)
 # --------------------------------------------------------------------------

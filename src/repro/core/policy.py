@@ -6,7 +6,7 @@ flat 24-field ``Scheme`` + tag-string fallback chain with three composable
 pieces:
 
 * :class:`TagQuery` — the structured description of one collective at
-  trace time: parallelism ``dim`` (dp/zero/tp/pp/ep), autodiff
+  trace time: parallelism ``dim`` (dp/zero/tp/pp/ep/cp), autodiff
   ``direction`` (fwd/bwd; ``None`` for the direction-free dp/zero sync),
   hierarchy ``level`` (flat/inner/outer), the uncompressed wire-payload
   size in ``nbytes``, and an optional site ``name`` ("moe_dispatch",
@@ -51,8 +51,8 @@ import threading
 
 from repro.core import codecs, compat
 
-DIMS = ("dp", "zero", "tp", "pp", "ep")
-DIRECTED_DIMS = ("tp", "pp", "ep")
+DIMS = ("dp", "zero", "tp", "pp", "ep", "cp")
+DIRECTED_DIMS = ("tp", "pp", "ep", "cp")
 DIRECTIONS = ("fwd", "bwd")
 LEVELS = ("flat", "inner", "outer")
 
@@ -298,7 +298,8 @@ def _resolve_axes(mesh_info) -> dict:
     ``zero`` stays on the intra-node data axis (hpZ: master chunks are
     replicated per node, the param all-gather never leaves the node);
     ``tp``/``ep`` ride the (possibly ``(tpnode, model)``-factored) model
-    axes; ``pp`` the stage axes (``None`` on a stage-free mesh)."""
+    axes; ``pp`` the stage axes and ``cp`` the context-parallel axes
+    (``None`` on meshes without those axes)."""
     if mesh_info is None:
         return {}
     if not hasattr(mesh_info, "data_axis"):       # a Mesh, not a MeshInfo
@@ -308,7 +309,7 @@ def _resolve_axes(mesh_info) -> dict:
     dp = compat.AxisPair(mi.node_axis, mi.data_axis) \
         if (mi.node_axis and mi.node > 1) else mi.data_axis
     return {"dp": dp, "zero": mi.data_axis, "tp": mi.tp_axes,
-            "ep": mi.tp_axes, "pp": mi.stage_axes}
+            "ep": mi.tp_axes, "pp": mi.stage_axes, "cp": mi.cp_axes}
 
 
 @dataclasses.dataclass(frozen=True)

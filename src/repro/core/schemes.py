@@ -11,6 +11,10 @@ collective carries) to a codec:
           SSM/xLSTM cross-shard state, conv halos              (paper: PP p2p)
   ep    — MoE token all-to-all (activation-class traffic; the paper's related
           work [29] compresses all-to-all the same way)
+  cp    — context/sequence-parallel ring-attention KV block rotation (fwd)
+          and its inverse-permutation gradient hops (bwd) — repeated
+          neighbor exchange, mild codecs per the paper's
+          precision-vs-sparsity guidance
 
 Each tag has a fwd and bwd codec — the paper's §III-A rule that gradients
 flowing through MP collectives in the backward pass must also be covered by
@@ -20,7 +24,7 @@ The full tag grammar (``docs/ARCHITECTURE.md``) is
 
     <dimension>[_<direction>][_<level>]
 
-with dimension in {dp, zero, tp, pp, ep}, direction in {fwd, bwd} (dp and
+with dimension in {dp, zero, tp, pp, ep, cp}, direction in {fwd, bwd} (dp and
 zero are direction-free — the optimizer's sync has no autodiff twin), and
 level in {inner, outer} naming the stage of a hierarchical collective.
 Unset level fields resolve through ``Scheme.codec``'s fallback chain:
@@ -39,9 +43,9 @@ import threading
 from repro.core import codecs, policy
 
 # parallelism dimensions, in ledger/table order
-DIMS = ("dp", "zero", "tp", "pp", "ep")
+DIMS = ("dp", "zero", "tp", "pp", "ep", "cp")
 # dimensions whose tags carry an explicit fwd/bwd direction
-DIRECTED_DIMS = ("tp", "pp", "ep")
+DIRECTED_DIMS = ("tp", "pp", "ep", "cp")
 
 
 def flat_tags() -> list[str]:
@@ -59,7 +63,7 @@ def level_tags() -> list[str]:
 class Scheme:
     """Tag -> codec map over THREE axes of the scheme space:
 
-      dimension (dp/zero/tp/pp/ep) x direction (fwd/bwd) x level.
+      dimension (dp/zero/tp/pp/ep/cp) x direction (fwd/bwd) x level.
 
     The *level* axis prices the link hierarchy of real clusters: the
     intra-node stage of a hierarchical collective (``<tag>_inner``) rides
@@ -82,6 +86,8 @@ class Scheme:
     pp_bwd: str = "none"
     ep_fwd: str = "none"
     ep_bwd: str = "none"
+    cp_fwd: str = "none"
+    cp_bwd: str = "none"
     # per-level overrides (hierarchical collectives); None -> flat codec
     dp_inner: str | None = None
     dp_outer: str | None = None
@@ -99,6 +105,10 @@ class Scheme:
     ep_fwd_outer: str | None = None
     ep_bwd_inner: str | None = None
     ep_bwd_outer: str | None = None
+    cp_fwd_inner: str | None = None
+    cp_fwd_outer: str | None = None
+    cp_bwd_inner: str | None = None
+    cp_bwd_outer: str | None = None
 
     def __post_init__(self):
         # eager codec validation: a typo'd codec name fails at scheme
@@ -136,11 +146,13 @@ class Scheme:
 
     @classmethod
     def hybrid(cls, name: str, dp: str, mp: str, zero: str | None = None) -> "Scheme":
-        """Paper-style hybrid: one codec for DP, one for all MP + ZeRO traffic."""
+        """Paper-style hybrid: one codec for DP, one for all MP + ZeRO
+        traffic (cp KV ring hops are activation-class — they take the
+        mild MP codec, never the aggressive DP one)."""
         z = zero if zero is not None else mp
         return cls(name=name, dp=dp, zero=z,
                    tp_fwd=mp, tp_bwd=mp, pp_fwd=mp, pp_bwd=mp,
-                   ep_fwd=mp, ep_bwd=mp)
+                   ep_fwd=mp, ep_bwd=mp, cp_fwd=mp, cp_bwd=mp)
 
     @classmethod
     def hier(cls, name: str, base: "Scheme", inner: str, outer: str,
@@ -148,7 +160,7 @@ class Scheme:
         """Level-aware scheme: ``base``'s flat codecs, plus a mild ``inner``
         codec for intra-node stages and an aggressive ``outer`` codec for
         inter-node stages of the hierarchical collectives of every
-        dimension in ``dims``.  Directed dimensions (tp/pp/ep) get both
+        dimension in ``dims``.  Directed dimensions (tp/pp/ep/cp) get both
         their fwd and bwd level fields set; dimensions NOT in ``dims``
         keep their level fields at ``None`` (flat-codec fallback)."""
         fields = {}

@@ -20,13 +20,16 @@ stage intra-node (fast links) and inter-node (slow links) separately:
   the model-layer TP/EP/PP collectives (PR 2);
 * ``--pp-nodes`` factors the **stage** axis into ``(ppnode, stage)`` —
   stage handoffs whose boundary crosses a node ride the slow links under
-  the aggressive ``pp_*_outer`` codec (this PR).
+  the aggressive ``pp_*_outer`` codec;
+* ``--cp-nodes`` factors the **cp** (context/sequence-parallel) axis into
+  ``(cpnode, cp)`` — ring-attention KV hops that cross a node boundary
+  ride the slow links under the ``cp_*_outer`` codec.
 
 Model code never names sub-axes directly: it goes through
-:func:`comm_axes` (or ``MeshInfo.tp_axes`` / ``MeshInfo.stage_axes``),
-which resolves a logical axis name to either the flat axis or the
-:class:`~repro.core.compat.AxisPair` the hierarchical collectives
-dispatch on.
+:func:`comm_axes` (or ``MeshInfo.tp_axes`` / ``MeshInfo.stage_axes`` /
+``MeshInfo.cp_axes``), which resolves a logical axis name to either the
+flat axis or the :class:`~repro.core.compat.AxisPair` the hierarchical
+collectives dispatch on.
 """
 
 from __future__ import annotations
@@ -39,6 +42,8 @@ TP_NODE_AXIS = "tpnode"  # outer (inter-node, slow-link) model sub-axis
 MODEL_AXIS = "model"     # inner model sub-axis / flat model axis
 PP_NODE_AXIS = "ppnode"  # outer (inter-node, slow-link) stage sub-axis
 STAGE_AXIS = "stage"     # inner stage sub-axis / flat pipeline-stage axis
+CP_NODE_AXIS = "cpnode"  # outer (inter-node, slow-link) cp sub-axis
+CP_AXIS = "cp"           # inner cp sub-axis / flat context-parallel axis
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -62,26 +67,33 @@ def _first_devices(shape):
 
 
 def make_mesh(dp: int, tp: int, pod: int = 1, nodes: int = 1,
-              tp_nodes: int = 1, pp: int = 1, pp_nodes: int = 1):
+              tp_nodes: int = 1, pp: int = 1, pp_nodes: int = 1,
+              cp: int = 1, cp_nodes: int = 1):
     """Arbitrary mesh for tests / elastic restarts / smoke runs.
 
-    Axis order is ``(pod?, node?, data, ppnode?, stage?, tpnode?, model)``
-    — batch axes outermost, pipeline stages between data and model, so
-    adjacent-stage ranks are mesh-adjacent within a (data, model) slice.
-    ``nodes > 1`` factors the dp ways into ``(node, data)``; ``tp_nodes``
-    factors tp into ``(tpnode, model)``; ``pp_nodes`` factors pp into
-    ``(ppnode, stage)``.  ``pod`` and ``nodes`` are mutually exclusive
+    Axis order is ``(pod?, node?, data, cpnode?, cp?, ppnode?, stage?,
+    tpnode?, model)`` — batch axes outermost, the context-parallel ring
+    between data and the pipeline stages (so consecutive cp ranks are
+    mesh-adjacent within a data slice), pipeline stages between cp and
+    model.  ``nodes > 1`` factors the dp ways into ``(node, data)``;
+    ``tp_nodes`` factors tp into ``(tpnode, model)``; ``pp_nodes``
+    factors pp into ``(ppnode, stage)``; ``cp_nodes`` factors cp into
+    ``(cpnode, cp)``.  ``pod`` and ``nodes`` are mutually exclusive
     outer-DP notions."""
-    if nodes > 1 or tp_nodes > 1 or pp_nodes > 1:
+    if nodes > 1 or tp_nodes > 1 or pp_nodes > 1 or cp_nodes > 1:
         assert pod == 1 or nodes == 1, "pod and nodes are mutually exclusive"
         return make_hier_mesh(dp, tp, nodes, tp_nodes=tp_nodes, pod=pod,
-                              pp=pp, pp_nodes=pp_nodes)
+                              pp=pp, pp_nodes=pp_nodes, cp=cp,
+                              cp_nodes=cp_nodes)
     shape, axes = [], []
     if pod > 1:
         shape.append(pod)
         axes.append("pod")
     shape.append(dp)
     axes.append(LOCAL_AXIS)
+    if cp > 1:
+        shape.append(cp)
+        axes.append(CP_AXIS)
     if pp > 1:
         shape.append(pp)
         axes.append(STAGE_AXIS)
@@ -92,17 +104,21 @@ def make_mesh(dp: int, tp: int, pod: int = 1, nodes: int = 1,
 
 
 def make_hier_mesh(dp: int, tp: int, nodes: int = 1, tp_nodes: int = 1,
-                   pod: int = 1, pp: int = 1, pp_nodes: int = 1):
-    """Node-factored mesh: any of the data / stage / model axes split in two.
+                   pod: int = 1, pp: int = 1, pp_nodes: int = 1,
+                   cp: int = 1, cp_nodes: int = 1):
+    """Node-factored mesh: any of the data / cp / stage / model axes split
+    in two.
 
     The total parallel degree of each logical axis is unchanged; a joint
-    ``(node, data)`` (resp. ``(ppnode, stage)``, ``(tpnode, model)``) axis
-    pair is what the flat axis of size dp (resp. pp, tp) would be,
-    linearized node-major — so flat and hierarchical collectives over the
-    pair are interchangeable rank-for-rank."""
+    ``(node, data)`` (resp. ``(cpnode, cp)``, ``(ppnode, stage)``,
+    ``(tpnode, model)``) axis pair is what the flat axis of size dp
+    (resp. cp, pp, tp) would be, linearized node-major — so flat and
+    hierarchical collectives over the pair are interchangeable
+    rank-for-rank."""
     assert dp % nodes == 0, f"dp={dp} not divisible by nodes={nodes}"
     assert tp % tp_nodes == 0, f"tp={tp} not divisible by tp_nodes={tp_nodes}"
     assert pp % pp_nodes == 0, f"pp={pp} not divisible by pp_nodes={pp_nodes}"
+    assert cp % cp_nodes == 0, f"cp={cp} not divisible by cp_nodes={cp_nodes}"
     shape, axes = [], []
     if pod > 1:
         shape.append(pod)
@@ -113,6 +129,12 @@ def make_hier_mesh(dp: int, tp: int, nodes: int = 1, tp_nodes: int = 1,
     else:
         shape.append(dp)
         axes.append(LOCAL_AXIS)
+    if cp_nodes > 1:
+        shape += [cp_nodes, cp // cp_nodes]
+        axes += [CP_NODE_AXIS, CP_AXIS]
+    elif cp > 1:
+        shape.append(cp)
+        axes.append(CP_AXIS)
     if pp_nodes > 1:
         shape += [pp_nodes, pp // pp_nodes]
         axes += [PP_NODE_AXIS, STAGE_AXIS]
@@ -132,12 +154,13 @@ def make_hier_mesh(dp: int, tp: int, nodes: int = 1, tp_nodes: int = 1,
 def comm_axes(mesh, logical: str):
     """Axis resolution helper: logical parallelism axis -> comms axis.
 
-    Maps ``"data"`` / ``"stage"`` / ``"model"`` to the flat axis name on an
-    unfactored mesh, or to the ``AxisPair(outer, inner)`` the hierarchical
-    collectives dispatch on when the mesh factors that axis over nodes.
-    Call this (or ``MeshInfo.tp_axes`` / ``MeshInfo.stage_axes``, which
-    this delegates to — one source of truth for the resolution) instead of
-    hard-coding sub-axis names."""
+    Maps ``"data"`` / ``"cp"`` / ``"stage"`` / ``"model"`` to the flat
+    axis name on an unfactored mesh, or to the ``AxisPair(outer, inner)``
+    the hierarchical collectives dispatch on when the mesh factors that
+    axis over nodes.  Call this (or ``MeshInfo.tp_axes`` /
+    ``MeshInfo.stage_axes`` / ``MeshInfo.cp_axes``, which this delegates
+    to — one source of truth for the resolution) instead of hard-coding
+    sub-axis names."""
     from repro.models.params import MeshInfo
     mi = MeshInfo.from_mesh(mesh)
     if logical == "model":
@@ -145,6 +168,10 @@ def comm_axes(mesh, logical: str):
     if logical == "stage":
         axes = mi.stage_axes
         assert axes is not None, "mesh has no stage axis"
+        return axes
+    if logical == "cp":
+        axes = mi.cp_axes
+        assert axes is not None, "mesh has no cp axis"
         return axes
     if logical == "data":
         if mi.node_axis and mi.node > 1:
@@ -165,7 +192,8 @@ def compile_plan(mesh, policy_like):
 
 
 def parse_nodes_spec(spec: str | int, ways: int, flag: str = "--nodes") -> int:
-    """--nodes / --tp-nodes / --pp-nodes spec -> node count: an int, or
+    """--nodes / --tp-nodes / --pp-nodes / --cp-nodes spec -> node count:
+    an int, or
     "NxD" (nodes x ranks-per-node); ``ways`` is the parallel degree
     factored."""
     if isinstance(spec, int):

@@ -8,6 +8,12 @@
     PYTHONPATH=src python -m repro.launch.train --arch qwen2-72b --reduced \
         --dp 2 --tp 2 --pp 2 --microbatches 4 --scheme hier_tpp_8_16
 
+    # context-parallel long sequences: zigzag sequence sharding over an
+    # explicit 'cp' mesh axis; ring attention rotates KV blocks under the
+    # scheme's cp_fwd/cp_bwd codecs
+    PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
+        --dp 2 --cp 2 --seq 128 --scheme zhybrid_16_8
+
     # rule-based policy overrides on top of any scheme: small payloads
     # ride raw, embedding gathers stay mild
     PYTHONPATH=src python -m repro.launch.train --arch gemma3-1b --reduced \
@@ -111,6 +117,11 @@ def main():
                     help="pipeline-parallel stages (explicit 'stage' mesh "
                          "axis; layer groups partition into contiguous "
                          "stages)")
+    ap.add_argument("--cp", type=int, default=1,
+                    help="context/sequence-parallel degree (explicit 'cp' "
+                         "mesh axis): the sequence shards in zigzag "
+                         "load-balanced chunks and ring attention rotates "
+                         "KV blocks under the scheme's cp codecs)")
     ap.add_argument("--pod", type=int, default=1)
     ap.add_argument("--nodes", default="1",
                     help="factor dp into (node, local) sub-axes for "
@@ -124,6 +135,10 @@ def main():
                     help="factor pp into (ppnode, stage) sub-axes: stage "
                          "handoffs crossing a node boundary ride the "
                          "aggressive pp_*_outer codec; an int or 'NxD'")
+    ap.add_argument("--cp-nodes", default="1",
+                    help="factor cp into (cpnode, cp) sub-axes: ring-"
+                         "attention KV hops crossing a node boundary ride "
+                         "the cp_*_outer codec; an int or 'NxD'")
     ap.add_argument("--microbatches", type=int, default=1,
                     help="split the per-rank batch into N microbatches "
                          "(1F1B schedule on a stage mesh, plain gradient "
@@ -174,7 +189,8 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
-    n_dev = args.host_devices or (args.dp * args.tp * args.pp * args.pod)
+    n_dev = args.host_devices or (args.dp * args.tp * args.pp * args.cp
+                                  * args.pod)
     if n_dev > 1:
         os.environ["XLA_FLAGS"] = (
             f"--xla_force_host_platform_device_count={n_dev} "
@@ -191,7 +207,8 @@ def main():
     from repro.models.params import MeshInfo
     from repro.train import checkpoint, fault
     from repro.train.optimizer import AdamConfig
-    from repro.train.train_step import batch_specs, make_trainer
+    from repro.train.train_step import (batch_specs, make_trainer,
+                                        zigzag_shard_seq)
 
     cfg = configs.get(args.arch)
     if args.reduced:
@@ -199,8 +216,10 @@ def main():
     nodes = parse_nodes_spec(args.nodes, args.dp)
     tp_nodes = parse_nodes_spec(args.tp_nodes, args.tp, flag="--tp-nodes")
     pp_nodes = parse_nodes_spec(args.pp_nodes, args.pp, flag="--pp-nodes")
+    cp_nodes = parse_nodes_spec(args.cp_nodes, args.cp, flag="--cp-nodes")
     mesh = make_mesh(args.dp, args.tp, args.pod, nodes=nodes,
-                     tp_nodes=tp_nodes, pp=args.pp, pp_nodes=pp_nodes)
+                     tp_nodes=tp_nodes, pp=args.pp, pp_nodes=pp_nodes,
+                     cp=args.cp, cp_nodes=cp_nodes)
     mi = MeshInfo.from_mesh(mesh)
     model = Model(cfg, mi)
 
@@ -277,7 +296,7 @@ def main():
 
     for step in range(start, start + args.steps):
         mon.begin()
-        np_batch = data.batch(step)
+        np_batch = zigzag_shard_seq(data.batch(step), mi.cp)
         batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in np_batch.items()}
         params, ostate, cstate, metrics = trainer.step(params, ostate,

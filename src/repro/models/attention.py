@@ -1,12 +1,19 @@
 """Attention: head-sharded TP mode and ring/SP mode, plus decode paths.
 
 Mode selection (``cfg.attn_mode_for(tp)``):
-  * ``head`` — Megatron-SP: AG(seq) -> local-head attention -> RS(seq).
-    Needs q_heads % tp == 0 and kv_heads % tp == 0.
-  * ``ring`` — sequence stays sharded; KV blocks rotate around the model
-    axis via (compressed) ppermute; online-softmax combine.  Works for any
-    head count, moves GQA-small KV instead of the full residual, and is the
-    sub-quadratic-memory path.
+  * ``head`` — Megatron-SP: AG(seq) over tp -> local-head attention ->
+    RS(seq).  Needs q_heads % tp == 0 and kv_heads % tp == 0.
+  * ``ring`` — sequence stays sharded; with tp > 1 the GQA-small KV chunk
+    is all-gathered over tp once so weights can stay replicated for any
+    head count; the sub-quadratic-memory path.
+
+Context parallelism (``cp`` mesh axis) composes with BOTH modes: each cp
+rank holds one zigzag (causal load-balanced) slice of the sequence, and
+:func:`ring_attention` rotates KV blocks around ``mi.cp_axes`` via
+compressed ppermute hops (``cp`` ledger dimension, ``cp_fwd``/``cp_bwd``
+codecs, hier-aware when the ring crosses nodes) with an online-softmax
+log-sum-exp merge.  Masking is position-based throughout, so the
+non-contiguous zigzag shards need no special cases.
 
 Decode:
   * ``head``  — KV cache [B, S_max, KV_loc, hd] (heads sharded), local attn.
@@ -151,32 +158,42 @@ def full_attention(q, k, v, q_pos, k_pos, causal, window, k_valid=None,
 
 def ring_attention(q, k, v, q_pos, k_pos, mi: MeshInfo, causal, window,
                    k_valid=None):
-    """KV blocks rotate around the model axis; compressed ppermute hops."""
-    tp = mi.tp
+    """KV blocks rotate around the context-parallel ring; compressed hops.
+
+    q [B, Sq_loc, H, hd] attends to its local KV block first, then to the
+    cp-1 blocks arriving around ``mi.cp_axes`` — the (GQA-small) KV moves,
+    queries stay put, and the online-softmax log-sum-exp merge makes the
+    result independent of block arrival order up to fp rounding.  The hops
+    ride ``comms.ppermute`` under the ``cp`` ledger dimension (``cp_fwd``
+    codec forward, inverse-permuted ``cp_bwd`` gradients via its
+    custom_vjp); ``q_pos``/``k_pos`` carry GLOBAL positions, so the zigzag
+    load-balanced sharding needs no mask special cases.
+    """
+    cp = mi.cp
     scale = q.shape[-1] ** -0.5
-    if tp == 1:
+    if cp == 1:
         bias = _mask_bias(q_pos, k_pos, causal, window, k_valid)
         o, m, l = _attn_part(q, k, v, bias, scale)
         return _finish(o, m, l, q.dtype)
-    perm = [(j, (j + 1) % tp) for j in range(tp)]
+    perm = [(j, (j + 1) % cp) for j in range(cp)]
     acc = _empty_acc(q)
     kb, vb, pb = k, v, k_pos
     vlb = k_valid
-    for t in range(tp):
+    for t in range(cp):
         bias = _mask_bias(q_pos, pb, causal, window, vlb)
         acc = _combine(acc, _attn_part(q, kb, vb, bias, scale))
-        if t < tp - 1:
-            # ring hops over the (possibly node-factored) joint model axis:
-            # an AxisPair routes intra-node hops under pp_*_inner and the
-            # node-crossing hop under pp_*_outer
-            kb = comms.ppermute(kb, mi.tp_axes, perm,
-                                comms.site("pp", "ring_kv"))
-            vb = comms.ppermute(vb, mi.tp_axes, perm,
-                                comms.site("pp", "ring_kv"))
+        if t < cp - 1:
+            # ring hops over the (possibly node-factored) joint cp axis: an
+            # AxisPair routes intra-node hops under cp_*_inner and the
+            # node-crossing hop under cp_*_outer
+            kb = comms.ppermute(kb, mi.cp_axes, perm,
+                                comms.site("cp", "ring_kv"))
+            vb = comms.ppermute(vb, mi.cp_axes, perm,
+                                comms.site("cp", "ring_kv"))
             # positions/validity are tiny int/bool payloads: rotate uncompressed
-            pb = lax.ppermute(pb, mi.tp_axes, perm)
+            pb = lax.ppermute(pb, mi.cp_axes, perm)
             if vlb is not None:
-                vlb = lax.ppermute(vlb, mi.tp_axes, perm)
+                vlb = lax.ppermute(vlb, mi.cp_axes, perm)
     return _finish(*acc, q.dtype)
 
 
@@ -242,18 +259,32 @@ def attn_train(p, x, pos, cfg, mi: MeshInfo, mode: str, causal=True, window=0,
             kvg, pos_kv_g = xg, pos_q_g
         q, k, v = _project_qkv(p, xg, kvg, pos_q_g, pos_kv_g, cfg, mi, theta,
                                pos3)
-        o = full_attention(q, k, v, pos_q_g, pos_kv_g, causal, window)
+        if mi.cp > 1:   # q/k/v cover this rank's cp chunk; ring over cp
+            o = ring_attention(q, k, v, pos_q_g, pos_kv_g, mi, causal,
+                               window)
+        else:
+            o = full_attention(q, k, v, pos_q_g, pos_kv_g, causal, window)
         y = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
                        use(p["wo"], mi))
         out = comms.reduce_scatter(y, mi.tp_axes, 1,
                                    comms.site("tp", "attn_out"))
-        cache = (k, v, pos_kv_g)      # full seq, local heads
-    else:  # ring
+        cache = (k, v, pos_kv_g)      # full cp-local seq, local heads
+    else:  # ring: sequence stays sharded, weights replicated over model
         q, k, v = _project_qkv(p, x, xkv, pos, pos_kv, cfg, mi, theta, pos3)
-        o = ring_attention(q, k, v, pos, pos_kv, mi, causal, window)
+        cache = (k, v, pos_kv)        # local seq slice, all heads
+        kb, vb, pkv = k, v, pos_kv
+        if mi.tp > 1:
+            # KV is GQA-small: gather the tp sub-slices of this rank's cp
+            # chunk once (tp-dimension traffic), so the cp ring below
+            # rotates whole chunks and queries never move
+            kb = comms.all_gather(kb, mi.tp_axes, 1,
+                                  comms.site("tp", "attn_kv"))
+            vb = comms.all_gather(vb, mi.tp_axes, 1,
+                                  comms.site("tp", "attn_kv"))
+            pkv = _gather_pos(pos_kv, mi)
+        o = ring_attention(q, kb, vb, pos, pkv, mi, causal, window)
         out = jnp.einsum("bsh,hd->bsd", o.reshape(*o.shape[:2], -1),
                          use(p["wo"], mi))
-        cache = (k, v, pos_kv)        # local seq slice, all heads
     if want_cache:
         return out, cache
     return out

@@ -43,8 +43,23 @@ class Model:
 
     # -- helpers ---------------------------------------------------------
     def _positions(self, B, S_loc):
-        base = compat.axis_index(self.mi.tp_axes) * S_loc
-        pos = base + jnp.arange(S_loc, dtype=jnp.int32)
+        """GLOBAL positions of this rank's tokens [B, S_loc].
+
+        tp slices the cp-local chunk contiguously (embed's seq
+        reduce-scatter); cp shards the full sequence in zigzag
+        (causal load-balanced) order — rank i owns half-chunks i and
+        2cp-1-i of length S/(2cp), so every rank sees the same causal
+        mask volume and early ranks don't idle through the ring."""
+        mi = self.mi
+        j = compat.axis_index(mi.tp_axes) * S_loc \
+            + jnp.arange(S_loc, dtype=jnp.int32)
+        if mi.cp > 1:
+            c = (S_loc * mi.tp) // 2          # half-chunk length S/(2cp)
+            i = compat.axis_index(mi.cp_axes)
+            pos = jnp.where(j < c, i * c + j,
+                            (2 * mi.cp - 1 - i) * c + (j - c))
+        else:
+            pos = j
         return jnp.broadcast_to(pos[None], (B, S_loc))
 
     def _dec_groups(self):
@@ -139,13 +154,15 @@ class Model:
         """Global-mean token cross-entropy (+ MoE aux). Scalar, replicated."""
         cfg, mi = self.cfg, self.mi
         logits, _, aux = self.forward(params, batch, phase="train")
-        # logits cover the FULL sequence on every model shard (lm_head
-        # gathers seq), so the loss reduces over the batch axes only.
+        # logits cover this rank's full cp-local sequence chunk on every
+        # model shard (lm_head gathers seq over tp only), so the loss sums
+        # over the batch axes AND the cp axes — cp ranks hold DISJOINT
+        # token slices of the sequence.
         ltok, w = layers.vocab_parallel_xent(logits, batch["labels"], cfg, mi)
         from repro.core import comms
         num, den = comms.varying_all((jnp.sum(ltok), jnp.sum(w)), mi.all_axes)
-        num = lax.psum(num, mi.batch_axes)
-        den = lax.psum(den, mi.batch_axes)
+        num = lax.psum(num, mi.batch_axes + mi.cp_phys_axes)
+        den = lax.psum(den, mi.batch_axes + mi.cp_phys_axes)
         # ltok is replicated over the model axes (full-seq logits on every
         # model shard); pmean folds the replication into an invariant scalar.
         num = lax.pmean(num, mi.mp_axes)
@@ -153,7 +170,7 @@ class Model:
         loss = num / jnp.maximum(den, 1.0)
         if cfg.n_experts:
             loss = loss + _LB_COEF * lax.pmean(
-                aux["lb_loss"], mi.mp_axes + mi.batch_axes)
+                aux["lb_loss"], mi.mp_axes + mi.batch_axes + mi.cp_phys_axes)
         metrics = {"xent": num / jnp.maximum(den, 1.0),
                    "tokens": den}
         return loss, metrics

@@ -36,7 +36,9 @@ class MeshInfo:
     collectives in :mod:`repro.core.comms` dispatch on (AxisPair ->
     hierarchical two-level ops).  The pipeline ``stage`` axis factors the
     same way (``--pp-nodes`` -> ``(pp_node_axis, stage_axis)``), addressed
-    through :attr:`stage_axes`."""
+    through :attr:`stage_axes`, as does the context-parallel ``cp`` axis
+    (``--cp-nodes`` -> ``(cp_node_axis, cp_axis)``), addressed through
+    :attr:`cp_axes` — ``cp`` is the TOTAL sequence-parallel degree."""
 
     tp: int = 1
     dp: int = 1
@@ -45,6 +47,8 @@ class MeshInfo:
     tp_node: int = 1
     pp: int = 1
     pp_node: int = 1
+    cp: int = 1
+    cp_node: int = 1
     model_axis: str = "model"
     data_axis: str = "data"
     pod_axis: str | None = None
@@ -52,6 +56,8 @@ class MeshInfo:
     tp_node_axis: str | None = None
     stage_axis: str | None = None
     pp_node_axis: str | None = None
+    cp_axis: str | None = None
+    cp_node_axis: str | None = None
 
     @property
     def batch_axes(self):
@@ -106,8 +112,31 @@ class MeshInfo:
         return (self.stage_axis,)
 
     @property
+    def cp_axes(self):
+        """The axis model code passes to comms for ring-KV hops: the flat
+        context-parallel axis name, the ``AxisPair(outer, inner)`` of a
+        cp-node-factored mesh (which routes hierarchical, so inter-node
+        hops carry the cp_outer codec), or None without a cp axis."""
+        if self.cp_axis is None:
+            return None
+        if self.cp_node_axis and self.cp_node > 1:
+            return compat.AxisPair(self.cp_node_axis, self.cp_axis)
+        return self.cp_axis
+
+    @property
+    def cp_phys_axes(self) -> tuple:
+        """All physical mesh axes implementing context (sequence)
+        parallelism — the axes the token sequence dim is sharded over."""
+        if self.cp_axis is None:
+            return ()
+        if self.cp_node_axis and self.cp_node > 1:
+            return (self.cp_node_axis, self.cp_axis)
+        return (self.cp_axis,)
+
+    @property
     def all_axes(self):
-        return self.batch_axes + self.sp_axes + self.mp_axes
+        return self.batch_axes + self.cp_phys_axes + self.sp_axes \
+            + self.mp_axes
 
     @classmethod
     def from_mesh(cls, mesh) -> "MeshInfo":
@@ -118,11 +147,15 @@ class MeshInfo:
                    tp_node=ax.get("tpnode", 1),
                    pp=ax.get("stage", 1) * ax.get("ppnode", 1),
                    pp_node=ax.get("ppnode", 1),
+                   cp=ax.get("cp", 1) * ax.get("cpnode", 1),
+                   cp_node=ax.get("cpnode", 1),
                    pod_axis="pod" if "pod" in ax else None,
                    node_axis="node" if "node" in ax else None,
                    tp_node_axis="tpnode" if "tpnode" in ax else None,
                    stage_axis="stage" if "stage" in ax else None,
-                   pp_node_axis="ppnode" if "ppnode" in ax else None)
+                   pp_node_axis="ppnode" if "ppnode" in ax else None,
+                   cp_axis="cp" if "cp" in ax else None,
+                   cp_node_axis="cpnode" if "cpnode" in ax else None)
 
 
 @dataclasses.dataclass
@@ -233,11 +266,13 @@ def physical_spec(spec: tuple, mi: "MeshInfo | None") -> P:
     """Logical per-dim spec -> PartitionSpec on ``mi``'s physical mesh.
 
     A ``"model"`` entry shards over the joint model axes (the
-    ``(tpnode, model)`` pair on a tp-node-factored mesh) and a ``"stage"``
+    ``(tpnode, model)`` pair on a tp-node-factored mesh), a ``"stage"``
     entry over the joint stage axes (``(ppnode, stage)`` when pp is
-    node-factored); ``"data"`` stays the inner data axis (ZeRO-3 shards
-    intra-node by design — the optimizer handles the node level
-    explicitly)."""
+    node-factored), and a ``"cp"`` entry — the sequence dim of
+    sequence-sharded activations/positions — over the joint cp axes
+    (``(cpnode, cp)`` when cp is node-factored); ``"data"`` stays the
+    inner data axis (ZeRO-3 shards intra-node by design — the optimizer
+    handles the node level explicitly)."""
     if mi is None:
         return P(*spec)
 
@@ -246,6 +281,8 @@ def physical_spec(spec: tuple, mi: "MeshInfo | None") -> P:
             return tuple(mi.mp_axes)
         if e == "stage" and mi.pp_node_axis and mi.pp_node > 1:
             return tuple(mi.sp_axes)
+        if e == "cp" and mi.cp_axis:
+            return tuple(mi.cp_phys_axes)
         return e
     return P(*[tr(e) for e in spec])
 
@@ -282,6 +319,8 @@ def local_shape(d: ParamDef, mi: MeshInfo) -> tuple:
             out.append(s // mi.dp)
         elif sp == "stage":
             out.append(s // mi.pp)
+        elif sp == "cp":
+            out.append(s // mi.cp)
         else:
             out.append(s)
     return tuple(out)

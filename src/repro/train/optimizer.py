@@ -15,6 +15,11 @@ Gradient classes, routed by each leaf's sharding spec (Pv metadata):
      never the DP one — no double compression, challenge C3), then join
      class B's flat DP path.
 
+Context-parallel mesh (``cp`` axis): every leaf's grad is partial per cp
+rank (each rank backpropagated only its sequence chunk), so the whole
+grad set folds over the cp axes under the ``cp_bwd`` codec before the
+per-class routing above.
+
 Multi-pod: the flat chunk is additionally psum'd over the 'pod' axis with
 the DP codec — the cross-pod hop is the slowest-link traffic the paper
 compresses hardest.
@@ -206,6 +211,23 @@ class Adam:
         gleaves, _, _ = _split_classes(grads)
         step = state["step"]
 
+        # -- cp (context-parallel) fold: EVERY leaf's grad is partial per
+        # cp rank (each rank backpropagated only its zigzag sequence
+        # chunk; params are replicated over cp), so fold the whole grad
+        # set over the cp axes under the cp backward codec before any
+        # per-class routing.  On a cp-node-factored mesh this rides the
+        # hierarchical two-level all-reduce (cp_bwd_inner / cp_bwd_outer).
+        if mi.cp > 1:
+            aflat = _flat_concat([g.v for g in gleaves])
+            aflat = comms.psum(aflat, mi.cp_axes,
+                               comms.Site("cp", "grad_seq_rep", "bwd"))
+            out, off = [], 0
+            for g in gleaves:
+                n = g.v.size
+                out.append(Pv(aflat[off:off + n].reshape(g.v.shape), g.spec))
+                off += n
+            gleaves = out
+
         # -- class C: fold model-axis partial grads (MP codec, paper C3).
         # On a tp-node-factored mesh this rides the hierarchical two-level
         # all-reduce (tp_bwd_inner / tp_bwd_outer codecs).
@@ -253,9 +275,11 @@ class Adam:
         # usual sqrt(pods) factor and deterministic.)
         pod = mi.pod if mi.pod_axis else 1
         node = mi.node if mi.node_axis else 1
-        rep = {"A": pod * node,
-               "B": mi.dp * pod * node,
-               "C": mi.dp * mi.tp * pod * node}
+        # after the cp fold every leaf is additionally replicated over cp
+        cpr = mi.cp if mi.cp_axis else 1
+        rep = {"A": pod * node * cpr,
+               "B": mi.dp * pod * node * cpr,
+               "C": mi.dp * mi.tp * pod * node * cpr}
         sq = jnp.float32(0.0)
         for g, c in zip(gleaves, classes):
             # stage-sharded leaves are distinct per stage rank (counted

@@ -83,6 +83,8 @@ def pipeline_loss_fn(model: Model, n_micro: int):
               for k, v in batch.items()}
         T = M + pp - 1
         sidx = compat.axis_index(stage_ax) if pp > 1 else 0
+        # S is already cp-local (batch_specs shards seq over the cp axes);
+        # _positions maps the tp sub-slice to global zigzag positions
         pos = model._positions(B // M, S // mi.tp if mi.tp > 1 else S)
 
         def tick(carry, t):
@@ -139,15 +141,18 @@ def pipeline_loss_fn(model: Model, n_micro: int):
             num = lax.psum(num, mi.sp_axes)
             den = lax.psum(den, mi.sp_axes)
             aux = jax.tree.map(lambda a: lax.psum(a, mi.sp_axes), aux)
+        # cp ranks hold disjoint zigzag sequence chunks, so their partial
+        # token sums add like the batch axes
         num, den = comms.varying_all((num, den), mi.all_axes)
-        num = lax.psum(num, mi.batch_axes)
-        den = lax.psum(den, mi.batch_axes)
+        num = lax.psum(num, mi.batch_axes + mi.cp_phys_axes)
+        den = lax.psum(den, mi.batch_axes + mi.cp_phys_axes)
         num = lax.pmean(num, mi.mp_axes)
         den = lax.pmean(den, mi.mp_axes)
         loss = num / jnp.maximum(den, 1.0)
         if cfg.n_experts:
             # per-microbatch means sum to M x the full-batch mean
-            lb = lax.pmean(aux["lb_loss"], mi.mp_axes + mi.batch_axes) / M
+            lb = lax.pmean(aux["lb_loss"],
+                           mi.mp_axes + mi.batch_axes + mi.cp_phys_axes) / M
             loss = loss + _LB_COEF * lb
         metrics = {"xent": num / jnp.maximum(den, 1.0), "tokens": den}
         return loss, metrics

@@ -42,8 +42,15 @@ from repro.train.optimizer import Adam, AdamConfig, _split_classes
 
 
 def batch_specs(cfg, mi: MeshInfo):
-    """PartitionSpecs for the training batch dict."""
-    sp = {"tokens": P(mi.batch_axes, None), "labels": P(mi.batch_axes, None)}
+    """PartitionSpecs for the training batch dict.
+
+    With a cp axis the sequence dim of tokens/labels shards over the
+    (possibly node-factored) cp axes: each cp rank's contiguous mesh slice
+    holds its zigzag sequence chunk — the host side feeds batches through
+    :func:`zigzag_shard_seq` so contiguous device slicing delivers the
+    load-balanced (non-contiguous) token sets."""
+    seq = tuple(mi.cp_phys_axes) or None
+    sp = {"tokens": P(mi.batch_axes, seq), "labels": P(mi.batch_axes, seq)}
     if cfg.encoder_layers:
         sp["frames"] = P(mi.batch_axes, mi.tp_axes, None)
     if cfg.mrope:
@@ -51,6 +58,36 @@ def batch_specs(cfg, mi: MeshInfo):
         sp["vis_mask"] = P(mi.batch_axes, mi.tp_axes)
         sp["pos3"] = P(mi.batch_axes, mi.tp_axes, None)
     return sp
+
+
+def zigzag_seq_indices(cp: int, S: int):
+    """Global sequence order whose contiguous cp-sharding yields the
+    zigzag (causal load-balanced) chunks: rank i owns half-chunks i and
+    2cp-1-i of length S/(2cp).  Matches ``Model._positions`` exactly —
+    ``indices[r * S//cp + j]`` is the global position of cp rank r's
+    j-th local token."""
+    import numpy as np
+    assert S % (2 * cp) == 0, \
+        f"seq len {S} must divide 2*cp={2 * cp} for zigzag cp sharding"
+    c = S // (2 * cp)
+    parts = []
+    for i in range(cp):
+        parts.append(np.arange(i * c, (i + 1) * c))
+        parts.append(np.arange((2 * cp - 1 - i) * c, (2 * cp - i) * c))
+    return np.concatenate(parts)
+
+
+def zigzag_shard_seq(batch: dict, cp: int) -> dict:
+    """Host-side seq permutation of tokens/labels for a cp mesh (identity
+    when cp == 1).  Labels ride the same permutation, so each position
+    keeps its own next-token target."""
+    if cp <= 1:
+        return batch
+    idx = zigzag_seq_indices(cp, batch["tokens"].shape[1])
+    out = dict(batch)
+    for key in ("tokens", "labels"):
+        out[key] = batch[key][:, idx]
+    return out
 
 
 METRIC_SPECS = {"loss": P(), "xent": P(), "tokens": P(),

@@ -1,0 +1,81 @@
+"""Determinism regression: seeded training is bit-reproducible with
+stateful codecs engaged.
+
+Two independent ``Trainer`` runs — fresh trainer objects, fresh
+compilation caches, identical seeds and data — must produce bit-identical
+losses AND bit-identical carried codec state over 5 steps, for both
+flavors of stateful codec on the ZeRO-1 DP gradient sync:
+
+  * ``ef:bq4`` — the error-feedback residual accumulates quantization
+    error across steps; any nondeterminism (unordered reductions, seed
+    drift, state-threading bugs) compounds through it;
+  * ``plr8`` — the low-rank projector carries power-iteration vectors
+    between steps.
+
+This is the regression gate for "same seed, same machine, same losses":
+it catches nondeterministic collective lowerings, codec-state aliasing
+across trainer instances, and seed plumbing regressions.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+import numpy as np
+from jax.sharding import NamedSharding
+
+from repro import configs
+from repro.core import policy, schemes
+from repro.data.pipeline import DataConfig, SyntheticCorpus
+from repro.launch.mesh import make_mesh
+from repro.models.model import Model
+from repro.models.params import MeshInfo
+from repro.train.train_step import Trainer, batch_specs
+
+cfg = configs.get("gemma3-1b").reduced().replace(vocab_size=64)
+data = SyntheticCorpus(DataConfig(vocab_size=64, seq_len=32,
+                                  global_batch=8, noise=0.05))
+mesh = make_mesh(4, 2)
+mi = MeshInfo.from_mesh(mesh)
+STEPS = 5
+
+
+def grad_policy(codec):
+    return schemes.get("zhybrid_16_8").as_policy().with_rules(
+        policy.Rule(codec, dim="dp", name="zero1_grad*"),
+        name=f"det_{codec.replace(':', '_')}")
+
+
+def run(pol):
+    """One seeded training run from scratch: fresh Trainer, fresh caches."""
+    tr = Trainer(Model(cfg, mi), mesh, scheme=pol)
+    params, ostate, cstate = tr.init_all(jax.random.key(0))
+    bspecs = batch_specs(cfg, mi)
+    losses = []
+    for s in range(STEPS):
+        batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+                 for k, v in data.batch(s).items()}
+        params, ostate, cstate, m = tr.step(params, ostate, cstate, batch)
+        losses.append(float(m["loss"]))
+    state = jax.tree.map(lambda x: np.asarray(jax.device_get(x)), cstate)
+    jax.clear_caches()
+    return losses, state
+
+
+for codec in ("ef:bq4", "plr8"):
+    pol = grad_policy(codec)
+    l1, s1 = run(pol)
+    l2, s2 = run(pol)
+    assert l1 == l2, (f"{codec}: losses not bit-identical across runs",
+                      l1, l2)
+    leaves1 = jax.tree_util.tree_leaves(s1)
+    leaves2 = jax.tree_util.tree_leaves(s2)
+    assert leaves1, f"{codec}: no carried codec state — stateful path off?"
+    for a, b in zip(leaves1, leaves2):
+        np.testing.assert_array_equal(a, b, err_msg=codec)
+    # the state is live, not a zero-filled placeholder
+    live = max(np.abs(leaf).max() for leaf in leaves1)
+    assert live > 0, f"{codec}: codec state never engaged"
+    print(f"{codec}: 2 seeded runs bit-identical over {STEPS} steps "
+          f"(final loss {l1[-1]:.6f}, {len(leaves1)} state leaves, "
+          f"|state|_max={live:.2e})")
+
+print("DETERMINISM OK")

@@ -1,0 +1,163 @@
+"""Checkpoint restore fallbacks are LOUD and reset to fresh state.
+
+Unit tests for the ``repro.launch.train`` resume helpers: a param-only
+checkpoint (no ``opt/`` / ``codec/`` subdir), a step mismatch, and a
+topology change that reshapes the saved state must each fall back to
+re-initialization with an explicit WARNING on stdout — never silently.
+Silent moment/residual resets were the bug these helpers replaced: a
+resumed run would quietly re-bias the gradients its ef codec exists to
+de-bias.
+
+Single-device (smoke-test contract): the fallback logic is pure
+host-side control flow, so one device exercises every path.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro import configs
+from repro.core import policy, schemes
+from repro.launch.mesh import make_mesh
+from repro.launch.train import _restore_codec, _restore_opt
+from repro.models.model import Model
+from repro.models.params import MeshInfo
+from repro.train import checkpoint
+from repro.train.train_step import Trainer
+
+CFG = configs.get("gemma3-1b").reduced().replace(vocab_size=64)
+EF = schemes.get("zhybrid_16_8").as_policy().with_rules(
+    policy.Rule("ef:bq4", dim="dp", name="zero1_grad*"), name="ef_unit")
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_mesh(1, 1)
+
+
+@pytest.fixture(scope="module")
+def trainer(mesh):
+    return Trainer(Model(CFG, MeshInfo.from_mesh(mesh)), mesh, scheme=EF)
+
+
+@pytest.fixture(scope="module")
+def state(trainer):
+    return trainer.init_all(jax.random.key(0))
+
+
+def _leaves(tree):
+    return [np.asarray(x) for x in jax.tree_util.tree_leaves(tree)]
+
+
+def assert_tree_equal(a, b):
+    la, lb = _leaves(a), _leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(x, y)
+
+
+# ---- missing-directory fallbacks ------------------------------------------
+
+def test_restore_opt_no_dir_warns_and_reinits(trainer, state, mesh, capsys):
+    params, ostate, _ = state
+    got = _restore_opt(trainer, params, "", 3, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "WARNING: no optimizer checkpoint for this step" in out
+    assert_tree_equal(got, trainer.opt_init(params))
+
+
+def test_restore_codec_no_dir_warns_and_reinits(trainer, mesh, capsys):
+    got = _restore_codec(trainer, "", 3, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "WARNING: no codec-state checkpoint for this step" in out
+    assert_tree_equal(got, trainer.init_codec_state())
+
+
+def test_restore_codec_stateless_scheme_is_silent(mesh, capsys):
+    """No stateful codecs -> empty state, no warning (nothing was lost)."""
+    tr = Trainer(Model(CFG, MeshInfo.from_mesh(mesh)), mesh,
+                 scheme="baseline")
+    got = _restore_codec(tr, "", 3, mesh, checkpoint)
+    assert got == {}
+    assert "WARNING" not in capsys.readouterr().out
+
+
+# ---- step-mismatch fallbacks ----------------------------------------------
+
+def test_restore_opt_step_mismatch_warns(trainer, state, mesh, tmp_path,
+                                         capsys):
+    params, ostate, _ = state
+    odir = str(tmp_path / "opt")
+    checkpoint.save(odir, 5, ostate)
+    got = _restore_opt(trainer, params, odir, 7, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "WARNING: no optimizer checkpoint for this step" in out
+    assert_tree_equal(got, trainer.opt_init(params))
+
+
+def test_restore_codec_step_mismatch_warns(trainer, state, mesh, tmp_path,
+                                           capsys):
+    cdir = str(tmp_path / "codec")
+    checkpoint.save(cdir, 5, state[2])
+    got = _restore_codec(trainer, cdir, 7, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "WARNING: no codec-state checkpoint for this step" in out
+    assert_tree_equal(got, trainer.init_codec_state())
+
+
+# ---- changed-topology fallbacks -------------------------------------------
+
+def _other_trainer(mesh):
+    """Same family, different widths: the saved state cannot reshape."""
+    cfg = CFG.replace(d_model=128, d_ff=256)
+    return Trainer(Model(cfg, MeshInfo.from_mesh(mesh)), mesh, scheme=EF)
+
+
+def test_restore_opt_changed_topology_warns(trainer, state, mesh, tmp_path,
+                                            capsys):
+    params, _, _ = state
+    other = _other_trainer(mesh)
+    op, oo, _ = other.init_all(jax.random.key(1))
+    odir = str(tmp_path / "opt")
+    checkpoint.save(odir, 4, oo)
+    got = _restore_opt(trainer, params, odir, 4, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "WARNING: optimizer state not portable to this topology" in out
+    assert_tree_equal(got, trainer.opt_init(params))
+
+
+def test_restore_codec_changed_topology_warns(trainer, mesh, tmp_path,
+                                              capsys):
+    other = _other_trainer(mesh)
+    _, _, oc = other.init_all(jax.random.key(1))
+    cdir = str(tmp_path / "codec")
+    checkpoint.save(cdir, 4, oc)
+    got = _restore_codec(trainer, cdir, 4, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "WARNING: codec state not portable to this topology" in out
+    assert_tree_equal(got, trainer.init_codec_state())
+
+
+# ---- happy paths stay quiet ------------------------------------------------
+
+def test_restore_opt_happy_path(trainer, state, mesh, tmp_path, capsys):
+    params, ostate, _ = state
+    odir = str(tmp_path / "opt")
+    checkpoint.save(odir, 9, ostate)
+    got = _restore_opt(trainer, params, odir, 9, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "restored optimizer state at step 9" in out
+    assert "WARNING" not in out
+    assert_tree_equal(got, ostate)
+
+
+def test_restore_codec_happy_path(trainer, state, mesh, tmp_path, capsys):
+    cstate = state[2]
+    cdir = str(tmp_path / "codec")
+    checkpoint.save(cdir, 9, cstate)
+    got = _restore_codec(trainer, cdir, 9, mesh, checkpoint)
+    out = capsys.readouterr().out
+    assert "restored codec state at step 9" in out
+    assert "WARNING" not in out
+    assert_tree_equal(got, cstate)

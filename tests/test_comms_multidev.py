@@ -84,6 +84,29 @@ def test_fused_ring_matches_threepass():
 
 @pytest.mark.slow
 @pytest.mark.multidev
+def test_cp_ring_attention():
+    """Context parallelism: ring attention on the cp mesh axis matches
+    full attention within fp tolerance (zigzag sharding, causal/window/
+    k_valid), cp=2 training matches cp=1, and the ring-KV hops land in
+    the cp ledger dimension with compressed inter-node bytes below the
+    uncompressed baseline."""
+    out = run_script("cp_check.py", timeout=1800)
+    assert "ring == full attention" in out
+    assert "CP RING OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_seeded_runs_bit_deterministic():
+    """Two identical seeded Trainer runs with stateful codecs (ef:bq4,
+    plr8 on the DP grad sync) produce bit-identical losses and carried
+    codec state over 5 steps."""
+    out = run_script("det_check.py", timeout=1800)
+    assert "DETERMINISM OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
 def test_codec_state_ef_and_lowrank():
     """Carried codec state: ef:bq4 DP-grad training with bit-exact
     checkpoint round-trip of the residual, load-bearing-state divergence

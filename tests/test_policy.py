@@ -14,8 +14,8 @@ from repro.models.params import MeshInfo
 
 
 def _all_queries():
-    """The full (dim, direction, level) query space — the legacy 24-field
-    Scheme space exactly."""
+    """The full (dim, direction, level) query space — the flat Scheme
+    field space exactly (30 triples with the ``cp`` dimension)."""
     out = []
     for dim in policy.DIMS:
         dirs = policy.DIRECTIONS if dim in policy.DIRECTED_DIMS else (None,)
@@ -289,9 +289,9 @@ def test_use_plan_context_nesting_and_fallback():
 
 def test_compile_walks_full_query_space():
     """compile() touches every (dim, direction, level) triple, so each
-    plan's static table carries exactly the legacy 24-field space."""
+    plan's static table carries exactly the full query space."""
     plan = policy.compile_plan("hier_tpp_8_16")
     assert set(plan._table) == set(_all_queries())
-    assert len(plan._table) == 24
+    assert len(plan._table) == 30
     for c in plan._table.values():
         assert isinstance(c, codecs.Codec)

@@ -1,0 +1,106 @@
+"""Unit tests for ``comms._ring_schedule`` — the single source of truth
+for the compressed reduce-scatter's sub-ring row partition, shared by the
+executing rings and the ledger's ``ring`` fact.
+
+Pure-function properties: the partition conserves and never overlaps
+rows, stays 8-row tile aligned, splits bidirectionally only when both
+halves keep tile alignment (a visible ``fallback=True`` otherwise), and
+stripes each directional segment into the requested number of
+tile-aligned chunks with the remainder spread over the leading chunks.
+``m`` is always tile-padded by the callers (``ops.padded_rows``), so
+every test input is a multiple of ``_RING_TILE``.
+"""
+
+import pytest
+
+from repro.core import comms
+from repro.core.comms import _RING_TILE, _ring_schedule
+
+
+def _check_partition(sched, m):
+    """Rows conserved, disjoint, ordered, tile-aligned."""
+    at = 0
+    for lo, hi, d in sched.parts:
+        assert lo == at, (sched.parts, m)
+        assert hi > lo
+        assert lo % _RING_TILE == 0 and hi % _RING_TILE == 0
+        assert d in (+1, -1)
+        at = hi
+    assert at == m
+    assert sched.rows == m
+
+
+@pytest.mark.parametrize("m", [8, 16, 24, 64, 128, 1000 * _RING_TILE])
+@pytest.mark.parametrize("bidir", [False, True])
+@pytest.mark.parametrize("chunks", [1, 2, 3, 7])
+def test_partition_invariants(m, bidir, chunks):
+    sched = _ring_schedule(m, bidir=bidir, chunks=chunks)
+    _check_partition(sched, m)
+    # realized settings never exceed what was asked for
+    assert sched.chunks <= max(1, chunks)
+    if not bidir:
+        assert not sched.bidir and not sched.fallback
+        assert all(d == +1 for _, _, d in sched.parts)
+
+
+def test_unidirectional_single_ring():
+    sched = _ring_schedule(64, bidir=False, chunks=1)
+    assert sched == comms.RingSchedule(((0, 64, +1),), 64, False, False, 1)
+
+
+def test_bidir_split_halves_rows():
+    sched = _ring_schedule(32, bidir=True, chunks=1)
+    assert sched.bidir and not sched.fallback
+    assert sched.parts == ((0, 16, +1), (16, 32, -1))
+
+
+def test_bidir_half_rounds_down_to_tile():
+    # m=24: half = (24//2)//8*8 = 8 -> CW ring gets 8 rows, CCW the rest
+    sched = _ring_schedule(24, bidir=True, chunks=1)
+    assert sched.bidir
+    assert sched.parts == ((0, 8, +1), (8, 24, -1))
+
+
+def test_bidir_fallback_below_tile_floor_is_visible():
+    # one tile of rows cannot split into two tile-aligned halves: the
+    # schedule falls back to unidirectional and SAYS so
+    sched = _ring_schedule(8, bidir=True, chunks=1)
+    assert not sched.bidir
+    assert sched.fallback
+    assert sched.parts == ((0, 8, +1),)
+    _check_partition(sched, 8)
+    # smallest m where the split is legal: both halves >= one tile
+    ok = _ring_schedule(2 * _RING_TILE, bidir=True, chunks=1)
+    assert ok.bidir and not ok.fallback
+
+
+def test_chunk_striping_spreads_remainder():
+    # 5 tiles over 3 chunks: divmod(5,3) = (1,2) -> 2+2+1 tiles
+    sched = _ring_schedule(40, bidir=False, chunks=3)
+    assert sched.chunks == 3
+    assert sched.parts == ((0, 16, +1), (16, 32, +1), (32, 40, +1))
+
+
+def test_chunks_clamped_to_tile_count():
+    # one tile cannot stripe into 4 chunks; realized count is honest
+    sched = _ring_schedule(8, bidir=False, chunks=4)
+    assert sched.chunks == 1
+    assert sched.parts == ((0, 8, +1),)
+
+
+def test_bidir_with_chunks_stripes_each_direction():
+    # half=24: each direction has 3 tiles striped 2+1 per divmod(3,2)
+    sched = _ring_schedule(48, bidir=True, chunks=2)
+    assert sched.bidir and sched.chunks == 2
+    assert sched.parts == ((0, 16, +1), (16, 24, +1),
+                           (24, 40, -1), (40, 48, -1))
+    _check_partition(sched, 48)
+
+
+def test_defaults_come_from_ring_options_thread_locals():
+    # no explicit args: the trace-time ring_options levers are the source
+    assert _ring_schedule(32) == _ring_schedule(32, bidir=False, chunks=1)
+    with comms.ring_options(bidir=True, chunks=2):
+        assert _ring_schedule(32) == _ring_schedule(32, bidir=True, chunks=2)
+    # and they pop back off afterwards
+    assert _ring_schedule(32).bidir is False

@@ -86,7 +86,8 @@ _BARE_FLAG_RE = re.compile(r"(?<![\w`=-])(--[a-zA-Z][a-zA-Z0-9_-]*)")
 # third-party commands (pip, pytest, git...) carry their own flags
 _OWN_CMD_RE = re.compile(r"repro\.|benchmarks[/.]|tools/|examples/")
 # documented third-party flags that are fine in inline code spans
-_EXEMPT_FLAGS = {"--xla_force_host_platform_device_count"}
+# (pytest's --durations shows the slowest tests in the CI tier-1 run)
+_EXEMPT_FLAGS = {"--xla_force_host_platform_device_count", "--durations"}
 
 
 def _flag_exempt(flag: str) -> bool:
@@ -134,7 +135,7 @@ def check_flags(src: pathlib.Path, text: str, known: set[str]) -> list[str]:
 # direction/level suffixes.  Deliberately narrow — bench row names like
 # `tp_allreduce` or scheme names like `hier_zpp_8_16` never match.
 _SCHEME_FIELD_RE = re.compile(
-    r"\b(?:dp|zero|tp|pp|ep)(?:_(?:fwd|bwd|inner|outer))+\b")
+    r"\b(?:dp|zero|tp|pp|ep|cp)(?:_(?:fwd|bwd|inner|outer))+\b")
 _FIELD_DECL_RE = re.compile(r"^    (\w+): str(?:\s*\|\s*None)? =",
                             re.MULTILINE)
 
