@@ -14,7 +14,13 @@ host mesh and times them:
                                 bit-identical results);
   * ``train_step_*``            a full jitted compressed train step
                                 (gemma3-1b reduced, zhybrid_24_8), fused
-                                vs three-pass.
+                                vs three-pass;
+  * ``pipelined_step_vpp*``     a full jitted 1F1B pipeline step on a
+                                (data=2, stage=2, model=2) mesh at the
+                                same (pp, n_micro), plain (vpp=1) vs
+                                interleaved virtual stages (vpp=2) —
+                                with the analytic roofline bubble of each
+                                schedule committed next to the wall time.
 
 Timing protocol: compile + warm once, then best-of-``REPS`` mean over
 ``ITERS`` back-to-back calls with a trailing ``block_until_ready`` —
@@ -169,6 +175,55 @@ def _train_step_us(scheme: str) -> float:
     return statistics.median(times[TRAIN_WARMUP:]) * 1e6
 
 
+# n_micro = pp keeps the two schedules' bubbles far apart (1/3 vs 1/5)
+# so the wall-time ordering is outside host-timing noise
+PIPE_PP, PIPE_MICRO, PIPE_STEPS = 2, 2, 5
+
+
+def _pipelined_step_us(vpp: int) -> float:
+    """Median wall time of a jitted 1F1B pipeline step (qwen2-72b reduced
+    deepened to 8 uniform layers, (data=2, stage=2, model=2) mesh,
+    pp=PIPE_PP, n_micro=PIPE_MICRO) after warmup.  ``vpp=2`` runs the
+    interleaved virtual-stage schedule — more, shorter ticks over the
+    same per-rank depth."""
+    import statistics
+
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro import configs
+    from repro.core import compat
+    from repro.data.pipeline import DataConfig, SyntheticCorpus
+    from repro.models.model import Model
+    from repro.models.params import MeshInfo
+    from repro.train.optimizer import AdamConfig
+    from repro.train.pipeline import PipelineTrainer
+    from repro.train.train_step import batch_specs
+
+    cfg = configs.get("qwen2-72b").reduced().replace(
+        n_layers=8, groups=(), vocab_size=64)
+    data = SyntheticCorpus(DataConfig(vocab_size=64, seq_len=32,
+                                      global_batch=8))
+    mesh = compat.make_mesh((2, 2, 2), ("data", "stage", "model"))
+    mi = MeshInfo.from_mesh(mesh)
+    model = Model(cfg, mi, vpp=vpp)
+    tr = PipelineTrainer(model, mesh, scheme="zhybrid_24_8",
+                         opt_cfg=AdamConfig(warmup=5), n_micro=PIPE_MICRO)
+    params, ostate, cstate = tr.init_all(jax.random.key(0))
+    bspecs = batch_specs(cfg, mi)
+    times = []
+    for s in range(TRAIN_WARMUP + PIPE_STEPS):
+        batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+                 for k, v in data.batch(s).items()}
+        jax.block_until_ready(batch)
+        t0 = time.perf_counter()
+        params, ostate, cstate, m = tr.step(params, ostate, cstate, batch)
+        jax.block_until_ready(m)
+        times.append(time.perf_counter() - t0)
+    jax.clear_caches()
+    return statistics.median(times[TRAIN_WARMUP:]) * 1e6
+
+
 def measure() -> dict:
     """All timed rows, fused and three-pass, in microseconds."""
     import jax
@@ -184,6 +239,13 @@ def measure() -> dict:
     with threepass_codecs():
         rows["train_step_zhybrid_24_8_threepass_us"] = \
             _train_step_us("zhybrid_24_8")
+    from repro.analysis.roofline import bubble_fraction
+    for vpp in (1, 2):
+        rows[f"pipelined_step_vpp{vpp}_us"] = _pipelined_step_us(vpp)
+        # analytic (deterministic) roofline bubble of the realized
+        # schedule, committed next to the wall time it explains
+        rows[f"pipelined_bubble_vpp{vpp}"] = \
+            bubble_fraction(PIPE_PP, PIPE_MICRO, vpp)
     return {"schema": SCHEMA, "device_count": jax.device_count(),
             "backend": jax.default_backend(), "reps": REPS, "iters": ITERS,
             "rows": {k: round(v, 1) for k, v in rows.items()}}
@@ -199,7 +261,10 @@ def check_against(baseline: dict, current: dict,
       this benchmark exists to catch);
     * each row must stay under ``abs_slack`` x its committed baseline —
       a loose absolute guard for gross blowups (recompilation per call,
-      lost overlap), generous because CI hardware varies.
+      lost overlap), generous because CI hardware varies;
+    * the interleaved schedule must keep its point: the vpp=2 roofline
+      bubble strictly below vpp=1 at the same (pp, n_micro), and the
+      vpp=2 wall time within ``ratio_slack`` of vpp=1.
     """
     errs = []
     if baseline.get("schema") != SCHEMA:
@@ -218,6 +283,16 @@ def check_against(baseline: dict, current: dict,
         if k in base and rows[k] > base[k] * abs_slack:
             errs.append(f"{k}: {rows[k]:.0f}us > {abs_slack}x baseline "
                         f"{base[k]:.0f}us")
+    b1, b2 = rows.get("pipelined_bubble_vpp1"), \
+        rows.get("pipelined_bubble_vpp2")
+    if b1 is not None and b2 is not None and not b2 < b1:
+        errs.append(f"pipelined_bubble_vpp2 {b2:.4f} not strictly below "
+                    f"vpp1 {b1:.4f}")
+    t1, t2 = rows.get("pipelined_step_vpp1_us"), \
+        rows.get("pipelined_step_vpp2_us")
+    if t1 and t2 and t2 > t1 * ratio_slack:
+        errs.append(f"pipelined_step_vpp2 {t2:.0f}us > {ratio_slack}x "
+                    f"vpp1 {t1:.0f}us")
     return errs
 
 
@@ -232,7 +307,9 @@ def run():
             three = r.get(k.replace("_fused_", "_threepass_"))
             if three:
                 note = f"fused_vs_threepass={us / three:.3f}"
-        rows.append((k[:-3], us, note))
+        if k == "pipelined_step_vpp2_us" and r.get("pipelined_step_vpp1_us"):
+            note = f"vpp2_vs_vpp1={us / r['pipelined_step_vpp1_us']:.3f}"
+        rows.append((k[:-3] if k.endswith("_us") else k, us, note))
     return rows
 
 

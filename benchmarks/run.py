@@ -46,7 +46,17 @@ def main() -> None:
                          "recorded dry-run train step on a node-factored "
                          "mesh) instead of a synthetic two-level "
                          "all-reduce")
+    ap.add_argument("--remat-tradeoff", metavar="ARCH",
+                    help="print the pipeline activation-policy table for "
+                         "this arch: per (pp, vpp, n_micro) point, the "
+                         "tick-scan stash bytes with/without remat, the "
+                         "remat FLOP-seconds paid, and the interleaved "
+                         "bubble — the terms --remat-policy / --vpp trade "
+                         "against the stage-handoff seconds")
     args = ap.parse_args()
+    if args.remat_tradeoff is not None:
+        _remat_tradeoff(args.remat_tradeoff)
+        return
     if args.suggest is not None:
         events = _ledger_events(args.from_ledger) if args.from_ledger \
             else None
@@ -99,6 +109,32 @@ def _ledger_events(arch: str) -> list:
                            binputs)
     jax.clear_caches()
     return events
+
+
+def _remat_tradeoff(arch: str) -> None:
+    """roofline.remat_tradeoff over the arch's FULL (non-reduced) shape:
+    a deterministic table ranking "remat the stash away" against the
+    schedule/bubble terms, per (pp, vpp, n_micro) point."""
+    from repro import configs
+    from repro.analysis import roofline as rl
+    cfg = configs.get(arch)
+    tokens = 8 * 4096 // 8                  # B=8, S=4096, n_micro=8 slice
+    print("pp,vpp,n_micro,ticks,bubble,stash_gb,stash_remat_gb,"
+          "remat_extra_s")
+    for pp in (4, 8):
+        if cfg.n_layers % pp:
+            continue
+        for vpp in (1, 2, 4):
+            if (cfg.n_layers // pp) % vpp:
+                continue
+            for n_micro in (pp, 4 * pp):
+                r = rl.remat_tradeoff(cfg.d_model, tokens,
+                                      cfg.n_layers // pp, n_micro, pp, vpp)
+                print(f"{pp},{vpp},{n_micro},{r['ticks']},"
+                      f"{r['bubble_fraction']:.4f},"
+                      f"{r['stash_bytes'] / 1e9:.3f},"
+                      f"{r['stash_bytes_remat'] / 1e9:.3f},"
+                      f"{r['remat_extra_seconds']:.4f}")
 
 
 def _suggest(pairs, events=None) -> None:

@@ -234,15 +234,31 @@ def collective_seconds(events, train: bool, slow_axes=(),
 # pipeline-parallel terms: stage-handoff pricing + the 1F1B bubble
 # --------------------------------------------------------------------------
 
-def bubble_fraction(pp: int, n_micro: int) -> float:
-    """Idle fraction of the GPipe/1F1B schedule: (pp-1)/(n_micro+pp-1).
+def pipeline_ticks(pp: int, n_micro: int, vpp: int = 1) -> int:
+    """Tick count of the realized schedule — the single source of truth
+    shared with the scan in :mod:`repro.train.pipeline`.
 
-    Each step runs ``n_micro + pp - 1`` ticks of which ``pp - 1`` are
-    fill/drain — per-device useful occupancy is ``n_micro / T``."""
+    Plain 1F1B runs ``n_micro + pp - 1`` ticks; the interleaved
+    virtual-stage schedule runs every microbatch through ``vpp`` slices
+    per rank: ``n_micro * vpp + pp - 1`` ticks, each tick doing ``1/vpp``
+    of a rank's depth."""
+    if pp <= 1:
+        return max(n_micro, 1)
+    assert n_micro >= 1 and vpp >= 1
+    return n_micro * vpp + pp - 1
+
+
+def bubble_fraction(pp: int, n_micro: int, vpp: int = 1) -> float:
+    """Idle fraction of the (interleaved) 1F1B schedule:
+    ``(pp-1) / pipeline_ticks(pp, n_micro, vpp)``.
+
+    Each step runs ``n_micro * vpp + pp - 1`` ticks of which ``pp - 1``
+    are fill/drain — ticks shrink by ``vpp`` (one virtual slice each), so
+    the idle *time* fraction drops ~``1/vpp`` at fixed ``pp``:
+    ``bubble(pp=4, M=4, vpp=2) = 3/11`` vs ``3/7`` plain."""
     if pp <= 1:
         return 0.0
-    assert n_micro >= 1
-    return (pp - 1) / (n_micro + pp - 1)
+    return (pp - 1) / pipeline_ticks(pp, n_micro, vpp)
 
 
 def stage_handoff_seconds(events, train: bool, slow_axes=(),
@@ -251,15 +267,84 @@ def stage_handoff_seconds(events, train: bool, slow_axes=(),
     """Collective time of the ``pp``-dimension events alone — the stage
     handoffs of the pipeline schedule, priced on fast vs slow links (an
     "outer"-level event, or a flat handoff over an axis in ``slow_axes``,
-    crosses nodes and rides DCN)."""
+    crosses nodes and rides DCN).  The interleaved schedule needs no
+    special casing here: its handoff events are recorded under the larger
+    tick multiplier (``x vpp``, each carrying a ``vpp`` fact), so the
+    count-x-bytes pricing already reflects the multiplied handoffs."""
     pp_ev = [ev for ev in events if tag_dim(ev["tag"]) == "pp"]
     return collective_seconds(pp_ev, train, slow_axes, ici_bw, dcn_bw)
 
 
-def pipelined_step_time(base_step_s: float, pp: int, n_micro: int) -> float:
+def pipelined_step_time(base_step_s: float, pp: int, n_micro: int,
+                        vpp: int = 1) -> float:
     """Roofline step time with the schedule bubble: per-device work is
     unchanged but the pipe is busy only ``1 - bubble`` of the ticks."""
-    return base_step_s / max(1.0 - bubble_fraction(pp, n_micro), 1e-9)
+    return base_step_s / max(1.0 - bubble_fraction(pp, n_micro, vpp), 1e-9)
+
+
+# --------------------------------------------------------------------------
+# activation memory: the tick-scan stash, and the remat <-> handoff trade
+# --------------------------------------------------------------------------
+
+def activation_stash_bytes(d_model: int, tokens_per_micro: int,
+                           layers_per_rank: int, n_micro: int, pp: int,
+                           vpp: int = 1, remat: bool = False,
+                           bytes_per_value: int = 2,
+                           saved_per_layer: float = 8.0) -> float:
+    """Peak per-rank activation stash of the tick scan, in bytes.
+
+    Autodiff through the scan saves residuals for every tick:
+    ``T = pipeline_ticks(...)`` ticks, each holding the carry activation
+    (``tokens_per_micro * d_model``) plus the layers that ran that tick
+    (``layers_per_rank / vpp`` — one virtual slice) at
+    ``saved_per_layer`` activations-per-layer-per-token (attn qkv/probs +
+    mlp hidden, ~8 x d_model for a standard block).  ``remat=True``
+    models ``jax.checkpoint`` around the stage body: only the carry
+    survives per tick, the per-layer residuals are recomputed in
+    backward."""
+    t = pipeline_ticks(pp, n_micro, vpp)
+    carry = tokens_per_micro * d_model * bytes_per_value
+    if remat:
+        return float(t * carry)
+    per_tick_layers = layers_per_rank / max(vpp, 1)
+    layer = tokens_per_micro * d_model * saved_per_layer * bytes_per_value
+    return float(t * (carry + per_tick_layers * layer))
+
+
+def remat_tradeoff(d_model: int, tokens_per_micro: int,
+                   layers_per_rank: int, n_micro: int, pp: int,
+                   vpp: int = 1, bytes_per_value: int = 2,
+                   peak_flops: float = PEAK_FLOPS,
+                   handoff_s: float = 0.0) -> dict:
+    """Price the per-stage remat policy: bytes saved vs FLOP-seconds paid.
+
+    Remat re-runs each stage body's forward once during backward — extra
+    FLOPs ~= the forward pass of the rank's layers over all microbatches
+    (``6 * d_model^2 * saved tokens``-class matmuls; we use the standard
+    ``12 * tokens * d_model^2`` per-layer forward estimate with the
+    ``d_ff = 4 d_model`` block shape baked into the factor).  Returned
+    next to the stage-handoff seconds so ``--suggest``-style tooling can
+    rank "remat the stash away" against "compress the handoffs harder" —
+    the two knobs compete for the same step-time budget."""
+    stash = activation_stash_bytes(d_model, tokens_per_micro,
+                                   layers_per_rank, n_micro, pp, vpp,
+                                   remat=False,
+                                   bytes_per_value=bytes_per_value)
+    stash_remat = activation_stash_bytes(d_model, tokens_per_micro,
+                                         layers_per_rank, n_micro, pp, vpp,
+                                         remat=True,
+                                         bytes_per_value=bytes_per_value)
+    fwd_flops_per_layer = 12.0 * tokens_per_micro * d_model * d_model
+    extra_s = n_micro * layers_per_rank * fwd_flops_per_layer / peak_flops
+    return {
+        "ticks": pipeline_ticks(pp, n_micro, vpp),
+        "bubble_fraction": bubble_fraction(pp, n_micro, vpp),
+        "stash_bytes": stash,
+        "stash_bytes_remat": stash_remat,
+        "bytes_saved": stash - stash_remat,
+        "remat_extra_seconds": extra_s,
+        "stage_handoff_seconds": handoff_s,
+    }
 
 
 # --------------------------------------------------------------------------

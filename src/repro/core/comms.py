@@ -153,6 +153,52 @@ class scope_mult:
         return False
 
 
+class scope_facts:
+    """Attach extra key/value facts to every ledger event traced inside.
+
+    The pipeline trainer wraps its tick scan in ``scope_facts(vpp=V)`` so
+    each handoff event records which interleaved schedule produced it —
+    the roofline re-derives bubble / handoff terms from the fact instead
+    of guessing the schedule from the event counts.  Facts merge into both
+    the analytic events (:func:`_account`) and the measured wire events
+    (:func:`_log`); inner scopes shadow outer keys."""
+
+    def __init__(self, **facts):
+        self.facts = facts
+
+    def __enter__(self):
+        self.prev = getattr(_rec, "facts", None)
+        _rec.facts = {**(self.prev or {}), **self.facts}
+        return self
+
+    def __exit__(self, *exc):
+        if self.prev is None:
+            del _rec.facts
+        else:
+            _rec.facts = self.prev
+        return False
+
+
+class mute_ledger:
+    """Temporarily detach the event log (events traced inside are dropped).
+
+    Used where one logical collective is traced more than once — e.g.
+    ``lax.cond`` over a rematerialized vs plain stage body traces both
+    branches, but only one runs per tick; accounting both would double the
+    ledger."""
+
+    def __enter__(self):
+        self.events = getattr(_rec, "events", None)
+        if self.events is not None:
+            del _rec.events
+        return self
+
+    def __exit__(self, *exc):
+        if self.events is not None:
+            _rec.events = self.events
+        return False
+
+
 def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None, level="flat",
              elems=None, nbytes=None):
     """Append one ledger event.
@@ -187,6 +233,7 @@ def _account(op, tag, x, axis, c_fwd, c_bwd, bwd_op=None, level="flat",
         bwd_op=bwd_op, mult=int(getattr(_rec, "mult", 1)),
         remat=bool(getattr(_rec, "remat", False)),
         bidir=_bidir(), level=level)
+    ev.update(getattr(_rec, "facts", None) or {})
     # ring facts: the hop schedule a compressed lowering of this event
     # would run (codec-independent — recost re-prices the same event under
     # candidate codecs in either direction, so the facts must not depend
@@ -212,9 +259,11 @@ def _log(op, tag, codec, payload_bytes, hops, **facts):
         return
     if not tag or tag == "-":
         tag = getattr(_rec, "wire_tag", "-")
+    scoped = getattr(_rec, "facts", None) or {}
     events.wire.append(dict(
         op=op, tag=tag, codec=codec.name, payload_bytes=int(payload_bytes),
-        hops=int(hops), mult=int(getattr(_rec, "mult", 1)), **facts))
+        hops=int(hops), mult=int(getattr(_rec, "mult", 1)),
+        **{**scoped, **facts}))
 
 
 class _wire_site:
@@ -911,6 +960,25 @@ def stage_send(x, axis, tag="pp"):
     if n == 1:
         return jnp.zeros_like(x)
     return ppermute(x, axis, [(s, s + 1) for s in range(n - 1)], tag)
+
+
+def stage_ring_send(x, axis, tag="pp"):
+    """Wraparound stage handoff for the interleaved (vpp > 1) schedule:
+    stage ``s`` sends ``x`` to stage ``(s + 1) % pp``.
+
+    Under round-robin virtual stages the chunk after the last rank's
+    slice ``v`` is the FIRST rank's slice ``v + 1`` — the activation must
+    wrap, so this is a full ring rather than :func:`stage_send`'s partial
+    shift.  Stage 0 consumes the wrapped value only when its live virtual
+    stage has ``v > 0`` (otherwise its input is the embedded microbatch),
+    and the last stage's final-slice output drains into the head instead
+    of the ring — both maskings live in the tick schedule, not here.
+    Same ``pp_fwd`` / ``pp_bwd`` codec routing and :class:`AxisPair`
+    hierarchy handling as :func:`stage_send`."""
+    n = int(axis_size(axis))
+    if n == 1:
+        return x
+    return ppermute(x, axis, [(s, (s + 1) % n) for s in range(n)], tag)
 
 
 def stage_recv(x, axis, tag="pp"):

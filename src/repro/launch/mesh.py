@@ -208,3 +208,22 @@ def parse_nodes_spec(spec: str | int, ways: int, flag: str = "--nodes") -> int:
     assert nodes >= 1 and ways % nodes == 0, \
         f"{flag} {nodes} must divide {ways}"
     return nodes
+
+
+def validate_vpp(vpp: int, pp: int, n_micro: int) -> int:
+    """--vpp sanity against the mesh/schedule knobs it composes with.
+
+    ``vpp`` is NOT a mesh axis — the ``V`` round-robin depth slices of a
+    stage rank live on a leading (replicated) param dim and the tick scan
+    routes between them in time, so the mesh stays ``(... stage ...)``
+    regardless of ``--vpp``.  It still constrains the other knobs: the
+    interleaved schedule needs a real stage axis and walks microbatches
+    in groups of ``pp``."""
+    assert vpp >= 1, f"--vpp {vpp} must be >= 1"
+    if vpp > 1:
+        assert pp > 1, f"--vpp {vpp} needs --pp > 1 (no stage axis to " \
+            "interleave on)"
+        assert n_micro % pp == 0, \
+            f"--vpp {vpp} needs --microbatches divisible by --pp " \
+            f"(got {n_micro} over pp={pp})"
+    return vpp

@@ -111,6 +111,11 @@ def main():
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true",
                     help="family-preserving smoke-size config")
+    ap.add_argument("--layers", type=int, default=0,
+                    help="override the config's layer count (resets "
+                         "heterogeneous layer groups to uniform); e.g. "
+                         "--reduced keeps 2 layers, but --pp 2 --vpp 2 "
+                         "needs pp x vpp = 4")
     ap.add_argument("--dp", type=int, default=1)
     ap.add_argument("--tp", type=int, default=1)
     ap.add_argument("--pp", type=int, default=1,
@@ -143,6 +148,17 @@ def main():
                     help="split the per-rank batch into N microbatches "
                          "(1F1B schedule on a stage mesh, plain gradient "
                          "accumulation otherwise)")
+    ap.add_argument("--vpp", type=int, default=1,
+                    help="interleaved virtual pipeline stages: each stage "
+                         "rank holds V round-robin depth slices, cutting "
+                         "the 1F1B bubble ~1/V at fixed --pp (needs "
+                         "--pp > 1 and --microbatches divisible by --pp)")
+    ap.add_argument("--remat-policy", default="none",
+                    help="activation memory policy for the pipeline tick "
+                         "scan: none | full | per_stage:<v,v,...> "
+                         "(jax.checkpoint per virtual-stage body), with "
+                         "an optional +offload suffix parking matmul "
+                         "residuals in pinned host memory")
     ap.add_argument("--host-devices", type=int, default=0,
                     help="force N XLA host devices (set before jax init)")
     ap.add_argument("--steps", type=int, default=20)
@@ -202,7 +218,7 @@ def main():
 
     from repro import configs
     from repro.data.pipeline import DataConfig, SyntheticCorpus
-    from repro.launch.mesh import make_mesh, parse_nodes_spec
+    from repro.launch.mesh import make_mesh, parse_nodes_spec, validate_vpp
     from repro.models.model import Model
     from repro.models.params import MeshInfo
     from repro.train import checkpoint, fault
@@ -213,6 +229,8 @@ def main():
     cfg = configs.get(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
+    if args.layers:
+        cfg = cfg.replace(n_layers=args.layers, groups=())
     nodes = parse_nodes_spec(args.nodes, args.dp)
     tp_nodes = parse_nodes_spec(args.tp_nodes, args.tp, flag="--tp-nodes")
     pp_nodes = parse_nodes_spec(args.pp_nodes, args.pp, flag="--pp-nodes")
@@ -221,7 +239,8 @@ def main():
                      tp_nodes=tp_nodes, pp=args.pp, pp_nodes=pp_nodes,
                      cp=args.cp, cp_nodes=cp_nodes)
     mi = MeshInfo.from_mesh(mesh)
-    model = Model(cfg, mi)
+    validate_vpp(args.vpp, args.pp, args.microbatches)
+    model = Model(cfg, mi, vpp=args.vpp)
 
     # the named scheme is sugar over rules (the adapter path); the policy
     # flags prepend override rules, first-match-wins
@@ -256,7 +275,8 @@ def main():
                                               grad_buckets=args.grad_buckets),
                            n_micro=args.microbatches,
                            ring_bidir=args.ring_bidir,
-                           ring_chunks=args.ring_chunks)
+                           ring_chunks=args.ring_chunks,
+                           remat_policy=args.remat_policy)
     data = SyntheticCorpus(DataConfig(
         vocab_size=cfg.vocab_size, seq_len=args.seq,
         global_batch=args.global_batch, seed=args.seed))

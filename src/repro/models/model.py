@@ -21,15 +21,19 @@ _LB_COEF = 0.01  # MoE load-balance aux weight
 
 
 class Model:
-    def __init__(self, cfg: ArchConfig, mi: MeshInfo):
+    def __init__(self, cfg: ArchConfig, mi: MeshInfo, vpp: int = 1):
+        assert vpp == 1 or mi.pp > 1, \
+            "vpp > 1 (interleaved virtual stages) needs a stage mesh"
         self.cfg = cfg
         self.mi = mi
+        self.vpp = vpp
         self.mode = cfg.attn_mode_for(mi.tp)
-        # pp > 1: the plan's layer groups describe ONE stage (stage-stacked
-        # leading dim); the pipeline trainer drives them via run_stage.
-        self.stage_groups = transformer.stage_partition(cfg, mi.pp) \
+        # pp > 1: the plan's layer groups describe ONE stage chunk
+        # (stage-stacked leading dim, (vpp, pp)-stacked when vpp > 1); the
+        # pipeline trainer drives them via run_stage.
+        self.stage_groups = transformer.stage_partition(cfg, mi.pp, vpp) \
             if mi.pp > 1 else None
-        self.plan = transformer.model_plan(cfg, mi)
+        self.plan = transformer.model_plan(cfg, mi, vpp)
 
     # -- params ----------------------------------------------------------
     def init(self, key):
@@ -112,18 +116,20 @@ class Model:
         return x, caches, aux_tot
 
     # -- pipeline-parallel stage body ------------------------------------
-    def run_stage(self, params, x, pos, phase="train"):
+    def run_stage(self, params, x, pos, phase="train", v=None):
         """This stage rank's layer stack on ``x`` (inside shard_map).
 
         Only valid when ``mi.pp > 1``: ``params["groups"]`` carry a local
-        leading stage dim of 1, sliced off here.  Returns ``(x, aux)``;
-        embedding / head stay with the caller (the 1F1B schedule in
+        leading stage dim of 1, sliced off here.  ``v`` (interleaved
+        layout only, may be traced) selects which of the rank's ``vpp``
+        round-robin slices runs.  Returns ``(x, aux)``; embedding / head
+        stay with the caller (the 1F1B schedule in
         :mod:`repro.train.pipeline` injects / drains them on the first /
         last stage)."""
         cfg, mi = self.cfg, self.mi
         aux_tot = transformer._zero_aux()
         for i, g in enumerate(self.stage_groups):
-            gp = transformer.take_stage(params["groups"][i])
+            gp = transformer.take_stage(params["groups"][i], v)
             x, _, aux = transformer.run_group(gp, x, g, cfg, mi, self.mode,
                                               pos, phase)
             aux_tot = jax.tree.map(lambda a, b: a + b, aux_tot, aux)

@@ -62,10 +62,22 @@ def _stack(plan, n: int):
                                       spec=(None,) + d.spec), plan)
 
 
-def _stage_stack(plan, pp: int):
+def _stage_stack(plan, pp: int, vpp: int = 1):
     """Prepend a leading stage dim sharded over the stage mesh axis, so
     each stage rank materializes (inits, checkpoints, reshards) only its
-    own layers."""
+    own layers.
+
+    ``vpp > 1`` (interleaved virtual stages) prepends ``(vpp, pp)``
+    instead: dim 0 is the rank's round-robin slice index (replicated spec
+    — every rank holds all ``vpp`` of its own slices), dim 1 the stage
+    shard.  The v-major linearization ``v * pp + s`` IS the global chunk
+    order, so flattening the two dims recovers contiguous layer order —
+    the invariant ``checkpoint.stage_reshape`` relies on."""
+    if vpp > 1:
+        return tree_map_defs(
+            lambda d: dataclasses.replace(d, shape=(vpp, pp) + d.shape,
+                                          spec=(None, "stage") + d.spec),
+            plan)
     return tree_map_defs(
         lambda d: dataclasses.replace(d, shape=(pp,) + d.shape,
                                       spec=("stage",) + d.spec), plan)
@@ -78,11 +90,21 @@ def _unstack_pv(tree):
         is_leaf=lambda x: isinstance(x, Pv))
 
 
-def take_stage(tree):
+def take_stage(tree, v=None):
     """Local (inside shard_map) stage-stacked group params ``[1, n, ...]``
-    -> this stage rank's ``[n, ...]`` slice (drop the stage dim + spec)."""
+    -> this stage rank's ``[n, ...]`` slice (drop the stage dim + spec).
+
+    With ``v`` given (interleaved layout, local shape ``[vpp, 1, n, ...]``)
+    the rank's ``v``-th round-robin slice is selected instead; ``v`` may be
+    a traced index (the tick scan picks the live virtual stage per tick)."""
+    if v is None:
+        return jax.tree_util.tree_map(
+            lambda pv: Pv(lax.squeeze(pv.v, (0,)), pv.spec[1:]), tree,
+            is_leaf=lambda x: isinstance(x, Pv))
     return jax.tree_util.tree_map(
-        lambda pv: Pv(lax.squeeze(pv.v, (0,)), pv.spec[1:]), tree,
+        lambda pv: Pv(lax.squeeze(
+            lax.dynamic_index_in_dim(pv.v, v, 0, keepdims=False), (0,)),
+            pv.spec[2:]), tree,
         is_leaf=lambda x: isinstance(x, Pv))
 
 
@@ -92,14 +114,18 @@ def take_stage(tree):
 _PP_UNSUPPORTED = ("enc_attn", "dec_attn", "shared_attn")
 
 
-def stage_partition(cfg: ArchConfig, pp: int) -> tuple:
-    """Partition the layer stack into ``pp`` contiguous, identical stages.
+def stage_partition(cfg: ArchConfig, pp: int, vpp: int = 1) -> tuple:
+    """Partition the layer stack into ``pp * vpp`` contiguous, identical
+    chunks.
 
-    Returns the BlockGroup plan of ONE stage (all stages share it — the
+    Returns the BlockGroup plan of ONE chunk (all chunks share it — the
     SPMD pipeline runs one program with stage-stacked weights, so every
-    stage must execute the same layer sequence).  Raises ValueError when
-    the per-layer (kind, window) sequence does not tile into ``pp`` equal
-    contiguous chunks."""
+    chunk must execute the same layer sequence).  ``vpp > 1`` is the
+    interleaved (round-robin) layout: chunk ``c`` lives on stage rank
+    ``c % pp`` as its ``c // pp``-th virtual slice, so each rank owns
+    ``vpp`` non-adjacent chunks of the depth.  Raises ValueError when the
+    per-layer (kind, window) sequence does not tile into ``pp * vpp``
+    equal contiguous chunks."""
     per_layer = [(g.kind, g.window) for g in cfg.layer_groups
                  for _ in range(g.n)]
     bad = sorted({k for k, _ in per_layer if k in _PP_UNSUPPORTED})
@@ -108,15 +134,18 @@ def stage_partition(cfg: ArchConfig, pp: int) -> tuple:
             f"pipeline stages cannot hold {bad} layers (encoder context / "
             "cross-stage weight sharing)")
     total = len(per_layer)
-    if total % pp:
-        raise ValueError(f"{total} layers do not split into pp={pp} stages")
-    per = total // pp
+    chunks = pp * vpp
+    layout = f"pp={pp} x vpp={vpp} virtual" if vpp > 1 else f"pp={pp}"
+    if total % chunks:
+        raise ValueError(
+            f"{total} layers do not split into {layout} stages")
+    per = total // chunks
     first = per_layer[:per]
-    for s in range(1, pp):
+    for s in range(1, chunks):
         if per_layer[s * per:(s + 1) * per] != first:
             raise ValueError(
-                f"stages are not identical: stage {s} is "
-                f"{per_layer[s * per:(s + 1) * per]}, stage 0 is {first} — "
+                f"stages are not identical ({layout}): chunk {s} is "
+                f"{per_layer[s * per:(s + 1) * per]}, chunk 0 is {first} — "
                 "the SPMD 1F1B schedule needs a uniform per-stage layer "
                 "sequence")
     groups = []
@@ -128,7 +157,20 @@ def stage_partition(cfg: ArchConfig, pp: int) -> tuple:
     return tuple(groups)
 
 
-def model_plan(cfg: ArchConfig, mi: MeshInfo):
+def chunk_layer_ranges(n_layers: int, pp: int, vpp: int = 1) -> dict:
+    """Global layer interval of every ``(stage, v)`` chunk.
+
+    Round-robin layout: chunk ``c = v * pp + s`` covers layers
+    ``[c * Lc, (c + 1) * Lc)`` with ``Lc = n_layers // (pp * vpp)``.
+    Pure bookkeeping used by tests and the checkpoint layout docs."""
+    chunks = pp * vpp
+    assert n_layers % chunks == 0, (n_layers, pp, vpp)
+    lc = n_layers // chunks
+    return {(s, v): ((v * pp + s) * lc, (v * pp + s + 1) * lc)
+            for v in range(vpp) for s in range(pp)}
+
+
+def model_plan(cfg: ArchConfig, mi: MeshInfo, vpp: int = 1):
     mode = cfg.attn_mode_for(mi.tp)
     plan = {"embed": layers.embed_plan(cfg)}
     plan.update(layers.lm_head_plan(cfg))
@@ -137,7 +179,7 @@ def model_plan(cfg: ArchConfig, mi: MeshInfo):
     # the embedding / final norm / head stay stage-replicated — they are
     # *consumed* on the first (embed) and last (head) stage only, and
     # their gradients are psum'd over the stage axis by the optimizer.
-    stage_groups = stage_partition(cfg, mi.pp) if mi.pp > 1 \
+    stage_groups = stage_partition(cfg, mi.pp, vpp) if mi.pp > 1 \
         else cfg.layer_groups
     groups = []
     for g in stage_groups:
@@ -146,7 +188,7 @@ def model_plan(cfg: ArchConfig, mi: MeshInfo):
             gp = apply_fsdp(gp, mi.dp)
         gp = _stack(gp, g.n)
         if mi.pp > 1:
-            gp = _stage_stack(gp, mi.pp)
+            gp = _stage_stack(gp, mi.pp, vpp)
         groups.append(gp)
     plan["groups"] = groups
     if any(g.kind == "shared_attn" for g in cfg.layer_groups):

@@ -103,28 +103,62 @@ def latest_step(ckpt_dir) -> int | None:
 
 def stage_reshape(a: np.ndarray, target_shape: tuple) -> np.ndarray:
     """Elastic-pp reshape: remap a (possibly stage-stacked) group leaf
-    saved under one ``--pp`` onto another.
+    saved under one ``--pp`` (x ``--vpp``) onto another.
 
-    Stage-major x layer-minor linearization IS contiguous layer order, so
-    ``(pp_old, n_old, ...)`` -> ``(pp_new, n_new, ...)`` (and the pp=1
-    degenerate ``(n, ...)`` forms) is a plain reshape whenever the trailing
-    per-layer dims agree and the total layer count matches."""
+    Every supported layout linearizes its leading dims in contiguous
+    layer order:
+
+    * contiguous stages ``(pp, n, ...)`` — stage-major x layer-minor;
+    * interleaved virtual stages ``(vpp, pp, n, ...)`` — the v-major
+      flatten index ``v * pp + s`` IS the round-robin chunk id
+      (``transformer.chunk_layer_ranges``), and chunks are contiguous
+      layer intervals in chunk order;
+    * the pp=1 degenerate ``(n, ...)``.
+
+    So any layout change — ``pp`` resize, ``vpp`` on/off, interleaved ->
+    contiguous — is a plain reshape whenever the trailing per-layer dims
+    agree and the total layer count matches; anything else fails LOUDLY
+    with both layouts named (a silently mis-permuted depth would train —
+    badly)."""
     ts = tuple(target_shape)
     if tuple(a.shape) == ts:
         return a
     if _merge_compatible(tuple(a.shape), ts):
         return a.reshape(ts)
-    raise ValueError(f"cannot reshape checkpoint leaf {a.shape} -> {ts}")
+    raise ValueError(
+        f"cannot reshape checkpoint leaf {a.shape} -> {ts}: saved layout "
+        f"{_layout_name(tuple(a.shape), ts)} does not remap onto target "
+        f"layout {_layout_name(ts, tuple(a.shape))} (leading stage/vpp "
+        "dims must factor the same layer count over identical per-layer "
+        "shapes)")
+
+
+def _layout_name(shape: tuple, other: tuple) -> str:
+    """Human name of a group leaf's leading-dims layout, judged by how
+    many leading dims it has beyond the shorter of the two shapes' shared
+    per-layer tail."""
+    tail = 0
+    while tail < min(len(shape), len(other)) \
+            and shape[len(shape) - 1 - tail] == other[len(other) - 1 - tail]:
+        tail += 1
+    lead = shape[:len(shape) - tail]
+    if len(lead) >= 3:
+        return f"interleaved (vpp={lead[0]}, pp={lead[1]}, layers={lead[2]})"
+    if len(lead) == 2:
+        return f"contiguous (pp={lead[0]}, layers={lead[1]})"
+    return f"flat (layers={lead[0] if lead else 1})"
 
 
 def _merge_compatible(src: tuple, dst: tuple) -> bool:
-    """True when src/dst differ only in how the leading (stage, layer)
-    dims factor the same layer count over identical per-layer shapes."""
+    """True when src/dst differ only in how the leading
+    (vpp, stage, layer) dims factor the same layer count over identical
+    per-layer shapes.  Up to three leading dims on either side: flat
+    ``(n,)``, contiguous ``(pp, n)``, interleaved ``(vpp, pp, n)``."""
     import math
-    for k in (1, 2):
-        if len(src) - k >= 0 and len(dst) >= 1:
-            for j in (1, 2):
-                if src[k:] == dst[j:] and \
+    for k in (1, 2, 3):
+        if len(src) >= k and len(dst) >= 1:
+            for j in (1, 2, 3):
+                if len(dst) >= j and src[k:] == dst[j:] and \
                         math.prod(src[:k]) == math.prod(dst[:j]):
                     return True
     return False

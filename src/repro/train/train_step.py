@@ -312,14 +312,18 @@ class Trainer:
 
 def make_trainer(model: Model, mesh, scheme="baseline",
                  opt_cfg: AdamConfig | None = None, n_micro: int = 1,
-                 ring_bidir: bool = False, ring_chunks: int = 1):
+                 ring_bidir: bool = False, ring_chunks: int = 1,
+                 remat_policy: str | None = None):
     """Trainer factory: the flat single-program step on an unfactored
     batch, or the microbatched 1F1B pipeline trainer when the mesh has a
-    stage axis or gradient accumulation (``n_micro > 1``) is requested."""
-    if model.mi.pp > 1 or n_micro > 1:
+    stage axis, gradient accumulation (``n_micro > 1``), or an activation
+    ``remat_policy`` is requested.  A model built with ``vpp > 1`` runs
+    the interleaved virtual-stage schedule automatically."""
+    if model.mi.pp > 1 or n_micro > 1 or remat_policy not in (None, "none"):
         from repro.train.pipeline import PipelineTrainer
         return PipelineTrainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
                                n_micro=n_micro, ring_bidir=ring_bidir,
-                               ring_chunks=ring_chunks)
+                               ring_chunks=ring_chunks,
+                               remat_policy=remat_policy)
     return Trainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
                    ring_bidir=ring_bidir, ring_chunks=ring_chunks)

@@ -139,6 +139,49 @@ def test_restore_codec_changed_topology_warns(trainer, mesh, tmp_path,
     assert_tree_equal(got, trainer.init_codec_state())
 
 
+# ---- interleaved (vpp) topology changes ------------------------------------
+
+def test_restore_across_changed_pp_vpp_topology(tmp_path):
+    """A checkpoint saved from an interleaved (vpp=2, pp=2) plan restores
+    onto a contiguous pp=4 plan and back: the v-major flatten of the
+    leading (vpp, pp) dims IS round-robin chunk order == contiguous layer
+    order, so the remap is a plain reshape — no permutation."""
+    from repro.models.params import Pv
+    vals = np.arange(2 * 2 * 2 * 3, dtype=np.float32).reshape(2, 2, 2, 3)
+    checkpoint.save(str(tmp_path / "p"), 1,
+                    {"g": Pv(vals, (None, "stage", None, None))})
+    like = {"g": Pv(jax.ShapeDtypeStruct((4, 2, 3), np.float32),
+                    ("stage", None, None))}
+    out, man = checkpoint.restore(str(tmp_path / "p"), like)
+    assert man["step"] == 1
+    np.testing.assert_array_equal(np.asarray(out["g"].v),
+                                  vals.reshape(4, 2, 3))
+    assert out["g"].spec == ("stage", None, None)
+    # contiguous pp=4 -> interleaved (vpp=2, pp=2)
+    checkpoint.save(str(tmp_path / "q"), 2,
+                    {"g": Pv(vals.reshape(4, 2, 3), ("stage", None, None))})
+    like2 = {"g": Pv(jax.ShapeDtypeStruct((2, 2, 2, 3), np.float32),
+                     (None, "stage", None, None))}
+    out2, _ = checkpoint.restore(str(tmp_path / "q"), like2)
+    np.testing.assert_array_equal(np.asarray(out2["g"].v), vals)
+    assert out2["g"].spec == (None, "stage", None, None)
+
+
+def test_restore_incompatible_vpp_layout_fails_loudly(tmp_path):
+    """Layer-count mismatch between an interleaved save and the target
+    plan raises, naming BOTH layouts — never a silent mis-permutation."""
+    from repro.models.params import Pv
+    vals = np.zeros((2, 2, 2, 3), dtype=np.float32)
+    checkpoint.save(str(tmp_path / "p"), 1,
+                    {"g": Pv(vals, (None, "stage", None, None))})
+    like = {"g": Pv(jax.ShapeDtypeStruct((5, 3), np.float32),
+                    (None, None))}
+    with pytest.raises(ValueError) as ei:
+        checkpoint.restore(str(tmp_path / "p"), like)
+    assert "interleaved (vpp=2, pp=2" in str(ei.value)
+    assert "flat (layers=5)" in str(ei.value)
+
+
 # ---- happy paths stay quiet ------------------------------------------------
 
 def test_restore_opt_happy_path(trainer, state, mesh, tmp_path, capsys):

@@ -289,6 +289,159 @@ def test_microbatch_grad_accum_encoder_and_vision(arch):
 
 
 # --------------------------------------------------------------------------
+# interleaved virtual stages: round-robin partition + tick schedule
+# --------------------------------------------------------------------------
+
+def test_stage_partition_vpp_round_robin():
+    cfg = _cfg([BlockGroup("attn", 8)])
+    # vpp=1 IS the contiguous layout — same per-stage structure
+    assert transformer.stage_partition(cfg, 4, 1) == \
+        transformer.stage_partition(cfg, 4)
+    # pp=2 x vpp=2 -> 4 chunks of 2 layers each
+    assert transformer.stage_partition(cfg, 2, 2) == (BlockGroup("attn", 2),)
+    assert transformer.stage_partition(cfg, 2, 4) == (BlockGroup("attn", 1),)
+    # the error names the interleaved layout, not just "pp"
+    with pytest.raises(ValueError, match=r"do not split into pp=2 x vpp=3"):
+        transformer.stage_partition(cfg, 2, 3)
+
+
+def test_chunk_layer_ranges_cover_every_layer_once():
+    ranges = transformer.chunk_layer_ranges(8, 2, 2)
+    assert set(ranges) == {(s, v) for s in range(2) for v in range(2)}
+    covered = []
+    for (s, v), (lo, hi) in ranges.items():
+        assert hi - lo == 2
+        assert lo == (v * 2 + s) * 2  # round-robin: chunk c = v*pp + s
+        covered += list(range(lo, hi))
+    # every layer assigned exactly once
+    assert sorted(covered) == list(range(8))
+    # vpp=1 degenerates to the contiguous split
+    assert transformer.chunk_layer_ranges(8, 4) == \
+        {(s, 0): (2 * s, 2 * s + 2) for s in range(4)}
+
+
+def test_stage_stacked_plan_specs_vpp():
+    cfg = _cfg([BlockGroup("attn", 8)])
+    mi = MeshInfo(tp=2, dp=2, pp=2, stage_axis="stage")
+    plan = transformer.model_plan(cfg, mi, vpp=2)
+    for d in _plan_defs(plan["groups"][0]):
+        # leading (vpp, pp) dims: vpp replicated, pp sharded over "stage"
+        assert d.spec[:2] == (None, "stage"), d
+        assert d.shape[:2] == (2, 2), d
+        assert d.shape[2] == 2  # 8 layers over 2x2 chunks
+    # embedding / final norm placement unchanged by interleaving
+    for d in _plan_defs({"e": plan["embed"], "n": plan["final_norm"]}):
+        assert "stage" not in d.spec
+
+
+def test_interleaved_schedule_simulation():
+    """numpy re-implementation of the tick decode in train/pipeline.py:
+    every (rank, virtual slice, microbatch) cell runs exactly once, each
+    chunk consumes its predecessor's output from the previous tick, and
+    per-rank idle ticks == pp - 1 — so the bubble the roofline prices is
+    exactly the tick count the scan executes."""
+    for pp, V, M in [(2, 2, 4), (4, 2, 8), (4, 4, 4), (2, 1, 3), (4, 1, 4)]:
+        T = rl.pipeline_ticks(pp, M, V)
+        assert T == M * V + pp - 1
+        done, idle = {}, {s: 0 for s in range(pp)}
+        for t in range(T):
+            for s in range(pp):
+                u = t - s
+                if not (0 <= u < M * V):
+                    idle[s] += 1
+                    continue
+                g, r = u // (pp * V), u % pp
+                v = (u % (pp * V)) // pp
+                m = g * pp + r
+                assert (s, v, m) not in done
+                done[(s, v, m)] = t
+        # exactly once per (rank, slice, microbatch)
+        assert len(done) == pp * V * M
+        assert set(done) == {(s, v, m) for s in range(pp)
+                             for v in range(V) for m in range(M)}
+        # chunk c = v*pp + s consumes chunk c-1's output from tick t-1
+        for (s, v, m), t in done.items():
+            c = v * pp + s
+            if c:
+                assert done[((c - 1) % pp, (c - 1) // pp, m)] == t - 1
+        # the priced bubble: pp-1 idle ticks per rank out of T
+        assert all(idle[s] == pp - 1 for s in range(pp))
+        assert rl.bubble_fraction(pp, M, V) == pytest.approx((pp - 1) / T)
+
+
+def test_bubble_fraction_vpp():
+    assert rl.pipeline_ticks(4, 4) == 7
+    assert rl.pipeline_ticks(4, 4, 2) == 11
+    assert rl.pipeline_ticks(1, 8, 4) == 8  # no stage axis: one pass per mb
+    assert rl.bubble_fraction(4, 4, 2) == pytest.approx(3 / 11)
+    assert rl.bubble_fraction(4, 4, 4) == pytest.approx(3 / 19)
+    # interleaving strictly shrinks the bubble at fixed (pp, n_micro)
+    assert rl.bubble_fraction(4, 4, 2) < rl.bubble_fraction(4, 4, 1)
+    assert rl.pipelined_step_time(1.0, 4, 4, 2) == pytest.approx(11 / 8)
+
+
+def test_parse_remat_policy():
+    from repro.train.pipeline import parse_remat_policy as prp
+    assert prp(None, 2) == ("none", (False, False), False)
+    assert prp("none", 2) == ("none", (False, False), False)
+    assert prp("full", 2) == ("full", (True, True), False)
+    assert prp("full+offload", 2) == ("full", (True, True), True)
+    assert prp("per_stage:1", 3) == ("per_stage", (False, True, False), False)
+    assert prp("per_stage:0,2+offload", 3) == \
+        ("per_stage", (True, False, True), True)
+    # uniform per_stage specs canonicalize to full / none
+    assert prp("per_stage:0,1", 2) == ("full", (True, True), False)
+    assert prp("per_stage:", 2) == ("none", (False, False), False)
+    with pytest.raises(ValueError, match="out of range"):
+        prp("per_stage:2", 2)
+    with pytest.raises(ValueError, match="needs remat"):
+        prp("none+offload", 2)
+    with pytest.raises(ValueError, match="unknown"):
+        prp("sometimes", 2)
+    with pytest.raises(ValueError, match="comma list"):
+        prp("per_stage:a,b", 2)
+
+
+def test_activation_stash_and_remat_tradeoff():
+    d, tok, lpr, m, pp = 64, 128, 8, 4, 4
+    t = rl.pipeline_ticks(pp, m)
+    carry = tok * d * 2
+    full = rl.activation_stash_bytes(d, tok, lpr, m, pp)
+    remat = rl.activation_stash_bytes(d, tok, lpr, m, pp, remat=True)
+    assert remat == t * carry  # only the scan carry survives under remat
+    assert full == t * (carry + lpr * tok * d * 8.0 * 2)
+    assert remat < full
+    # vpp splits the per-tick layer stash by V (more, smaller ticks)
+    v2 = rl.activation_stash_bytes(d, tok, lpr, 2 * pp, pp, vpp=2)
+    assert v2 == rl.pipeline_ticks(pp, 2 * pp, 2) * \
+        (carry + lpr / 2 * tok * d * 8.0 * 2)
+    r = rl.remat_tradeoff(d, tok, lpr, m, pp, vpp=2, handoff_s=0.5)
+    assert r["ticks"] == rl.pipeline_ticks(pp, m, 2)
+    assert r["bubble_fraction"] == rl.bubble_fraction(pp, m, 2)
+    assert r["bytes_saved"] == r["stash_bytes"] - r["stash_bytes_remat"] > 0
+    assert r["remat_extra_seconds"] > 0
+    assert r["stage_handoff_seconds"] == 0.5
+
+
+def test_stage_reshape_interleaved_vpp_dim():
+    # (vpp=2, pp=2, layers=3, d=4): the v-major flatten of the leading
+    # (vpp, pp) dims is chunk order == contiguous layer order
+    a = np.arange(2 * 2 * 3 * 4).reshape(2, 2, 3, 4)
+    np.testing.assert_array_equal(
+        checkpoint.stage_reshape(a, (4, 3, 4)), a.reshape(4, 3, 4))
+    flat = checkpoint.stage_reshape(a, (12, 4))
+    np.testing.assert_array_equal(flat, a.reshape(12, 4))
+    # flat -> interleaved and interleaved -> different contiguous topology
+    np.testing.assert_array_equal(
+        checkpoint.stage_reshape(flat, (2, 2, 3, 4)), a)
+    np.testing.assert_array_equal(
+        checkpoint.stage_reshape(a, (2, 6, 4)), a.reshape(2, 6, 4))
+    # incompatible target fails LOUDLY, naming the interleaved layout
+    with pytest.raises(ValueError, match=r"interleaved \(vpp=2, pp=2"):
+        checkpoint.stage_reshape(a, (5, 4))
+
+
+# --------------------------------------------------------------------------
 # the 8-device pipeline equivalence matrix (subprocess)
 # --------------------------------------------------------------------------
 
@@ -299,3 +452,14 @@ def test_pp_1f1b_equivalence_and_bytes():
     out = run_script("pp_check.py", timeout=1800)
     assert "bit-exact over 10 steps" in out
     assert "PP STAGE AXIS OK" in out
+
+
+@pytest.mark.slow
+@pytest.mark.multidev
+def test_vpp_interleaved_equivalence():
+    from test_comms_multidev import run_script
+    out = run_script("vpp_check.py", timeout=1800)
+    assert "== existing 1F1B: bit-exact" in out
+    assert "vpp=2 interleaved == vpp=1" in out
+    assert "grad-exact vs no-remat" in out
+    assert "VPP INTERLEAVED OK" in out

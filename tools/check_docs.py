@@ -20,7 +20,11 @@ dirs), extracts ``[text](target)`` links, and fails if
   rates are parsed from ``kernels/ref.py``/``core/codecs.py`` and the
   parameterized grammar (``ef:<lossy codec>``, ``plr<rank>``) is
   validated structurally — so ``ef:bq4`` is recognized as a valid
-  parameterized codec, while a stale ``bq12`` or ``ef:none`` fails.
+  parameterized codec, while a stale ``bq12`` or ``ef:none`` fails, or
+* a documented ledger fact (``a `vpp` fact``) names a key no
+  ``comms.scope_facts(...)`` call site actually attaches to ledger
+  events — parsed from ``src/``, so renaming/dropping the fact in the
+  pipeline breaks the doc reference instead of letting it rot.
 
 ``--xla*`` flags (XLA's own) are exempt.  External links (``http://`` /
 ``https://`` / ``mailto:``) are not fetched — CI must not depend on
@@ -213,11 +217,49 @@ def check_codec_names(src: pathlib.Path, text: str,
     return errors
 
 
+# a documented ledger fact ("a `vpp` fact"): the token must be a key some
+# scope_facts(...) call site actually merges into ledger events
+_DOC_FACT_RE = re.compile(r"`(\w+)`\s+fact\b")
+_SCOPE_FACTS_RE = re.compile(r"scope_facts\(([^)]*)\)")
+_KWARG_RE = re.compile(r"(\w+)\s*=")
+
+
+_EV_KEY_RE = re.compile(r"ev\[['\"](\w+)['\"]\]\s*=")
+
+
+def ledger_facts() -> set[str]:
+    """Fact keys the runtime attaches to ledger events, parsed (not
+    imported) from ``src/``: the kwargs of every ``scope_facts(...)``
+    call site, plus keys ``comms._account`` assigns onto the event dict
+    directly (``ev["ring"] = ...``)."""
+    out = set()
+    for p in sorted((ROOT / "src").rglob("*.py")):
+        if any(part in SKIP_DIRS for part in p.parts):
+            continue
+        text = p.read_text(encoding="utf-8")
+        for args in _SCOPE_FACTS_RE.findall(text):
+            out |= set(_KWARG_RE.findall(args))
+        out |= set(_EV_KEY_RE.findall(text))
+    return out
+
+
+def check_ledger_facts(src: pathlib.Path, text: str,
+                       known: set[str]) -> list[str]:
+    errors = []
+    for tok in sorted(set(_DOC_FACT_RE.findall(text))):
+        if tok not in known:
+            errors.append(
+                f"{src.relative_to(ROOT)}: stale ledger-fact reference "
+                f"`{tok}` (no scope_facts call site attaches it)")
+    return errors
+
+
 def check() -> list[str]:
     errors = []
     known_flags = defined_flags()
     known_fields = scheme_fields()
     known_rates = codec_rates()
+    known_facts = ledger_facts()
     for src in md_files():
         raw = src.read_text(encoding="utf-8")
         text = _FENCE_RE.sub("", raw)
@@ -225,6 +267,7 @@ def check() -> list[str]:
         errors += check_flags(src, raw, known_flags)
         errors += check_scheme_tags(src, raw, known_fields)
         errors += check_codec_names(src, raw, known_rates)
+        errors += check_ledger_facts(src, raw, known_facts)
         targets = [m.group(1) for m in _LINK_RE.finditer(text)]
         targets += [m.group(1) for m in _IMG_RE.finditer(text)]
         for t in targets:
