@@ -1,0 +1,291 @@
+"""Serving subsystem benchmark: prefill/decode rates, continuous vs
+static batching, and the at-rest KV codec's cost and capacity win.
+
+Rows (gemma3-1b reduced, single host device — the multidev CI check
+covers the sharded paths):
+
+  * ``prefill_us``              one batched prefill (B x S prompt);
+  * ``decode_dense_us``         one dense-cache decode step (B slots);
+  * ``decode_paged_none_us``    one paged continuous-batching decode step,
+                                pool in model dtype;
+  * ``decode_paged_bq8_us``     same step with the pool quantized at rest
+                                (bq8 storage codec: every attention read
+                                gathers + dequantizes wire planes);
+  * ``mixed_static_steps``      device steps a STATIC batcher needs for a
+                                mixed-length request set (waves of
+                                ``SLOTS``, each wave gated on its longest
+                                member) — analytic, deterministic;
+  * ``mixed_continuous_steps``  device steps the continuous scheduler
+                                actually took for the same set — measured
+                                by driving the real host scheduler;
+  * ``kv_pool_mb_none/bq8``     resident HBM of the same pool under each
+                                storage codec (roofline.kv_hbm_bytes) —
+                                the capacity side of the codec trade.
+
+The deterministic rows are the regression teeth: continuous batching must
+never need more steps than static, and the bq8 pool must stay ~4x smaller
+than dense.  Wall-clock rows get the usual loose absolute guard.
+
+``--write`` refreshes ``BENCH_serve.json``; ``--check`` re-measures and
+fails on regressions.
+"""
+
+import os
+
+if "device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=8 "
+        + os.environ.get("XLA_FLAGS", ""))
+
+import argparse          # noqa: E402
+import json              # noqa: E402
+import pathlib           # noqa: E402
+import time              # noqa: E402
+
+REPS, ITERS = 3, 3
+B, S, GEN, SLOTS, BT = 4, 32, 8, 4, 8
+MIXED_PROMPTS = (4, 8, 12, 16, 6, 10, 14, 5)     # mixed-length request set
+BASELINE = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+SCHEMA = "bench_serve/v1"
+
+
+def _best_of(fn) -> float:
+    """Best-of-REPS mean over ITERS back-to-back calls, microseconds."""
+    fn()                                             # warm
+    best = float("inf")
+    for _ in range(REPS):
+        t0 = time.perf_counter()
+        for _ in range(ITERS):
+            fn()
+        best = min(best, (time.perf_counter() - t0) / ITERS)
+    return best * 1e6
+
+
+def _setup():
+    import jax
+
+    from repro import configs
+    from repro.launch.mesh import make_mesh
+    from repro.models.model import Model
+    from repro.models.params import MeshInfo
+
+    cfg = configs.get("gemma3-1b").reduced()
+    mesh = make_mesh(1, 1)
+    mi = MeshInfo.from_mesh(mesh)
+    model = Model(cfg, mi)
+    params = model.init(jax.random.key(0))
+    return cfg, mesh, mi, model, params
+
+
+def _prefill_us(cfg, mesh, mi, model, params) -> float:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    from repro.serve.serve_step import Server
+    from repro.train.train_step import batch_specs
+
+    srv = Server(model, mesh)
+    bspecs = batch_specs(cfg, mi)
+    toks = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (B, S)).astype(np.int32)
+    batch = {k: jax.device_put(jnp.asarray(toks),
+                               NamedSharding(mesh, bspecs[k]))
+             for k in ("tokens", "labels")}
+    fn = srv.prefill_step({k: bspecs[k] for k in batch}, B)
+    return _best_of(lambda: jax.block_until_ready(fn(params, batch)))
+
+
+def _decode_dense_us(cfg, mesh, mi, model, params) -> float:
+    import jax
+    import jax.numpy as jnp
+
+    from repro.serve import kv_cache
+    from repro.serve.serve_step import Server
+
+    srv = Server(model, mesh)
+    s_max = S + GEN
+    dec, structs, _ = srv.decode_step(B, s_max)
+    state = [kv_cache.zero_caches(structs)]          # donated each call
+    tok = jnp.zeros((B, 1), jnp.int32)
+
+    def step():
+        t, state[0] = dec(params, tok, state[0], jnp.int32(S))
+        jax.block_until_ready(t)
+
+    return _best_of(step)
+
+
+def _decode_paged_us(cfg, mesh, mi, model, params, kv_codec) -> float:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.serve import paged_kv
+    from repro.serve.serve_step import PagedServer
+
+    srv = PagedServer(model, mesh, kv_codec=kv_codec, block_tokens=BT)
+    mb = paged_kv.blocks_needed(S + GEN, BT)
+    step_fn, structs, _ = srv.decode_step(SLOTS, SLOTS * mb, mb)
+    state = [paged_kv.zero_pool(structs)]            # donated each call
+    tables = jnp.asarray(np.arange(SLOTS * mb, dtype=np.int32)
+                         .reshape(SLOTS, mb))
+    tok = jnp.zeros((SLOTS, 1), jnp.int32)
+    pos = jnp.full((SLOTS,), S, jnp.int32)
+    active = jnp.ones((SLOTS,), bool)
+
+    def step():
+        t, state[0] = step_fn(params, tok, state[0], tables, pos, active)
+        jax.block_until_ready(t)
+
+    return _best_of(step)
+
+
+def _mixed_steps(cfg, mesh, mi, model, params):
+    """(static_steps, continuous_steps) over the mixed-length set."""
+    import numpy as np
+
+    from repro.serve import paged_kv
+    from repro.serve.scheduler import Scheduler
+    from repro.serve.serve_step import PagedServer
+
+    # static batching: FIFO waves of SLOTS, wave gated on longest member
+    lens = [p + GEN - 1 for p in MIXED_PROMPTS]
+    static = sum(max(lens[i:i + SLOTS]) for i in range(0, len(lens), SLOTS))
+
+    srv = PagedServer(model, mesh, kv_codec="none", block_tokens=BT)
+    mb = paged_kv.blocks_needed(max(MIXED_PROMPTS) + GEN, BT)
+    n_blocks = SLOTS * mb
+    step_fn, structs, _ = srv.decode_step(SLOTS, n_blocks, mb)
+    pool = paged_kv.zero_pool(structs)
+    sched = Scheduler(SLOTS, n_blocks, BT, mb, dp=1)
+    rng = np.random.default_rng(0)
+    for r, plen in enumerate(MIXED_PROMPTS):
+        sched.submit(r, rng.integers(0, cfg.vocab_size, plen).tolist(), GEN)
+    _, _, continuous = sched.run(step_fn, params, pool)
+    return static, continuous
+
+
+def measure() -> dict:
+    import jax
+
+    from repro.analysis.roofline import kv_hbm_bytes
+
+    cfg, mesh, mi, model, params = _setup()
+    rows = {}
+    rows["prefill_us"] = _prefill_us(cfg, mesh, mi, model, params)
+    rows["decode_dense_us"] = _decode_dense_us(cfg, mesh, mi, model, params)
+    for codec in ("none", "bq8"):
+        rows[f"decode_paged_{codec}_us"] = _decode_paged_us(
+            cfg, mesh, mi, model, params, codec)
+    static, continuous = _mixed_steps(cfg, mesh, mi, model, params)
+    rows["mixed_static_steps"] = float(static)
+    rows["mixed_continuous_steps"] = float(continuous)
+    n_blocks = 1024
+    for codec in ("none", "bq8"):
+        rows[f"kv_pool_mb_{codec}"] = kv_hbm_bytes(
+            n_blocks, BT, cfg.n_layers, cfg.n_kv_heads, cfg.head_dim_,
+            codec, cfg.dtype) / 1e6
+    return {"schema": SCHEMA, "device_count": jax.device_count(),
+            "backend": jax.default_backend(), "reps": REPS, "iters": ITERS,
+            "rows": {k: round(v, 3) for k, v in rows.items()}}
+
+
+def check_against(baseline: dict, current: dict,
+                  ratio_slack: float = 1.25,
+                  abs_slack: float = 5.0) -> list:
+    """Regression gates:
+
+    * continuous batching must need <= the static wave count (that's the
+      whole point of the scheduler), and both step counts are
+      deterministic — they must match the committed baseline exactly;
+    * the bq8 pool must stay under a third of the dense pool's bytes
+      (codec arithmetic is deterministic);
+    * decoding against the quantized pool must stay within a small
+      multiple of the dense-pool step (the gather+dequant path must not
+      fall off a cliff);
+    * wall-clock rows get the loose ``abs_slack`` guard vs baseline.
+    """
+    errs = []
+    if baseline.get("schema") != SCHEMA:
+        errs.append(f"baseline schema {baseline.get('schema')!r} != {SCHEMA}")
+        return errs
+    rows, base = current["rows"], baseline["rows"]
+    for k in base:
+        if k not in rows:
+            errs.append(f"row {k} missing from current measurement")
+    st, ct = rows.get("mixed_static_steps"), \
+        rows.get("mixed_continuous_steps")
+    if st is not None and ct is not None and ct > st:
+        errs.append(f"continuous batching took {ct:.0f} steps > static "
+                    f"{st:.0f}")
+    for k in ("mixed_static_steps", "mixed_continuous_steps"):
+        if k in rows and k in base and rows[k] != base[k]:
+            errs.append(f"{k}: {rows[k]:.0f} != committed {base[k]:.0f} "
+                        "(deterministic row drifted)")
+    dense_mb, q_mb = rows.get("kv_pool_mb_none"), rows.get("kv_pool_mb_bq8")
+    if dense_mb and q_mb and not q_mb < dense_mb / 3:
+        errs.append(f"bq8 pool {q_mb:.2f} MB not < 1/3 of dense "
+                    f"{dense_mb:.2f} MB")
+    d, q = rows.get("decode_paged_none_us"), rows.get("decode_paged_bq8_us")
+    if d and q and q > d * 4.0:
+        errs.append(f"bq8 paged decode {q:.0f}us > 4x dense-pool "
+                    f"{d:.0f}us")
+    for k, v in rows.items():
+        if k.endswith("_us") and k in base and v > base[k] * abs_slack:
+            errs.append(f"{k}: {v:.0f}us > {abs_slack}x baseline "
+                        f"{base[k]:.0f}us")
+    return errs
+
+
+def run():
+    """run.py harness hook: CSV rows (name, us, derived)."""
+    doc = measure()
+    rows = []
+    r = doc["rows"]
+    for k, v in sorted(r.items()):
+        note = "-"
+        if k == "prefill_us":
+            note = f"prefill_tok_s={B * S / (v / 1e6):.0f}"
+        elif k == "decode_dense_us":
+            note = f"decode_tok_s={B / (v / 1e6):.0f}"
+        elif k == "decode_paged_bq8_us" and r.get("decode_paged_none_us"):
+            note = f"bq8_vs_none={v / r['decode_paged_none_us']:.3f}"
+        elif k == "mixed_continuous_steps" and r.get("mixed_static_steps"):
+            note = f"vs_static={v / r['mixed_static_steps']:.3f}"
+        elif k == "kv_pool_mb_bq8" and r.get("kv_pool_mb_none"):
+            note = f"capacity_x={r['kv_pool_mb_none'] / v:.2f}"
+        rows.append((k[:-3] if k.endswith("_us") else k, v, note))
+    return rows
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--write", action="store_true",
+                    help=f"refresh the committed baseline {BASELINE.name}")
+    ap.add_argument("--check", action="store_true",
+                    help="re-measure and compare against the committed "
+                         "baseline; nonzero exit on regression")
+    args = ap.parse_args()
+    doc = measure()
+    for k, v in sorted(doc["rows"].items()):
+        print(f"{k},{v:.3f}")
+    if args.write:
+        BASELINE.write_text(json.dumps(doc, indent=2, sort_keys=True) + "\n")
+        print(f"wrote {BASELINE}")
+    if args.check:
+        baseline = json.loads(BASELINE.read_text())
+        errs = check_against(baseline, doc)
+        if errs:
+            print("bench_serve regression check FAILED:")
+            for e in errs:
+                print(f"  {e}")
+            return 1
+        print("bench_serve regression check OK "
+              f"({len(doc['rows'])} rows vs {BASELINE.name})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -367,6 +367,38 @@ def cp_ring_seconds(events, train: bool, slow_axes=(),
 
 
 # --------------------------------------------------------------------------
+# serving terms: prefill->decode KV handoff + resident paged-cache bytes
+# --------------------------------------------------------------------------
+
+def kv_handoff_seconds(events, train: bool = False, slow_axes=(),
+                       ici_bw: float = ICI_BW,
+                       dcn_bw: float = DCN_BW) -> float:
+    """Collective time of the ``kv``-dimension events alone — the
+    per-request prefill->decode pool handoff
+    (``comms.pool_handoff``, one ppermute per cache leaf under the
+    scheme's ``kv`` codec).  Serving is inference-only, so ``train``
+    defaults False (no analytic backward twin); the pool axis is
+    typically the slowest interconnect — pass it in ``slow_axes`` to
+    price the hop at DCN rate."""
+    kv_ev = [ev for ev in events if tag_dim(ev["tag"]) == "kv"]
+    return collective_seconds(kv_ev, train, slow_axes, ici_bw, dcn_bw)
+
+
+def kv_hbm_bytes(n_blocks: int, block_tokens: int, n_layers: int,
+                 kv_heads: int, head_dim: int, codec: str = "none",
+                 dtype: str = "bfloat16") -> float:
+    """Resident HBM footprint of a paged KV pool (K + V planes).
+
+    Under a bq storage codec the pool holds wire planes, so the at-rest
+    bytes shrink by the codec's ``wire_bits_per_value`` — the same
+    arithmetic the traffic ledger uses, now pricing capacity instead of
+    links.  This is the term that converts a ``--kv-codec`` choice into
+    extra concurrent requests per chip."""
+    elems = 2 * n_layers * n_blocks * block_tokens * kv_heads * head_dim
+    return _wire_bytes(codec, elems, dtype)
+
+
+# --------------------------------------------------------------------------
 # per-level codec autotune (pick codecs from the measured ICI/DCN ratio
 # via the collective_seconds pricing, over the model's own ledger)
 # --------------------------------------------------------------------------

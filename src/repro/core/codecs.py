@@ -151,6 +151,22 @@ class BqCodec(Codec):
     def wire_bits_per_value(self, dtype=jnp.float32) -> float:
         return self.bits + 32.0 / BLOCK  # mantissa + per-block f32 scale
 
+    def storage_row_layout(self):
+        """Per-128-element-row plane layout for quantized-AT-REST storage
+        (the paged KV cache keeps bq wire planes resident in HBM and
+        gathers/decodes them per attention read — repro.serve.paged_kv).
+
+        Returns ``{plane: (lane_width, dtype)}`` for one BLOCK-wide row:
+        ``q_hi`` (nibble-packed to 64 lanes at rate 4), ``q_lo`` only at
+        rate 24, and the per-row f32 ``scale``."""
+        hi_w = BLOCK // 2 if self.bits == 4 else BLOCK
+        hi_dt = {4: jnp.uint8, 8: jnp.int8, 16: jnp.int16,
+                 24: jnp.int16}[self.bits]
+        out = {"q_hi": (hi_w, hi_dt), "scale": (1, jnp.float32)}
+        if self.bits == 24:
+            out["q_lo"] = (BLOCK, jnp.uint8)
+        return out
+
     @property
     def is_identity(self) -> bool:
         return False

@@ -994,6 +994,22 @@ def stage_recv(x, axis, tag="pp"):
     return ppermute(x, axis, [(s + 1, s) for s in range(n - 1)], tag)
 
 
+def pool_handoff(x, axis, tag="kv@prefill_handoff", src: int = 0,
+                 dst: int = 1):
+    """Serving prefill->decode pool handoff: rank ``src`` of the pool
+    axis sends ``x`` to rank ``dst``.
+
+    A single-pair :func:`ppermute` (non-receiving pool ranks get zeros —
+    the prefill pool drops its KV after the handoff), so the per-request
+    KV transfer rides the compression path and the byte ledger under the
+    serving ``kv`` dimension.  The event is pro-rated by the 1/n edge
+    fraction like every partial permutation, and
+    ``roofline.kv_handoff_seconds`` prices exactly these events."""
+    if int(axis_size(axis)) == 1:
+        return x
+    return ppermute(x, axis, [(src, dst)], tag)
+
+
 def all_to_all(x, axis, split_axis: int, concat_axis: int, tag):
     """All-to-all over ``axis`` (bwd: all-to-all with split/concat swapped).
     AxisPair axes route to :func:`hier_all_to_all`."""

@@ -6,8 +6,11 @@ flat 24-field ``Scheme`` + tag-string fallback chain with three composable
 pieces:
 
 * :class:`TagQuery` — the structured description of one collective at
-  trace time: parallelism ``dim`` (dp/zero/tp/pp/ep/cp), autodiff
-  ``direction`` (fwd/bwd; ``None`` for the direction-free dp/zero sync),
+  trace time: parallelism ``dim`` (dp/zero/tp/pp/ep/cp/kv), autodiff
+  ``direction`` (fwd/bwd; ``None`` for the direction-free dp/zero/kv
+  traffic — ``kv`` is the serving KV-cache dimension: prefill->decode
+  handoffs and quantized-at-rest paged storage, inference-only so it
+  carries no autodiff twin),
   hierarchy ``level`` (flat/inner/outer), the uncompressed wire-payload
   size in ``nbytes``, and an optional site ``name`` ("moe_dispatch",
   "embed_table", ...).
@@ -51,7 +54,7 @@ import threading
 
 from repro.core import codecs, compat
 
-DIMS = ("dp", "zero", "tp", "pp", "ep", "cp")
+DIMS = ("dp", "zero", "tp", "pp", "ep", "cp", "kv")
 DIRECTED_DIMS = ("tp", "pp", "ep", "cp")
 DIRECTIONS = ("fwd", "bwd")
 LEVELS = ("flat", "inner", "outer")
@@ -298,8 +301,9 @@ def _resolve_axes(mesh_info) -> dict:
     ``zero`` stays on the intra-node data axis (hpZ: master chunks are
     replicated per node, the param all-gather never leaves the node);
     ``tp``/``ep`` ride the (possibly ``(tpnode, model)``-factored) model
-    axes; ``pp`` the stage axes and ``cp`` the context-parallel axes
-    (``None`` on meshes without those axes)."""
+    axes; ``pp`` the stage axes, ``cp`` the context-parallel axes, and
+    ``kv`` the serving ``pool`` axis the prefill->decode KV handoff
+    crosses (``None`` on meshes without those axes)."""
     if mesh_info is None:
         return {}
     if not hasattr(mesh_info, "data_axis"):       # a Mesh, not a MeshInfo
@@ -309,7 +313,8 @@ def _resolve_axes(mesh_info) -> dict:
     dp = compat.AxisPair(mi.node_axis, mi.data_axis) \
         if (mi.node_axis and mi.node > 1) else mi.data_axis
     return {"dp": dp, "zero": mi.data_axis, "tp": mi.tp_axes,
-            "ep": mi.tp_axes, "pp": mi.stage_axes, "cp": mi.cp_axes}
+            "ep": mi.tp_axes, "pp": mi.stage_axes, "cp": mi.cp_axes,
+            "kv": mi.pool_axis}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -317,7 +322,7 @@ class CommPlan:
     """A compiled, immutable policy: the bound handles comms consumes.
 
     ``_table`` maps every valid ``(dim, direction, level)`` triple to a
-    codec object — the 24-entry static resolution (exactly the legacy
+    codec object — the 33-entry static resolution (exactly the legacy
     Scheme field space).  Dynamic policies (size/name rules) fall back to
     a first-match rule scan when the query carries trace-time facts."""
 

@@ -15,6 +15,9 @@ collective carries) to a codec:
           and its inverse-permutation gradient hops (bwd) — repeated
           neighbor exchange, mild codecs per the paper's
           precision-vs-sparsity guidance
+  kv    — serving KV-cache traffic: the prefill->decode pool handoff and
+          the quantized-at-rest paged-cache storage codec (inference
+          only, so no autodiff twin; activation-class — mild codecs)
 
 Each tag has a fwd and bwd codec — the paper's §III-A rule that gradients
 flowing through MP collectives in the backward pass must also be covered by
@@ -24,8 +27,9 @@ The full tag grammar (``docs/ARCHITECTURE.md``) is
 
     <dimension>[_<direction>][_<level>]
 
-with dimension in {dp, zero, tp, pp, ep, cp}, direction in {fwd, bwd} (dp and
-zero are direction-free — the optimizer's sync has no autodiff twin), and
+with dimension in {dp, zero, tp, pp, ep, cp, kv}, direction in {fwd, bwd}
+(dp, zero, and kv are direction-free — the optimizer's sync and the serving
+KV handoff have no autodiff twin), and
 level in {inner, outer} naming the stage of a hierarchical collective.
 Unset level fields resolve through ``Scheme.codec``'s fallback chain:
 ``tp_fwd_inner`` -> ``tp_fwd`` -> KeyError for an unknown dimension.
@@ -43,15 +47,18 @@ import threading
 from repro.core import codecs, policy
 
 # parallelism dimensions, in ledger/table order
-DIMS = ("dp", "zero", "tp", "pp", "ep", "cp")
+DIMS = ("dp", "zero", "tp", "pp", "ep", "cp", "kv")
 # dimensions whose tags carry an explicit fwd/bwd direction
 DIRECTED_DIMS = ("tp", "pp", "ep", "cp")
 
 
 def flat_tags() -> list[str]:
     """Every flat (level-free) tag the comms layer can emit."""
-    return ["dp", "zero"] + [f"{d}_{io}" for d in DIRECTED_DIMS
-                             for io in ("fwd", "bwd")]
+    out = []
+    for d in DIMS:
+        out += [f"{d}_{io}" for io in ("fwd", "bwd")] \
+            if d in DIRECTED_DIMS else [d]
+    return out
 
 
 def level_tags() -> list[str]:
@@ -63,7 +70,7 @@ def level_tags() -> list[str]:
 class Scheme:
     """Tag -> codec map over THREE axes of the scheme space:
 
-      dimension (dp/zero/tp/pp/ep/cp) x direction (fwd/bwd) x level.
+      dimension (dp/zero/tp/pp/ep/cp/kv) x direction (fwd/bwd) x level.
 
     The *level* axis prices the link hierarchy of real clusters: the
     intra-node stage of a hierarchical collective (``<tag>_inner``) rides
@@ -88,6 +95,7 @@ class Scheme:
     ep_bwd: str = "none"
     cp_fwd: str = "none"
     cp_bwd: str = "none"
+    kv: str = "none"
     # per-level overrides (hierarchical collectives); None -> flat codec
     dp_inner: str | None = None
     dp_outer: str | None = None
@@ -109,6 +117,8 @@ class Scheme:
     cp_fwd_outer: str | None = None
     cp_bwd_inner: str | None = None
     cp_bwd_outer: str | None = None
+    kv_inner: str | None = None
+    kv_outer: str | None = None
 
     def __post_init__(self):
         # eager codec validation: a typo'd codec name fails at scheme
@@ -147,12 +157,13 @@ class Scheme:
     @classmethod
     def hybrid(cls, name: str, dp: str, mp: str, zero: str | None = None) -> "Scheme":
         """Paper-style hybrid: one codec for DP, one for all MP + ZeRO
-        traffic (cp KV ring hops are activation-class — they take the
-        mild MP codec, never the aggressive DP one)."""
+        traffic (cp KV ring hops and serving kv handoffs are
+        activation-class — they take the mild MP codec, never the
+        aggressive DP one)."""
         z = zero if zero is not None else mp
         return cls(name=name, dp=dp, zero=z,
                    tp_fwd=mp, tp_bwd=mp, pp_fwd=mp, pp_bwd=mp,
-                   ep_fwd=mp, ep_bwd=mp, cp_fwd=mp, cp_bwd=mp)
+                   ep_fwd=mp, ep_bwd=mp, cp_fwd=mp, cp_bwd=mp, kv=mp)
 
     @classmethod
     def hier(cls, name: str, base: "Scheme", inner: str, outer: str,

@@ -296,3 +296,34 @@ def bq_decode_add_pallas(q_hi, q_lo, scale, local, bits: int,
         out_shape=jax.ShapeDtypeStruct((m, BLOCK), jnp.float32),
         interpret=interpret,
     )(q_hi, scale, local)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "interpret"))
+def bq_gather_decode_pallas(q_hi, q_lo, scale, idx, bits: int,
+                            interpret: bool = False):
+    """Paged decode-read: gather quantized rows by block index, then run
+    the tiled dequantize kernel over the gathered planes.
+
+    The gather itself stays an XLA dynamic-gather over the COMPRESSED
+    planes (the HBM traffic is ``bits``-rate either way); only the
+    dequantize arithmetic is kernelized — on the gathered wire bytes, so
+    the decoded f32 never round-trips through HBM at rest.  Pool layout
+    contract (see :mod:`repro.serve.paged_kv`): ``q_hi`` is
+    ``(n_blocks, ..., hi_width)``, ``scale`` is ``(n_blocks, ..., 1)``
+    with one scale per 128-element row, same row order.  Returns f32 of
+    shape ``idx.shape + pool.shape[1:-1] + (BLOCK,)``.
+    """
+    take = lambda a: None if a is None else jnp.take(a, idx, axis=0)
+    hi, lo, sc = take(q_hi), take(q_lo), take(scale)
+    out_shape = sc.shape[:-1] + (BLOCK,)
+    m = sc.size
+    m_pad = -(-m // TILE_M) * TILE_M
+    hi2 = hi.reshape(m, _hi_width(bits))
+    lo2 = None if lo is None else lo.reshape(m, BLOCK)
+    sc2 = sc.reshape(m, 1)
+    if m_pad != m:  # all-zero rows with scale 1 decode to zero
+        hi2 = jnp.pad(hi2, ((0, m_pad - m), (0, 0)))
+        lo2 = None if lo2 is None else jnp.pad(lo2, ((0, m_pad - m), (0, 0)))
+        sc2 = jnp.pad(sc2, ((0, m_pad - m), (0, 0)), constant_values=1.0)
+    x2 = bq_decode_pallas(hi2, lo2, sc2, bits, interpret=interpret)
+    return x2[:m].reshape(out_shape)

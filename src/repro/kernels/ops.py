@@ -28,6 +28,8 @@ _encode_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_encod
 _decode_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_ref)
 _dae_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_add_encode_ref)
 _da_ref = functools.partial(jax.jit, static_argnames=("bits",))(ref.bq_decode_add_ref)
+_gather_decode_ref = functools.partial(
+    jax.jit, static_argnames=("bits",))(ref.bq_gather_decode_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("bits",))
@@ -139,6 +141,26 @@ def bq_decode_add_blocks(wire: dict, local2d: jnp.ndarray, bits: int,
                        bits=bits)
     return bq.bq_decode_add_pallas(
         wire["q_hi"], wire["q_lo"], wire["scale"], local2d, bits,
+        interpret=(be == "pallas_interpret"))
+
+
+def bq_gather_decode(wire: dict, idx, bits: int,
+                     backend: str | None = None):
+    """Paged decode-read: gather quantized rows of a pool wire dict by a
+    leading block index, then dequantize (``repro.serve.paged_kv``).
+
+    ``wire`` holds pool planes with a leading block axis and a trailing
+    per-row layout (``q_hi (n_blocks, ..., hi_width)``, ``scale
+    (n_blocks, ..., 1)``); ``idx`` is an integer block table of any
+    shape.  The gather reads only the compressed planes — the per-read
+    HBM traffic is ``bits``-rate.  Returns f32 of shape
+    ``idx.shape + pool.shape[1:-1] + (128,)``."""
+    be = _resolve(backend)
+    if be == "jnp":
+        return _gather_decode_ref(wire["q_hi"], wire["q_lo"],
+                                  wire["scale"], idx, bits=bits)
+    return bq.bq_gather_decode_pallas(
+        wire["q_hi"], wire["q_lo"], wire["scale"], idx, bits,
         interpret=(be == "pallas_interpret"))
 
 

@@ -112,6 +112,22 @@ def bq_decode_add_ref(q_hi, q_lo, scale, local: jnp.ndarray,
     return bq_decode_ref(q_hi, q_lo, scale, bits) + local.astype(jnp.float32)
 
 
+def bq_gather_decode_ref(q_hi, q_lo, scale, idx: jnp.ndarray, bits: int):
+    """Paged decode-read oracle: gather quantized rows by a leading block
+    index, then dequantize.
+
+    This is the attention-read path of the paged KV cache
+    (:mod:`repro.serve.paged_kv`): ``q_hi``/``q_lo``/``scale`` are pool
+    arrays with a leading block axis, ``idx`` is an integer block table of
+    any shape, and the gather touches only the *compressed* planes — the
+    HBM read is ``bits``-rate, never the decoded f32.  Returns f32 of
+    shape ``idx.shape + pool.shape[1:-1] + (BLOCK,)``.
+    """
+    _check_bits(bits)
+    take = lambda a: None if a is None else jnp.take(a, idx, axis=0)
+    return bq_decode_ref(take(q_hi), take(q_lo), take(scale), bits)
+
+
 def max_abs_error_bound(scale: jnp.ndarray, bits: int) -> jnp.ndarray:
     """Worst-case |x - D(E(x))| per block.
 

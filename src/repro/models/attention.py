@@ -353,6 +353,48 @@ def attn_decode(p, x, cache, index, cfg, mi: MeshInfo, mode: str, window=0,
     return y, ({**cache, "k": k, "v": v} if not cross else cache)
 
 
+def attn_decode_paged(p, x, pool, tables, pos, active, cfg, mi: MeshInfo,
+                      *, bits, block_tokens, window=0, pos3=None,
+                      backend=None):
+    """Single-token decode against one layer's paged KV pool (head mode).
+
+    x [N, 1, D] — one row per decode SLOT (replicated over model); pool is
+    this layer's LOCAL paged pool (:mod:`repro.serve.paged_kv`); tables
+    [N, max_blocks] local block ids; pos [N] int32 per-slot positions;
+    active [N] bool slot mask.  Inactive slots write nowhere (their block
+    id is forced out of range -> dropped scatter) and attend over a fully
+    masked sequence, so stale pool contents never reach a live slot.
+    Returns (out [N, 1, D], new_pool).
+    """
+    from repro.serve import paged_kv
+
+    theta = _theta(cfg, window)
+    N = x.shape[0]
+    pos_q = pos[:, None].astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, x, x, pos_q, pos_q, cfg, mi, theta,
+                                   pos3)
+    kv_loc, hd = k_new.shape[2], cfg.head_dim_
+
+    nb_loc = (pool["k"] if bits is None else pool["k"]["q_hi"]).shape[0]
+    blk = jnp.take_along_axis(tables, (pos // block_tokens)[:, None],
+                              axis=1)[:, 0]
+    blk = jnp.where(active, blk, nb_loc)          # inactive -> dropped write
+    pool = paged_kv.write_token(pool, blk, pos % block_tokens,
+                                k_new[:, 0], v_new[:, 0], bits, backend)
+
+    k, v = paged_kv.read_tables(pool, tables, bits, kv_loc, hd, x.dtype,
+                                backend)
+    s_pad = k.shape[1]
+    k_pos = jnp.broadcast_to(jnp.arange(s_pad, dtype=jnp.int32)[None],
+                             (N, s_pad))
+    valid = (k_pos <= pos[:, None]) & active[:, None]
+    o = full_attention(q, k, v, pos_q, k_pos,
+                       causal=False, window=window, k_valid=valid)
+    y = jnp.einsum("bsh,hd->bsd", o.reshape(N, 1, -1), use(p["wo"], mi))
+    out = comms.psum(y, mi.tp_axes, comms.site("tp", "attn_out"))
+    return out, pool
+
+
 def _shard_index(mi, seq_axes):
     """Linear shard index over the (possibly multi-axis) seq sharding.
 

@@ -49,6 +49,7 @@ class MeshInfo:
     pp_node: int = 1
     cp: int = 1
     cp_node: int = 1
+    pool: int = 1
     model_axis: str = "model"
     data_axis: str = "data"
     pod_axis: str | None = None
@@ -58,6 +59,10 @@ class MeshInfo:
     pp_node_axis: str | None = None
     cp_axis: str | None = None
     cp_node_axis: str | None = None
+    # serving-only: the disaggregated prefill/decode pool axis the kv
+    # handoff crosses (repro.serve.disagg); never part of all_axes —
+    # model-internal collectives must not touch it.
+    pool_axis: str | None = None
 
     @property
     def batch_axes(self):
@@ -155,7 +160,9 @@ class MeshInfo:
                    stage_axis="stage" if "stage" in ax else None,
                    pp_node_axis="ppnode" if "ppnode" in ax else None,
                    cp_axis="cp" if "cp" in ax else None,
-                   cp_node_axis="cpnode" if "cpnode" in ax else None)
+                   cp_node_axis="cpnode" if "cpnode" in ax else None,
+                   pool=ax.get("pool", 1),
+                   pool_axis="pool" if "pool" in ax else None)
 
 
 @dataclasses.dataclass

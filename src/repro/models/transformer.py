@@ -366,3 +366,55 @@ def decode_group(gp, x, caches, index, g: BlockGroup, cfg, mi, mode,
         x, new_caches = lax.scan(body, comms.varying_all(x, mi.all_axes),
                                  (gp, caches))
     return x, new_caches
+
+
+def decode_block_paged(kind, p, x, pool, tables, pos, active, cfg, mi,
+                       g: BlockGroup, *, bits, block_tokens, pos3=None):
+    """Per-slot decode body against a paged KV pool (continuous batching).
+
+    Mirrors :func:`decode_block` with the dense ``[B, S_max]`` cache
+    replaced by one layer's paged pool + block tables; only the
+    attention-style kinds page (recurrent-state kinds have no KV cache to
+    page — they keep the dense Server)."""
+    if kind in ("attn", "moe"):
+        h = layers.norm(p["ln1"], x, cfg, mi)
+        r, pool = attention.attn_decode_paged(
+            p["attn"], h, pool, tables, pos, active, cfg, mi, bits=bits,
+            block_tokens=block_tokens, window=g.window, pos3=pos3)
+        x = x + r
+        if kind == "moe":
+            h = layers.norm(p["ln2"], x, cfg, mi)
+            r, _ = moe.moe_block(p["moe"], h, cfg, mi, sp=False)
+            x = x + r
+        elif cfg.d_ff:
+            h = layers.norm(p["ln2"], x, cfg, mi)
+            x = x + layers.mlp(p["mlp"], h, cfg, mi, sp=False)
+        return x, pool
+    raise NotImplementedError(
+        f"paged decode supports attn/moe/shared_attn groups; got {kind!r}")
+
+
+def decode_group_paged(gp, x, pool, tables, pos, active, g: BlockGroup, cfg,
+                       mi, *, bits, block_tokens, shared=None, pos3=None):
+    if g.kind == "shared_attn":
+        for _ in range(g.n):
+            x, pool = decode_block_paged("attn", shared, x, pool, tables,
+                                         pos, active, cfg, mi, g, bits=bits,
+                                         block_tokens=block_tokens,
+                                         pos3=pos3)
+        return x, pool
+
+    from repro.core import comms
+
+    def body(xc, sl):
+        pslice, pl = sl
+        p = _unstack_pv(pslice)
+        xc, npl = decode_block_paged(g.kind, p, xc, pl, tables, pos, active,
+                                     cfg, mi, g, bits=bits,
+                                     block_tokens=block_tokens, pos3=pos3)
+        return comms.varying_all(xc, mi.all_axes), npl
+
+    with comms.scope_mult(g.n):
+        x, new_pool = lax.scan(body, comms.varying_all(x, mi.all_axes),
+                               (gp, pool))
+    return x, new_pool

@@ -1,0 +1,261 @@
+"""Paged KV cache with bq storage codecs (quantized at rest).
+
+Production-serving cache layout: instead of one dense ``[B, S_max]``
+cache per request slot, KV state lives in a shared pool of fixed-size
+blocks of ``block_tokens`` tokens each, and every request owns an ordered
+*block table* — so mixed-length requests share HBM with no per-slot
+``S_max`` reservation, and a finished request's blocks return to the free
+list immediately (continuous batching, :mod:`repro.serve.scheduler`).
+
+Storage codecs
+--------------
+The pool stores either raw model-dtype K/V (``codec="none"``, bit-exact)
+or the existing shape-aware ``bq*`` wire planes quantized AT REST: each
+token's local feature vector (``KV_loc x hd`` after tensor-parallel head
+sharding) is padded to ``R`` rows of 128 lanes and encoded per row, so
+
+  * appending one token encodes only its own rows (bq scales are
+    per-row — no read-modify-write of neighbouring tokens);
+  * the per-attention-read gather touches only the compressed planes
+    (``ops.bq_gather_decode`` — the HBM read is ``bits``-rate) and
+    dequantizes through the Pallas bq decode kernel;
+  * ``roofline.kv_hbm_bytes`` prices the resident pool with the same
+    ``wire_bits_per_value`` arithmetic as the wire ledger.
+
+Pool layout (global shapes; head attention mode only)::
+
+  none  k/v   [L, n_blocks, bt, KV, hd]        heads sharded over tp
+  bq*   q_hi  [L, n_blocks, bt, R_g, hi_w]     rows sharded over tp
+        q_lo  [L, n_blocks, bt, R_g, 128]      (rate 24 only)
+        scale [L, n_blocks, bt, R_g, 1]
+
+with ``R_g = tp * ceil(KV_loc * hd / 128)`` and the ``n_blocks`` dim
+sharded over the data axis — block ids are LOCAL to a data shard, each
+shard's scheduler slots allocate from that shard's
+:class:`BlockAllocator`.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import codecs
+from repro.kernels import ops
+from repro.kernels.bq import TILE_M
+from repro.kernels.ref import BLOCK
+from repro.models.config import ArchConfig, BlockGroup
+from repro.models.params import MeshInfo
+
+DEFAULT_BLOCK_TOKENS = 16
+
+_PAGED_KINDS = ("attn", "moe", "shared_attn")
+
+
+def storage_bits(codec: str) -> int | None:
+    """KV storage codec -> bq mantissa bits (None = dense, bit-exact).
+
+    Only ``none`` and the stateless fixed-rate ``bq*`` family are valid
+    at-rest codecs: storage needs random-access decode of individual
+    blocks, which the per-row bq layout gives for free."""
+    if codec in (None, "none"):
+        return None
+    c = codecs.get(codec)
+    if not isinstance(c, codecs.BqCodec):
+        raise ValueError(
+            f"kv storage codec must be 'none' or a bq* codec (random-access"
+            f" per-row decode); got {codec!r}")
+    return c.bits
+
+
+def blocks_needed(n_tokens: int, block_tokens: int) -> int:
+    return -(-n_tokens // block_tokens)
+
+
+def token_rows(kv_heads_loc: int, head_dim: int) -> int:
+    """Quantized rows per token for one tp shard's feature vector."""
+    return -(-kv_heads_loc * head_dim // BLOCK)
+
+
+# --------------------------------------------------------------------------
+# host-side block allocator (one per data shard)
+# --------------------------------------------------------------------------
+
+class OutOfBlocks(RuntimeError):
+    pass
+
+
+class BlockAllocator:
+    """Host-side free-list allocator over one data shard's block pool.
+
+    Invariants (unit-tested): a live block has exactly one owner; ``alloc``
+    never hands out a block already owned; ``free`` returns blocks to the
+    free list and double-frees raise."""
+
+    def __init__(self, n_blocks: int):
+        self.n_blocks = n_blocks
+        self._free = list(range(n_blocks - 1, -1, -1))   # pop() -> 0 first
+        self._owner: dict[int, object] = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, owner) -> int:
+        if not self._free:
+            raise OutOfBlocks(f"all {self.n_blocks} KV blocks are live")
+        b = self._free.pop()
+        assert b not in self._owner, b
+        self._owner[b] = owner
+        return b
+
+    def alloc_many(self, owner, k: int) -> list[int]:
+        if k > self.n_free:
+            raise OutOfBlocks(f"need {k} KV blocks, have {self.n_free}")
+        return [self.alloc(owner) for _ in range(k)]
+
+    def free(self, blocks) -> None:
+        for b in blocks:
+            if b not in self._owner:
+                raise KeyError(f"block {b} is not live (double free?)")
+            del self._owner[b]
+            self._free.append(b)
+
+    def owner(self, block: int):
+        return self._owner.get(block)
+
+
+# --------------------------------------------------------------------------
+# pool structs + specs (global shapes for the shard_map boundary)
+# --------------------------------------------------------------------------
+
+def pool_group(cfg: ArchConfig, mi: MeshInfo, g: BlockGroup, n_blocks: int,
+               block_tokens: int, codec: str = "none"):
+    """-> (struct pytree, spec pytree) for one layer group's paged pool."""
+    if g.kind not in _PAGED_KINDS:
+        raise NotImplementedError(
+            f"paged KV cache supports attention-style groups "
+            f"{_PAGED_KINDS}; group kind {g.kind!r} needs the dense-cache "
+            f"Server")
+    dt = jnp.dtype(cfg.dtype)
+    hd, KV = cfg.head_dim_, cfg.n_kv_heads
+    bits = storage_bits(codec)
+    L, bt = g.n, block_tokens
+    bs = mi.batch_axes if mi.dp > 1 else None
+    if KV % mi.tp:
+        raise ValueError(f"paged head-mode cache needs n_kv_heads ({KV}) "
+                         f"divisible by tp ({mi.tp})")
+
+    def sds(shape, d=dt):
+        return jax.ShapeDtypeStruct(shape, d)
+
+    sp_leaf = P(None, bs, None, mi.tp_axes, None)
+    if bits is None:
+        st = {"k": sds((L, n_blocks, bt, KV, hd)),
+              "v": sds((L, n_blocks, bt, KV, hd))}
+        sp = {"k": sp_leaf, "v": sp_leaf}
+    else:
+        r_g = mi.tp * token_rows(KV // mi.tp, hd)
+        layout = codecs.get(codec).storage_row_layout()
+        plane = {pl: sds((L, n_blocks, bt, r_g, w), d)
+                 for pl, (w, d) in layout.items()}
+        plane.setdefault("q_lo", None)
+        pspec = {pl: (sp_leaf if s is not None else None)
+                 for pl, s in plane.items()}
+        st = {"k": dict(plane), "v": dict(plane)}
+        sp = {"k": dict(pspec), "v": dict(pspec)}
+    if g.kind == "shared_attn":   # single insertion point, not scanned
+        st = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape[1:],
+                                                         s.dtype), st)
+        sp = jax.tree.map(lambda p: P(*p[1:]), sp)
+    return st, sp
+
+
+def pool_structs(cfg: ArchConfig, mi: MeshInfo, n_blocks: int,
+                 block_tokens: int = DEFAULT_BLOCK_TOKENS,
+                 codec: str = "none"):
+    """Full paged pool: lists aligned with ``cfg.layer_groups``."""
+    if cfg.attn_mode_for(mi.tp) != "head":
+        raise NotImplementedError(
+            "paged decode reads gather whole-sequence KV per slot, which "
+            "requires the head-sharded attention mode")
+    structs, specs = [], []
+    for g in cfg.layer_groups:
+        st, sp = pool_group(cfg, mi, g, n_blocks, block_tokens, codec)
+        structs.append(st)
+        specs.append(sp)
+    return structs, specs
+
+
+def zero_pool(structs):
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), structs)
+
+
+# --------------------------------------------------------------------------
+# device-side read/write (LOCAL shard views, called inside the jitted step)
+# --------------------------------------------------------------------------
+
+def _encode_token_rows(tok: jnp.ndarray, bits: int, backend=None):
+    """[N, KV_loc, hd] -> per-token quantized row planes
+    {q_hi [N,R,w], q_lo [N,R,128]|None, scale [N,R,1]}."""
+    n = tok.shape[0]
+    f = tok.shape[-2] * tok.shape[-1]
+    r = -(-f // BLOCK)
+    flat = tok.reshape(n, f).astype(jnp.float32)
+    flat = jnp.pad(flat, ((0, 0), (0, r * BLOCK - f)))
+    rows = flat.reshape(n * r, BLOCK)
+    m_pad = -(-rows.shape[0] // TILE_M) * TILE_M
+    rows = jnp.pad(rows, ((0, m_pad - rows.shape[0]), (0, 0)))
+    wire = ops.bq_encode_blocks(rows, bits, backend)
+    cut = lambda a: None if a is None else \
+        a[:n * r].reshape(n, r, a.shape[-1])
+    return {"q_hi": cut(wire["q_hi"]), "q_lo": cut(wire["q_lo"]),
+            "scale": cut(wire["scale"])}
+
+
+def write_token(pool: dict, blk: jnp.ndarray, off: jnp.ndarray,
+                k_tok: jnp.ndarray, v_tok: jnp.ndarray,
+                bits: int | None, backend=None) -> dict:
+    """Scatter one new token per slot into its current block.
+
+    ``pool`` is one layer's LOCAL pool; ``blk``/``off`` are [N] local
+    block ids / in-block offsets (out-of-range block id -> dropped write,
+    which is how inactive slots are masked); ``k_tok``/``v_tok`` are
+    [N, KV_loc, hd]."""
+    if bits is None:
+        return {nm: pool[nm].at[blk, off].set(
+                    tok.astype(pool[nm].dtype), mode="drop")
+                for nm, tok in (("k", k_tok), ("v", v_tok))}
+    out = {}
+    for nm, tok in (("k", k_tok), ("v", v_tok)):
+        planes = _encode_token_rows(tok, bits, backend)
+        out[nm] = {pl: (pool[nm][pl].at[blk, off].set(val, mode="drop")
+                        if val is not None else None)
+                   for pl, val in planes.items()}
+    return out
+
+
+def read_tables(pool: dict, tables: jnp.ndarray, bits: int | None,
+                kv_heads_loc: int, head_dim: int, out_dtype,
+                backend=None):
+    """Gather every slot's block table into contiguous per-slot K/V.
+
+    ``tables`` [N, max_blocks] local block ids (padding entries may be
+    any in-range id — the attention validity mask kills them).  Returns
+    ``(k, v)`` of shape [N, max_blocks * bt, KV_loc, hd]; under a bq
+    storage codec the gather reads only the compressed planes and the
+    dequantize runs on the gathered wire bytes."""
+    out = []
+    for nm in ("k", "v"):
+        if bits is None:
+            g = jnp.take(pool[nm], tables, axis=0)   # [N, mb, bt, KV, hd]
+            out.append(g.reshape(g.shape[0], -1, *g.shape[-2:]))
+            continue
+        dec = ops.bq_gather_decode(pool[nm], tables, bits, backend)
+        n, mb, bt, r, _ = dec.shape
+        flat = dec.reshape(n, mb * bt, r * BLOCK)
+        flat = flat[..., :kv_heads_loc * head_dim]
+        out.append(flat.reshape(n, mb * bt, kv_heads_loc,
+                                head_dim).astype(out_dtype))
+    return tuple(out)

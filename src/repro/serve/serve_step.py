@@ -19,7 +19,7 @@ from repro.core import policy as policy_lib
 from repro.models import layers, transformer
 from repro.models.model import Model
 from repro.models.params import MeshInfo
-from repro.serve import kv_cache
+from repro.serve import kv_cache, paged_kv
 
 
 def greedy_token(logits, cfg, mi: MeshInfo):
@@ -119,3 +119,84 @@ class Server:
             in_specs=(model.specs(), bspecs),
             out_specs=(tok_spec, cache_specs), check_vma=False)
         return jax.jit(fn)
+
+
+class PagedServer:
+    """Continuous-batching decode over a paged (optionally quantized-at-rest)
+    KV pool.
+
+    One jitted step advances a FIXED set of decode slots: per-slot token,
+    position, block table, and active mask come from the host scheduler
+    (:mod:`repro.serve.scheduler`), so admitting/evicting requests swaps
+    host arrays only — shapes never change and nothing recompiles.  With
+    ``kv_codec="bq8"`` etc. the pool stores bq wire planes and every
+    attention read gathers + dequantizes them through the Pallas bq
+    kernels; ``"none"`` keeps the pool in model dtype (bit-exact vs the
+    dense :class:`Server`).
+    """
+
+    def __init__(self, model: Model, mesh, scheme="baseline",
+                 kv_codec: str = "none",
+                 block_tokens: int = paged_kv.DEFAULT_BLOCK_TOKENS,
+                 ring_bidir: bool = False, ring_chunks: int = 1):
+        self.model = model
+        self.mesh = mesh
+        self.plan = policy_lib.compile_plan(scheme, model.mi)
+        self.kv_codec = kv_codec
+        self.bits = paged_kv.storage_bits(kv_codec)
+        self.block_tokens = block_tokens
+        self.ring_bidir = ring_bidir
+        self.ring_chunks = ring_chunks
+        self._build()
+
+    # ------------------------------------------------------------------
+    def _build(self):
+        model, mi, cfg = self.model, self.model.mi, self.model.cfg
+
+        def decode_fn(params, token, pool, tables, pos, active):
+            with policy_lib.use_plan(self.plan), comms.vma_mode(False), \
+                    comms.ring_options(self.ring_bidir, self.ring_chunks):
+                x = layers.embed(params["embed"], token, cfg, mi, sp=False)
+                pos3 = None
+                if cfg.mrope:
+                    pos3 = jnp.broadcast_to(
+                        pos.astype(jnp.int32)[:, None, None],
+                        (token.shape[0], 1, 3))
+                new_pool = []
+                for i, g in enumerate(cfg.layer_groups):
+                    x, npl = transformer.decode_group_paged(
+                        params["groups"][i], x, pool[i], tables, pos,
+                        active, g, cfg, mi, bits=self.bits,
+                        block_tokens=self.block_tokens,
+                        shared=params.get("shared"), pos3=pos3)
+                    new_pool.append(npl)
+                x = layers.norm(params["final_norm"], x, cfg, mi)
+                logits = layers.lm_head_logits(params, x, cfg, mi, sp=False)
+                tok = greedy_token(logits, cfg, mi)
+            return tok, new_pool
+
+        self.decode_inner = decode_fn
+
+    # ------------------------------------------------------------------
+    def decode_step(self, n_slots: int, n_blocks: int, max_blocks: int):
+        """Jitted serve_step: (params, token [N,1], pool, tables [N,mb],
+        pos [N], active [N]) -> (next_token [N], pool).
+
+        ``n_blocks`` is the GLOBAL pool size (must divide by dp — each
+        data shard owns ``n_blocks/dp`` blocks and its slots carry LOCAL
+        block ids); ``max_blocks`` bounds any single request's context at
+        ``max_blocks * block_tokens`` tokens."""
+        model, mi, cfg = self.model, self.model.mi, self.model.cfg
+        if n_slots % mi.batch_ways or n_blocks % mi.batch_ways:
+            raise ValueError(
+                f"n_slots ({n_slots}) and n_blocks ({n_blocks}) must divide "
+                f"by the data ways ({mi.batch_ways})")
+        structs, pspecs = paged_kv.pool_structs(
+            cfg, mi, n_blocks, self.block_tokens, self.kv_codec)
+        bs = mi.batch_axes if mi.dp > 1 else None
+        fn = compat.shard_map(
+            self.decode_inner, mesh=self.mesh,
+            in_specs=(model.specs(), P(bs, None), pspecs, P(bs, None),
+                      P(bs), P(bs)),
+            out_specs=(P(bs), pspecs), check_vma=False)
+        return jax.jit(fn, donate_argnums=(2,)), structs, pspecs

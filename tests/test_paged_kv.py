@@ -1,0 +1,191 @@
+"""Paged KV cache unit tests: block-table invariants, quantized-at-rest
+storage round-trips, and the gather-decode kernel path.
+
+Contract asserted here:
+  * the host allocator never aliases a live block, returns evicted blocks
+    to the free list, and raises on OOM / double free;
+  * a token written through ``write_token`` reads back through
+    ``read_tables`` bit-exactly under codec ``none`` and within the bq
+    fixed-rate error bound under every bq rate;
+  * an out-of-range block id (how inactive slots are masked) drops the
+    write without corrupting the pool;
+  * ``ops.bq_gather_decode`` (pallas interpret) agrees bit-for-bit with
+    the jnp oracle, including the non-tile-aligned row-padding path;
+  * pool struct builders produce the documented layouts and reject
+    configs the paged path cannot serve.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import compat
+from repro.kernels import ops, ref
+from repro.models.params import MeshInfo
+from repro.serve import paged_kv
+
+
+def _mi():
+    mesh = compat.make_mesh((1, 1), ("data", "model"))
+    return MeshInfo.from_mesh(mesh)
+
+
+# --------------------------------------------------------------------------
+# allocator invariants
+# --------------------------------------------------------------------------
+
+def test_allocator_no_aliasing_and_reuse():
+    a = paged_kv.BlockAllocator(8)
+    got = [a.alloc(f"r{i}") for i in range(8)]
+    assert sorted(got) == list(range(8))          # every block exactly once
+    assert got[0] == 0                            # free list pops 0 first
+    assert a.n_free == 0
+    with pytest.raises(paged_kv.OutOfBlocks):
+        a.alloc("overflow")
+    a.free([got[3], got[5]])
+    assert a.n_free == 2
+    b = a.alloc("r_new")
+    assert b in (got[3], got[5])
+    assert a.owner(b) == "r_new"
+
+
+def test_allocator_double_free_raises():
+    a = paged_kv.BlockAllocator(4)
+    b = a.alloc("r")
+    a.free([b])
+    with pytest.raises(KeyError):
+        a.free([b])
+
+
+def test_alloc_many_atomic():
+    a = paged_kv.BlockAllocator(4)
+    a.alloc("x")
+    with pytest.raises(paged_kv.OutOfBlocks):
+        a.alloc_many("big", 4)
+    assert a.n_free == 3                          # nothing leaked
+
+
+# --------------------------------------------------------------------------
+# storage codec round-trips through write_token / read_tables
+# --------------------------------------------------------------------------
+
+def _pool_1layer(nb, bt, kv, hd, bits, dtype=jnp.float32):
+    if bits is None:
+        z = jnp.zeros((nb, bt, kv, hd), dtype)
+        return {"k": z, "v": z}
+    r = paged_kv.token_rows(kv, hd)
+    from repro.core import codecs
+    layout = codecs.get(f"bq{bits}").storage_row_layout()
+    plane = {pl: jnp.zeros((nb, bt, r, w), d) for pl, (w, d)
+             in layout.items()}
+    plane.setdefault("q_lo", None)
+    return {"k": dict(plane), "v": dict(plane)}
+
+
+@pytest.mark.parametrize("bits", [None, 4, 8, 16, 24])
+def test_write_read_roundtrip(bits):
+    nb, bt, kv, hd, n = 6, 4, 2, 32, 3
+    rng = np.random.default_rng(0)
+    pool = _pool_1layer(nb, bt, kv, hd, bits)
+    k_tok = rng.normal(size=(n, kv, hd)).astype(np.float32) * 3
+    v_tok = rng.normal(size=(n, kv, hd)).astype(np.float32) * 3
+    blk = jnp.asarray([1, 4, 2])
+    off = jnp.asarray([0, 3, 1])
+    pool = paged_kv.write_token(pool, blk, off, jnp.asarray(k_tok),
+                                jnp.asarray(v_tok), bits, backend="jnp")
+    # each slot's table points at its own block; its token sits at `off`
+    tables = jnp.asarray([[1], [4], [2]])
+    k, v = paged_kv.read_tables(pool, tables, bits, kv, hd, jnp.float32,
+                                backend="jnp")
+    assert k.shape == (n, bt, kv, hd)
+    got_k = np.asarray(k)[np.arange(n), np.asarray(off)]
+    got_v = np.asarray(v)[np.arange(n), np.asarray(off)]
+    if bits is None:
+        np.testing.assert_array_equal(got_k, k_tok)
+        np.testing.assert_array_equal(got_v, v_tok)
+    else:
+        step = 0.5 / ref._QMAX[bits] + 1e-5
+        np.testing.assert_allclose(got_k, k_tok,
+                                   atol=np.abs(k_tok).max() * step)
+        np.testing.assert_allclose(got_v, v_tok,
+                                   atol=np.abs(v_tok).max() * step)
+
+
+@pytest.mark.parametrize("bits", [None, 8])
+def test_out_of_range_write_is_dropped(bits):
+    nb, bt, kv, hd = 4, 2, 1, 128
+    pool = _pool_1layer(nb, bt, kv, hd, bits)
+    before = jnp.asarray(ops.wire_nbytes(pool))
+    tok = jnp.ones((1, kv, hd))
+    new = paged_kv.write_token(pool, jnp.asarray([nb]), jnp.asarray([0]),
+                               tok, tok, bits, backend="jnp")
+    import jax
+    for a, b in zip(jax.tree_util.tree_leaves(pool),
+                    jax.tree_util.tree_leaves(new)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ops.wire_nbytes(new) == before
+
+
+# --------------------------------------------------------------------------
+# gather-decode kernel path (pallas interpret vs jnp oracle)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [4, 8, 16, 24])
+def test_gather_decode_pallas_matches_ref(bits):
+    rng = np.random.default_rng(1)
+    nb, bt, r = 5, 4, 3                          # nb*bt*r % TILE_M != 0
+    x = rng.normal(size=(nb * bt * r, ref.BLOCK)).astype(np.float32) * 5
+    m_pad = -(-x.shape[0] // 8) * 8
+    xp = np.zeros((m_pad, ref.BLOCK), np.float32)
+    xp[:x.shape[0]] = x
+    wire = ops.bq_encode_blocks(jnp.asarray(xp), bits, backend="jnp")
+    pool = {k: (None if wire[k] is None else
+                wire[k][:nb * bt * r].reshape(nb, bt, r, -1))
+            for k in ("q_hi", "q_lo", "scale")}
+    idx = jnp.asarray(rng.integers(0, nb, (2, 3)).astype(np.int32))
+    a = ops.bq_gather_decode(pool, idx, bits, backend="jnp")
+    b = ops.bq_gather_decode(pool, idx, bits, backend="pallas_interpret")
+    assert a.shape == (2, 3, bt, r, ref.BLOCK)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the gather itself must agree with decoding everything then indexing
+    full = ops.bq_decode_blocks(wire, bits, backend="jnp")
+    full = np.asarray(full)[:nb * bt * r].reshape(nb, bt, r, ref.BLOCK)
+    np.testing.assert_array_equal(np.asarray(a), full[np.asarray(idx)])
+
+
+# --------------------------------------------------------------------------
+# struct builders + validation
+# --------------------------------------------------------------------------
+
+def test_storage_bits_validation():
+    assert paged_kv.storage_bits("none") is None
+    assert paged_kv.storage_bits("bq8") == 8
+    with pytest.raises(ValueError):
+        paged_kv.storage_bits("plr8")            # not random-access
+    with pytest.raises(KeyError):
+        paged_kv.storage_bits("nope")
+
+
+def test_pool_structs_layouts():
+    cfg = configs.get("gemma3-1b").reduced()
+    mi = _mi()
+    nb, bt = 8, 4
+    structs, specs = paged_kv.pool_structs(cfg, mi, nb, bt, "none")
+    assert len(structs) == len(cfg.layer_groups)
+    g0 = cfg.layer_groups[0]
+    assert structs[0]["k"].shape == \
+        (g0.n, nb, bt, cfg.n_kv_heads, cfg.head_dim_)
+    qstructs, _ = paged_kv.pool_structs(cfg, mi, nb, bt, "bq8")
+    r = paged_kv.token_rows(cfg.n_kv_heads, cfg.head_dim_)
+    assert qstructs[0]["k"]["q_hi"].shape == (g0.n, nb, bt, r, ref.BLOCK)
+    assert qstructs[0]["k"]["q_lo"] is None
+    assert qstructs[0]["k"]["scale"].shape == (g0.n, nb, bt, r, 1)
+    q24, _ = paged_kv.pool_structs(cfg, mi, nb, bt, "bq24")
+    assert q24[0]["k"]["q_lo"].shape == (g0.n, nb, bt, r, ref.BLOCK)
+
+
+def test_pool_structs_rejects_recurrent_kinds():
+    cfg = configs.get("zamba2-1.2b").reduced()
+    with pytest.raises(NotImplementedError):
+        paged_kv.pool_structs(cfg, _mi(), 8, 4, "none")

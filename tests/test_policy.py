@@ -15,7 +15,8 @@ from repro.models.params import MeshInfo
 
 def _all_queries():
     """The full (dim, direction, level) query space — the flat Scheme
-    field space exactly (30 triples with the ``cp`` dimension)."""
+    field space exactly (33 triples with the ``cp`` and ``kv``
+    dimensions)."""
     out = []
     for dim in policy.DIMS:
         dirs = policy.DIRECTIONS if dim in policy.DIRECTED_DIMS else (None,)
@@ -292,6 +293,6 @@ def test_compile_walks_full_query_space():
     plan's static table carries exactly the full query space."""
     plan = policy.compile_plan("hier_tpp_8_16")
     assert set(plan._table) == set(_all_queries())
-    assert len(plan._table) == 30
+    assert len(plan._table) == 33
     for c in plan._table.values():
         assert isinstance(c, codecs.Codec)

@@ -139,7 +139,7 @@ def check_flags(src: pathlib.Path, text: str, known: set[str]) -> list[str]:
 # direction/level suffixes.  Deliberately narrow — bench row names like
 # `tp_allreduce` or scheme names like `hier_zpp_8_16` never match.
 _SCHEME_FIELD_RE = re.compile(
-    r"\b(?:dp|zero|tp|pp|ep|cp)(?:_(?:fwd|bwd|inner|outer))+\b")
+    r"\b(?:dp|zero|tp|pp|ep|cp|kv)(?:_(?:fwd|bwd|inner|outer))+\b")
 _FIELD_DECL_RE = re.compile(r"^    (\w+): str(?:\s*\|\s*None)? =",
                             re.MULTILINE)
 
