@@ -92,6 +92,8 @@ def run(verbose=False):
                  f"naive_zfp8_gap={finals['naive_zfp8']-finals['baseline']:+.4f} "
                  "(block-scaled codec: no rate-8 degradation — beyond-paper finding)"))
     _ef_sweep(cfg, data, mesh, rows, finals["baseline"])
+    _tuned_row(cfg, data, mesh, rows, finals["baseline"],
+               finals["zhybrid_16_8"])
     if verbose:
         for k, v in curves.items():
             print(k, " ".join(f"{x:.3f}" for x in v[::10]))
@@ -140,4 +142,56 @@ def _ef_sweep(cfg, data, mesh, rows, base_final):
                  f"tol={EF_TOL} reproduced:{ok}"))
     assert ok, ("aggressive-DP sweep story did not reproduce",
                 finals, base_final)
+    return rows
+
+
+def _tuned_row(cfg, data, mesh, rows, base_final, static_final,
+               start_scheme="zhybrid_16_8", interval=25):
+    """Self-tuning controller vs the static scheme it starts from: the
+    measurement->policy loop walks the DP grad-sync sites down the
+    ladder mid-run (runtime rung swaps, no retrace) and must land within
+    EF_TOL of the uncompressed baseline while ending on a more
+    aggressive wire than the static start."""
+    from jax.sharding import PartitionSpec
+    from repro.tune import tracker
+    from repro.tune.controller import CompressionController, ControllerConfig
+    mi = MeshInfo.from_mesh(mesh)
+    tr = Trainer(Model(cfg, mi), mesh, scheme=start_scheme,
+                 opt_cfg=AdamConfig(lr=3e-3, warmup=10), tune=True)
+    ctrl = CompressionController(tr.policy, tr.tune_sites(), mesh_info=mi,
+                                 cfg=ControllerConfig(interval=interval))
+    trk = tracker.SignalTracker()
+    params, ostate, cstate = tr.init_all(jax.random.key(0))
+    tstate = tr.init_tune_state()
+    bspecs = batch_specs(cfg, mi)
+    rep = NamedSharding(mesh, PartitionSpec())
+    losses = []
+    t0 = time.perf_counter()
+    for s in range(STEPS):
+        nb = data.batch(s)
+        batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
+                 for k, v in nb.items()}
+        params, ostate, cstate, tstate, m = tr.step_tuned(
+            params, ostate, cstate, tstate, batch)
+        losses.append(float(m["loss"]))
+        ctrl.observe_loss(s, losses[-1])
+        if (s + 1) % interval == 0:
+            sigs, zeroed = trk.drain(tstate["sig"])
+            ctrl.decide(s, sigs)
+            tstate = {"select": {k: jax.device_put(jnp.int32(v), rep)
+                                 for k, v in ctrl.select_indices().items()},
+                      "sig": {k: jax.device_put(jnp.asarray(z), rep)
+                              for k, z in zeroed.items()}}
+    us = (time.perf_counter() - t0) / STEPS * 1e6
+    jax.clear_caches()
+    final = float(np.mean(losses[-AVG_LAST:]))
+    changes = sum(1 for h in ctrl.history
+                  if h["to_codec"] != h["from_codec"])
+    codecs_now = ",".join(f"{k}={v}" for k, v in sorted(ctrl.codec.items()))
+    gap = final - base_final
+    rows.append((f"convergence_tuned_from_{start_scheme}", us,
+                 f"final_loss={final:.4f} gap={gap:+.4f} "
+                 f"static_{start_scheme}={static_final:.4f} "
+                 f"changes={changes} end=[{codecs_now}] "
+                 f"guard_held:{abs(gap) < EF_TOL}"))
     return rows

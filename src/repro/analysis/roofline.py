@@ -459,17 +459,11 @@ def _two_level_ar_events(scheme_name: str, elems: int, n_inner: int,
 
 # mild -> aggressive outer codec, with the registered scheme realizing it
 # (all rungs share the mild bq16 inner codec; only the inter-node stage
-# tightens as the ladder descends).  The rate-4 rung is the ERROR-FEEDBACK
-# wrapped ef:bq4 — same wire bytes as raw bq4, but convergence-safe (the
-# carried residual re-injects the quantization error), so raw bq4 is never
-# the right pick; the final rung is the low-rank plr codec, whose
-# rank*(m+n) wire is priced shape-aware via recost_events.
-_SUGGEST_LADDER = (
-    ("hier_zpp_16_16", "bq16"),
-    ("hier_zpp_8_16", "bq8"),
-    ("hier_zpp_ef4_16", "ef:bq4"),
-    ("hier_zpp_plr8_16", "plr8"),
-)
+# tightens as the ladder descends).  The ordering is OWNED by
+# repro.tune.ladder — the same single source of truth the in-training
+# CompressionController walks — so a new codec registers once and both
+# the offline --suggest walk and the online controller pick it up.
+from repro.tune.ladder import SUGGEST_LADDER as _SUGGEST_LADDER  # noqa: E402
 
 
 def suggest_scheme(ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW, *,
@@ -515,6 +509,37 @@ def suggest_scheme(ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW, *,
         pick = _SUGGEST_LADDER[-1][0]
     return {"scheme": pick, "outer_codec": cands[pick]["outer_codec"],
             "ratio": ici_bw / dcn_bw, "candidates": cands}
+
+
+def dim_level_bytes(events, dim: str, level: str, train: bool = True) -> float:
+    """Recorded per-device wire bytes of one ``dim/level`` cell — e.g.
+    ``("dp", "outer")`` is the inter-node DP gradient traffic the tuning
+    acceptance gate compares (sugar over ``ledger_summary``)."""
+    return ledger_summary(events, train=train)["per_dim_level"] \
+        .get(f"{dim}/{level}", 0.0)
+
+
+def savings_report(events, before, after, train: bool = True,
+                   ici_bw: float = ICI_BW, dcn_bw: float = DCN_BW) -> dict:
+    """Predicted wire/time effect of swapping plan ``before`` -> ``after``.
+
+    Both candidates re-price the SAME recorded ledger through
+    :func:`recost_events` (traffic shape held fixed, only codecs
+    re-resolved), so the delta isolates the policy change — this is the
+    per-decision record the in-training controller attaches to its
+    ``tune_policy.json`` history, later compared against the realized
+    post-swap ledger.  Returns per-candidate fast/slow link bytes and
+    seconds plus the slow-link (inter-node) byte saving fraction."""
+    out = {}
+    for key, cand in (("before", before), ("after", after)):
+        lb = link_bytes(recost_events(events, cand), train=train)
+        out[key] = {"fast_bytes": lb["fast"], "slow_bytes": lb["slow"],
+                    "seconds": lb["fast"] / ici_bw + lb["slow"] / dcn_bw}
+    slow0 = out["before"]["slow_bytes"]
+    out["slow_saved_frac"] = \
+        (slow0 - out["after"]["slow_bytes"]) / slow0 if slow0 else 0.0
+    out["seconds_saved"] = out["before"]["seconds"] - out["after"]["seconds"]
+    return out
 
 
 # --------------------------------------------------------------------------

@@ -410,6 +410,35 @@ class PlrCodec(Codec):
         return False
 
 
+# --------------------------------------------------------------------------
+# carried-state introspection (host- or trace-side; used by the tuning
+# controller to read residual energy / warm-factor rank out of a slot
+# without knowing which codec family owns it)
+# --------------------------------------------------------------------------
+
+def state_residual_sq(state):
+    """``||residual||^2`` of one codec-state slot (0.0 when the slot
+    carries no error-feedback residual — e.g. a pure ``plr`` factor)."""
+    if not isinstance(state, dict) or "residual" not in state:
+        return 0.0
+    r = state["residual"]
+    return (r.astype(jnp.float32) ** 2).sum()
+
+
+def state_rank(state):
+    """Column count of the warm low-rank factor in a codec-state slot
+    (``plr*`` directly, ``ef:plr*`` via the nested inner state); ``None``
+    for slots without one."""
+    if not isinstance(state, dict):
+        return None
+    if "q" in state:
+        return int(state["q"].shape[-1])
+    inner = state.get("inner")
+    if isinstance(inner, dict) and "q" in inner:
+        return int(inner["q"].shape[-1])
+    return None
+
+
 NONE = Codec()
 MPC = MpcCodec()
 GQ8 = GqCodec(bits=8)

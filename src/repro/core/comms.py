@@ -353,18 +353,21 @@ def _codec_pair(tag, nbytes: int | None = None):
 
 
 def _require_stateless(s, *cs):
-    """Trace-time guard: carried-state codecs cannot ride autodiff twins
-    or hierarchical stage decompositions — their state read/write has no
-    home inside a ``custom_vjp`` backward or a two-level stage chain."""
+    """Trace-time guard: carried-state codecs cannot ride autodiff twins —
+    their state read/write has no home inside a ``custom_vjp`` backward.
+    Optimizer-side collectives (traced inside ``codec_state_io``) are
+    exempt per entry point: flat and hierarchical sum sites carry state,
+    including per-level slots for the two-level decomposition."""
     for c in cs:
         if getattr(c, "stateful", False):
             raise NotImplementedError(
                 f"stateful codec {c.name!r} resolved at site "
                 f"{s.ledger_tag!r}: error-feedback / low-rank codecs ride "
-                f"only the optimizer's flat dp/zero sync sites "
-                f"(zero1_grad / zero1_param).  Exempt this site with a "
-                f"policy rule, e.g. Rule('bq8', dim='{s.dim}') ordered "
-                f"before the stateful rule.")
+                f"only the optimizer's sync sites (inside a "
+                f"codec_state_io region), never autodiff traffic.  "
+                f"Exempt this site with a policy rule, e.g. "
+                f"Rule('bq8', dim='{s.dim}') ordered before the stateful "
+                f"rule.")
 
 
 # --------------------------------------------------------------------------
@@ -427,6 +430,76 @@ def _state_slot(s, c):
             f"comms.codec_state_io(...).  Route this site to a stateless "
             f"codec with a policy rule (e.g. Rule('bq8', dim='{s.dim}')).")
     return io, key, io.read(key)
+
+
+def _stateful_ok() -> bool:
+    """True inside a ``codec_state_io`` region — the optimizer's sync
+    scope, where carried-state codecs have a home.  Autodiff traffic
+    (the model's fwd/bwd collectives) traces OUTSIDE the region, so
+    gating the stateful paths on this keeps the ``custom_vjp`` ban
+    intact while letting the optimizer's directed/hierarchical folds
+    (tp/pp/cp grad syncs) carry per-site (and per-level) state."""
+    return getattr(_state, "io", None) is not None
+
+
+# --------------------------------------------------------------------------
+# tune io: runtime-tunable sites (the self-tuning controller's swap point)
+# --------------------------------------------------------------------------
+
+_tune = threading.local()
+
+
+class tune_io:
+    """Bind the runtime-tunable site table for one traced step.
+
+    ``select`` maps a tunable site's ledger tag to a TRACED int32 rung
+    index over :data:`repro.tune.ladder.RUNGS`; a registered site
+    dispatches through ``lax.switch`` over the executable rungs instead
+    of its plan-static codec, so the host-side controller changes a
+    site's codec by feeding a different integer into the next step —
+    zero retraces, zero recompiles (the compile-count assertion in
+    ``tests/multidev/tune_check.py`` holds the step's jit cache at 1
+    across swaps).  ``sig`` carries each site's signal accumulator
+    (:mod:`repro.tune.tracker` layout); the switch branches add their
+    per-step increment, psum-reduced over ``axes`` (all mesh axes) so
+    the returned leaves are replicated.  Thread-local, like
+    :class:`codec_state_io`; sites NOT in ``select`` are untouched."""
+
+    def __init__(self, select: dict, sig: dict, axes=()):
+        self.select = dict(select or {})
+        self.sig = dict(sig or {})
+        self.axes = tuple(axes)
+
+    def __enter__(self):
+        self.prev = getattr(_tune, "io", None)
+        _tune.io = self
+        return self
+
+    def __exit__(self, *exc):
+        _tune.io = self.prev
+        return False
+
+    def add_sig(self, key: str, inc):
+        if self.axes:
+            n = 1
+            for a in self.axes:
+                n *= int(axis_size(a))
+            # mean over the mesh: ``count`` stays a true step count and
+            # the payload/error sums become per-rank means (their ratios
+            # — all the controller reads — are unchanged)
+            inc = lax.psum(inc, self.axes) / n
+        self.sig[key] = self.sig[key] + inc
+
+    def collect(self) -> dict:
+        return dict(self.sig)
+
+
+def _tuned_site(s):
+    """The active tune_io region iff ``s`` is registered as tunable."""
+    tio = getattr(_tune, "io", None)
+    if tio is not None and s.ledger_tag in tio.select:
+        return tio
+    return None
 
 
 AxisPair = compat.AxisPair
@@ -879,9 +952,12 @@ def psum(x, axis, tag):
     if _is_pair(axis):
         return hier_all_reduce(x, axis.inner, axis.outer, s)
     c_fwd, c_bwd = _codec_pair(s, _payload_nbytes(x))
+    if _tuned_site(s) is not None and axis_size(axis) > 1:
+        with _wire_site(s.ledger_tag):
+            return _tuned_psum(x, axis, s, c_fwd)
     if c_fwd.stateful or c_bwd.stateful:
-        if s.dim in policy.DIRECTED_DIMS:
-            _require_stateless(s, c_fwd, c_bwd)  # raises
+        if s.dim in policy.DIRECTED_DIMS and not _stateful_ok():
+            _require_stateless(s, c_fwd, c_bwd)  # raises: autodiff traffic
         with _wire_site(s.ledger_tag):
             return _stateful_psum(x, axis, s, c_fwd)
     _account("all_reduce", s.ledger_tag, x, axis, c_fwd, c_bwd,
@@ -1097,7 +1173,8 @@ def psum_fwd_copy_bwd(x, axis, tag):
 # --------------------------------------------------------------------------
 
 def _hier_codec_pairs(tag, nbytes_inner: int | None = None,
-                      nbytes_outer: int | None = None):
+                      nbytes_outer: int | None = None,
+                      allow_stateful: bool = False):
     """((inner_fwd, inner_bwd), (outer_fwd, outer_bwd)) for ``tag``.
 
     Resolved through the active compiled plan; a tag/site without
@@ -1105,11 +1182,18 @@ def _hier_codec_pairs(tag, nbytes_inner: int | None = None,
     path preserves the legacy ``<tag>_<level> -> <tag>`` chain).
     ``nbytes_*`` carry the per-stage payload sizes — the outer stage of a
     two-level op moves only a 1/n_inner chunk, so size rules see what
-    actually crosses the slow links."""
+    actually crosses the slow links.
+
+    ``allow_stateful`` (hier_all_reduce only) admits carried-state codecs
+    when a ``codec_state_io`` region is active — the optimizer's sync
+    scope keeps per-LEVEL state slots (``<tag>_inner@...``), while
+    autodiff-side hierarchical collectives trace outside the region and
+    keep the stateless requirement."""
     s = policy.as_site(tag)
     pairs = policy.current_plan().hier_codec_pairs(s, nbytes_inner,
                                                    nbytes_outer)
-    _require_stateless(s, *pairs[0], *pairs[1])
+    if not (allow_stateful and _stateful_ok()):
+        _require_stateless(s, *pairs[0], *pairs[1])
     return pairs
 
 
@@ -1267,7 +1351,11 @@ def hier_all_reduce(x, inner_axis: str, outer_axis: str, tag):
     chunk = -(-x.size // n_i)
     nbytes = _payload_nbytes(x)
     (ci_f, ci_b), (co_f, co_b) = _hier_codec_pairs(
-        s, nbytes, chunk * x.dtype.itemsize)
+        s, nbytes, chunk * x.dtype.itemsize, allow_stateful=True)
+    if any(c.stateful for c in (ci_f, ci_b, co_f, co_b)):
+        # optimizer-side (inside codec_state_io, or _hier_codec_pairs
+        # raised above): per-level carried state, no VJP twin
+        return _stateful_hier_psum(x, inner_axis, outer_axis, s, ci_f, co_f)
     _account_hier(
         [("reduce_scatter", inner_axis, "inner", x.size, "all_gather"),
          ("all_reduce", outer_axis, "outer", chunk, "all_reduce"),
@@ -1614,6 +1702,9 @@ def reduce_scatter_flat(flat: jnp.ndarray, axis: str, tag="dp",
     all-reduce and slices this rank's chunk of the reconstruction."""
     s = policy.as_site(tag)
     c, _ = _codec_pair(s, _payload_nbytes(flat))
+    if _tuned_site(s) is not None and axis_size(axis) > 1:
+        with _wire_site(s.ledger_tag):
+            return _tuned_reduce_scatter_flat(flat, axis, s, c, mean)
     if c.stateful and axis_size(axis) > 1:
         with _wire_site(s.ledger_tag):
             return _stateful_reduce_scatter_flat(flat, axis, s, c, mean)
@@ -1804,3 +1895,214 @@ def _stateful_reduce_scatter_flat(flat, axis, s, c, mean):
              level=s.level or "flat")
     io.write(key, c.next_state(xc))
     return _reduce_scatter_flat_impl(xc, axis, c.inner, mean)
+
+
+def _stateful_hier_psum(x, inner, outer, s, c_in, c_out):
+    """Two-level all-reduce with per-level carried-state codecs.
+
+    Optimizer-side twin of :func:`_hier_psum_impl` — ``RS(inner) ->
+    AR(outer) -> AG(inner)`` on the flattened payload, where each level's
+    codec may carry state in its own level-pinned slot
+    (``<dim>_inner@name`` / ``<dim>_outer@name``; the trainers enumerate
+    per-level slots for hierarchical sync sites).  The stage-3 gather
+    rides the inner TRANSPORT codec (an ``ef:*`` inner's wire codec):
+    error feedback compensates the stage-1 reduction, and re-compensating
+    the already-reduced chunks on the way back out would double-count the
+    residual.  ``plr*`` at the inner level has no scatter/gather
+    decomposition and raises — put low-rank codecs at the outer level
+    (the slow links, where the factor wire wins).  Ledger: per-stage
+    events at the level-pinned tags, mirroring :func:`hier_all_reduce`'s
+    inner/outer attribution."""
+    n_i, n_o = axis_size(inner), axis_size(outer)
+    total = x.size
+    flat = x.reshape(-1)
+    s_in = policy.Site(s.dim, name=s.name, direction=s.direction,
+                       level="inner")
+    s_out = policy.Site(s.dim, name=s.name, direction=s.direction,
+                        level="outer")
+    # stage 1: intra-node reduce-scatter under the inner codec
+    if n_i == 1:
+        m = ops.padded_rows(total)
+        chunk = jnp.pad(flat, (0, m * BLOCK - total))
+    elif c_in.stateful:
+        if c_in.kind == "lowrank" or (c_in.kind == "ef"
+                                      and c_in.inner.stateful):
+            raise NotImplementedError(
+                f"codec {c_in.name!r} at the inner level of hier site "
+                f"{s.ledger_tag!r}: low-rank codecs ride flat sum "
+                "collectives only — route plr* to the outer level")
+        with _wire_site(s_in.ledger_tag):
+            chunk = _stateful_reduce_scatter_flat(flat, inner, s_in, c_in,
+                                                  mean=False)
+    else:
+        _account("reduce_scatter", s_in.ledger_tag, flat, inner, c_in,
+                 c_in, bwd_op=None, level="inner")
+        with _wire_site(s_in.ledger_tag):
+            chunk = _reduce_scatter_flat_impl(flat, inner, c_in, False)
+    # stage 2: inter-node all-reduce of the 1/n_i chunk
+    if n_o > 1:
+        if c_out.stateful:
+            with _wire_site(s_out.ledger_tag):
+                chunk = _stateful_psum(chunk, outer, s_out, c_out)
+        else:
+            _account("all_reduce", s_out.ledger_tag, chunk, outer, c_out,
+                     c_out, bwd_op=None, level="outer")
+            with _wire_site(s_out.ledger_tag):
+                chunk = _psum_impl(chunk, outer, c_out)
+    # stage 3: intra-node all-gather of the fully-reduced chunks
+    if n_i == 1:
+        out = chunk[:total]
+    else:
+        c_t = c_in.inner if c_in.stateful else c_in
+        _account("all_gather", s_in.ledger_tag, chunk, inner, c_t, c_t,
+                 bwd_op=None, level="inner")
+        with _wire_site(s_in.ledger_tag):
+            out = _all_gather_flat_impl(chunk, inner, total, c_t)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# runtime-tunable sites: lax.switch over the executable rungs of the codec
+# ladder.  The self-tuning controller (repro.tune) changes a site's codec
+# by feeding a different rung index into the next step's tune_state — an
+# integer swap, not a retrace: the switch carries every rung's lowering in
+# the one compiled executable.
+# --------------------------------------------------------------------------
+
+def _tuned_psum(x, axis, s, c_plan):
+    return _tuned_collective(x, axis, s, c_plan, "ar")
+
+
+def _tuned_reduce_scatter_flat(flat, axis, s, c_plan, mean):
+    return _tuned_collective(flat, axis, s, c_plan, "rs", mean)
+
+
+def _tuned_collective(x, axis, s, c_plan, kind, mean=False):
+    """Sum collective dispatched at runtime over the tuning ladder rungs.
+
+    Branch order MUST match :data:`repro.tune.ladder.RUNGS` —
+    ``(bq16, bq8, ef:bq4, plr2, plr4, plr8)``.  Every branch returns the
+    same pytree ``(out, residual', q', sig)`` so ``lax.switch`` unifies:
+    the union codec state (an EF residual AND a warm low-rank factor,
+    held in the site's ``codec_state_io`` slot) is threaded through all
+    rungs, with inactive parts passed through unchanged.
+
+    Signals (:mod:`repro.tune.tracker` layout): every rung measures the
+    payload energy and a squared compression error — its OWN realized
+    error for ``ef``/``plr`` rungs, a local next-rung roundtrip probe for
+    the ``bq`` rungs (so the controller's promote test reads the error
+    the next rung WOULD take, before committing traffic to it).  The
+    ``ef:bq4`` and ``plr`` rungs additionally run one full-width
+    power-iteration probe of the warm factor: ``orthonormalize`` is
+    column-sequential Gram-Schmidt, so the leading-``r`` slice of the
+    full-rank iteration is EXACTLY the ``plr<r>`` iteration — one probe
+    prices every registered rank, and a promotion into ``plr`` enters
+    with a converged factor and a measured spectrum.
+
+    Ledger: the switch traces all rungs, so per-branch events are muted
+    and ONE analytic event is recorded, priced at the plan's static
+    resolution (``c_plan``, the startup codec) with a ``tunable=1`` fact
+    — recorded-bytes comparisons read the measured decision history, not
+    the static event stream."""
+    from repro.kernels import lowrank
+    from repro.tune import ladder as _ladder
+    from repro.tune import tracker as _tracker
+    tio = _tune.io
+    key = s.ledger_tag
+    cio = getattr(_state, "io", None)
+    if cio is None:
+        raise RuntimeError(
+            f"tunable site {key!r} traced outside a codec_state_io region "
+            "— tunable sites carry a union codec-state slot; wrap the "
+            "optimizer sync in comms.codec_state_io(...)")
+    st = cio.read(key)
+    n = axis_size(axis)
+    f32 = x.reshape(-1).astype(jnp.float32)
+    payload_sq = jnp.sum(f32 * f32)
+    q0 = st["q"]
+    R = q0.shape[-1]
+    chunk_len = ops.padded_rows(-(-f32.shape[0] // n)) * BLOCK
+
+    def _take_chunk(total_vec):
+        padded = jnp.pad(total_vec, (0, n * chunk_len - total_vec.shape[0]))
+        chunk = lax.dynamic_index_in_dim(padded.reshape(n, chunk_len),
+                                         lax.axis_index(axis), 0,
+                                         keepdims=False)
+        return chunk / n if mean else chunk
+
+    def _blocks(v):
+        m = ops.padded_rows(v.shape[0])
+        return jnp.pad(v, (0, m * BLOCK - v.shape[0])).reshape(-1, BLOCK)
+
+    def _probe_err(v, probe):
+        x2d = _blocks(v)
+        dec = probe.decode_blocks(probe.encode_blocks(x2d))
+        return jnp.sum((x2d - dec) ** 2)
+
+    def _power_iter(mat, q):
+        p = lowrank.matmul(mat, q, None)
+        if n > 1:
+            p = lax.psum(p, axis)
+        phat = lowrank.orthonormalize(p)
+        q_loc = lowrank.matmul(mat.T, phat, None)
+        q_new = lax.psum(q_loc, axis) if n > 1 else q_loc
+        spec = jnp.pad(jnp.sum(p * p, axis=0),
+                       (0, _ladder.PLR_MAX_RANK - R))
+        return phat, q_loc, q_new, spec
+
+    def _ride(v, c):
+        if kind == "rs":
+            return _reduce_scatter_flat_impl(v, axis, c, mean)
+        return _psum_impl(v, axis, c)
+
+    bq16, bq8, bq4 = codecs.get("bq16"), codecs.get("bq8"), codecs.get("bq4")
+
+    def _bq_rung(c, probe):
+        def branch(v, residual, q):
+            sig = _tracker.pack(1.0, payload_sq, _probe_err(v, probe), None)
+            return _ride(v, c), residual, q, sig
+        return branch
+
+    def _ef4_rung(v, residual, q):
+        xc = v + residual
+        x2d = _blocks(xc)
+        dec = bq4.decode_blocks(bq4.encode_blocks(x2d))
+        new_res = (x2d - dec).reshape(-1)[:v.shape[0]]
+        mat = lowrank.to_mat(xc)
+        _, _, q_new, spec = _power_iter(mat, q)
+        sig = _tracker.pack(1.0, payload_sq, jnp.sum(new_res * new_res),
+                            spec)
+        return _ride(xc, bq4), new_res, lowrank.orthonormalize(q_new), sig
+
+    def _plr_rung(r):
+        r_eff = min(r, R)
+
+        def branch(v, residual, q):
+            mat = lowrank.to_mat(v)
+            phat, q_loc, q_new, spec = _power_iter(mat, q)
+            total = lowrank.from_mat(
+                lowrank.matmul(phat[:, :r_eff], q_new[:, :r_eff].T, None),
+                v.shape[0])
+            rec = lowrank.matmul(phat[:, :r_eff], q_loc[:, :r_eff].T, None)
+            sig = _tracker.pack(1.0, payload_sq, jnp.sum((mat - rec) ** 2),
+                                spec)
+            out = _take_chunk(total) if kind == "rs" else total
+            return out, residual, lowrank.orthonormalize(q_new), sig
+        return branch
+
+    branches = [_bq_rung(bq16, bq8), _bq_rung(bq8, bq4), _ef4_rung,
+                _plr_rung(2), _plr_rung(4), _plr_rung(8)]
+    assert len(branches) == len(_ladder.RUNGS)
+    op = "reduce_scatter" if kind == "rs" else "all_reduce"
+    with scope_facts(tunable=1):
+        _account(op, key, x, axis, c_plan, c_plan, bwd_op=None,
+                 level=s.level or "flat")
+    with mute_ledger():
+        sel = jnp.asarray(tio.select[key], jnp.int32)
+        out, new_res, new_q, sig = lax.switch(
+            sel, branches, f32, st["residual"], q0)
+    cio.write(key, {"residual": new_res, "q": new_q})
+    tio.add_sig(key, sig)
+    if kind == "ar":
+        out = out.reshape(x.shape)
+    return out.astype(x.dtype)

@@ -346,6 +346,25 @@ class CommPlan:
             raise KeyError(f"mesh has no axis for dimension {dim!r}")
         return ax
 
+    def table_hash(self) -> str:
+        """Stable short hash of the plan's codec resolution: the 33-entry
+        static table plus the ordered dynamic (size/name) rule list.
+
+        Independent of the policy's display name — this is the identity
+        the tuning controller stamps into heartbeats and
+        ``tune_policy.json`` artifacts, so an elastic restart can tell
+        "same policy" from "same name, different resolution" (e.g. an
+        artifact replayed on a different topology).  Name/size rules are
+        resolved per call site at trace time, outside the static table,
+        so they hash by their (order-sensitive) predicate serialization."""
+        import hashlib
+        items = sorted((f"{d}:{dr}:{lvl}={c.name}"
+                        for (d, dr, lvl), c in self._table.items()))
+        items += [f"rule{i}:{r.codec}:{r.dim}:{r.direction}:{r.level}:"
+                  f"{r.min_bytes}:{r.max_bytes}:{r.name}"
+                  for i, r in enumerate(self.policy.rules) if r.dynamic]
+        return hashlib.sha256("|".join(items).encode()).hexdigest()[:16]
+
     def codec(self, dim: str, direction: str | None = None,
               level: str = "flat", nbytes: int | None = None,
               name: str | None = None) -> codecs.Codec:

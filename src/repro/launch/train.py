@@ -40,6 +40,7 @@ matches, otherwise they reinitialize with a warning).
 from __future__ import annotations
 
 import argparse
+import json
 import os
 
 
@@ -104,6 +105,37 @@ def _restore_codec(trainer, codec_dir, step, mesh, checkpoint):
         print(f"WARNING: codec state not portable to this topology "
               f"({e}) — reinitializing")
         return trainer.init_codec_state()
+
+
+def _restore_tune(trainer, tune_dir, step, mesh, checkpoint):
+    """Resume the self-tuning signal accumulators saved under
+    ``<ckpt>/tune/``.
+
+    Loud fallbacks mirror :func:`_restore_codec`: a pre-tune checkpoint
+    or a topology change that renames the tunable sites starts the
+    controller interval fresh (zeroed accumulators) with a warning.
+    Returns ``None`` on fallback — the caller re-derives the rung
+    selections from the restored controller state (or the plan)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    if not tune_dir or checkpoint.latest_step(tune_dir) != step:
+        print("WARNING: no tune-state checkpoint for this step — "
+              "starting the controller interval fresh (zeroed signal "
+              "accumulators)")
+        return None
+    shardings = jax.tree_util.tree_map(
+        lambda sp: NamedSharding(mesh, sp), trainer.tune_state_specs(),
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    try:
+        tstate, _ = checkpoint.restore(tune_dir, trainer.tune_structs(),
+                                       step=step, shardings=shardings)
+        print(f"restored tune state at step {step}")
+        return tstate
+    except (ValueError, AssertionError) as e:
+        print(f"WARNING: tune state not portable to this topology ({e}) — "
+              "starting the controller interval fresh")
+        return None
 
 
 def main():
@@ -179,6 +211,27 @@ def main():
                          "dp@zero1_grad*=ef:bq4 puts error-feedback rate-4 "
                          "on the ZeRO-1 DP gradient sync, dp=plr8 covers a "
                          "whole dimension)")
+    ap.add_argument("--tune", action="store_true",
+                    help="close the measurement->policy loop in-training: "
+                         "per-step compression signals feed a host-side "
+                         "controller that walks the tunable DP grad-sync "
+                         "sites along the bq16->bq8->ef:bq4->plr ladder "
+                         "via runtime rung swaps (no step recompile), "
+                         "stamps the heartbeat with the live plan hash, "
+                         "and emits <ckpt>/tune_policy.json")
+    ap.add_argument("--tune-interval", type=int, default=50,
+                    help="steps between controller decision rounds (each "
+                         "round drains the signal accumulators, walks the "
+                         "ladder, and swaps the rung selections)")
+    ap.add_argument("--tune-guard", type=float, default=0.05,
+                    help="relative loss-EMA regression between decision "
+                         "rounds that vetoes promotions and rolls back "
+                         "the most recent one")
+    ap.add_argument("--policy-from", default="", metavar="TUNE_POLICY_JSON",
+                    help="replay a tuned-policy artifact as a static "
+                         "policy: its site rules prepend onto --scheme, "
+                         "reproducing the emitting run's final plan table "
+                         "bit-exactly (topology mismatches warn loudly)")
     ap.add_argument("--ring-bidir", action="store_true",
                     help="split compressed ring collectives into two "
                          "counter-rotating half-rings (halves per-link "
@@ -213,8 +266,9 @@ def main():
             + os.environ.get("XLA_FLAGS", ""))
 
     import jax
+    import jax.numpy as jnp
     import numpy as np
-    from jax.sharding import NamedSharding
+    from jax.sharding import NamedSharding, PartitionSpec
 
     from repro import configs
     from repro.data.pipeline import DataConfig, SyntheticCorpus
@@ -269,7 +323,21 @@ def main():
         comm_policy = comm_policy.with_rules(
             *overrides, name=f"{comm_policy.name}+cli")
 
+    if args.policy_from:
+        from repro.tune import policy_artifact
+        art = policy_artifact.load(args.policy_from)
+        for w in fault.tune_restart_warnings(
+                art, mi,
+                heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat.json")
+                if args.ckpt_dir else None):
+            print(f"WARNING: {w}")
+        comm_policy = policy_artifact.as_policy(art, base=comm_policy)
+        print(f"applied tuned policy {args.policy_from}: "
+              f"{len(art['rules'])} site rules from step {art['step']} "
+              f"(plan {art['plan_hash']})")
+
     trainer = make_trainer(model, mesh, scheme=comm_policy,
+                           tune=args.tune,
                            opt_cfg=AdamConfig(lr=args.lr,
                                               state_bits=args.opt_state_bits,
                                               grad_buckets=args.grad_buckets),
@@ -283,16 +351,32 @@ def main():
 
     opt_dir = os.path.join(args.ckpt_dir, "opt") if args.ckpt_dir else ""
     codec_dir = os.path.join(args.ckpt_dir, "codec") if args.ckpt_dir else ""
+    tune_dir = os.path.join(args.ckpt_dir, "tune") if args.ckpt_dir else ""
     pending = []
+
+    def save_tune_host():
+        """Controller host state: tiny JSON next to the tune_state arrays
+        (atomic write + rename, like the heartbeat)."""
+        os.makedirs(tune_dir, exist_ok=True)
+        tmp = os.path.join(tune_dir, "controller.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(ctrl.state_dict(), f)
+        os.replace(tmp, os.path.join(tune_dir, "controller.json"))
 
     def save_all(step, blocking):
         t1 = checkpoint.save(args.ckpt_dir, step, params, blocking=blocking)
         t2 = checkpoint.save(opt_dir, step, ostate, blocking=blocking)
         t3 = checkpoint.save(codec_dir, step, cstate, blocking=blocking)
+        ts = [t1, t2, t3]
+        if args.tune:
+            ts.append(checkpoint.save(tune_dir, step, tstate,
+                                      blocking=blocking))
+            save_tune_host()
         if not blocking:
-            pending.extend([t1, t2, t3])
+            pending.extend(ts)
 
     start = 0
+    resumed = False
     if args.resume and args.ckpt_dir and \
             checkpoint.latest_step(args.ckpt_dir) is not None:
         sh = checkpoint.resharded_specs(model.structs(), mesh)
@@ -302,10 +386,49 @@ def main():
         ostate = _restore_opt(trainer, params, opt_dir, start, mesh,
                               checkpoint)
         cstate = _restore_codec(trainer, codec_dir, start, mesh, checkpoint)
+        resumed = True
         print(f"resumed from step {start} (elastic onto dp={args.dp} "
               f"tp={args.tp} pp={args.pp})")
     else:
         params, ostate, cstate = trainer.init_all(jax.random.key(args.seed))
+
+    tstate = ctrl = trk = None
+    if args.tune:
+        from repro.tune import policy_artifact, tracker
+        from repro.tune.controller import (CompressionController,
+                                           ControllerConfig)
+        ctrl = CompressionController(
+            trainer.policy, trainer.tune_sites(), mesh_info=mi,
+            cfg=ControllerConfig(interval=args.tune_interval,
+                                 guard=args.tune_guard),
+            start_step=start)
+        trk = tracker.SignalTracker()
+        if resumed:
+            ctrl_path = os.path.join(tune_dir, "controller.json")
+            if tune_dir and os.path.exists(ctrl_path):
+                try:
+                    with open(ctrl_path) as f:
+                        ctrl.load_state_dict(json.load(f))
+                    print(f"restored tune controller (last decision step "
+                          f"{ctrl.last_decision_step})")
+                except (ValueError, KeyError) as e:
+                    print(f"WARNING: tune controller state not portable "
+                          f"({e}) — restarting the ladder walk from the "
+                          "base scheme")
+            else:
+                print("WARNING: no tune controller state in checkpoint — "
+                      "restarting the ladder walk from the base scheme")
+            tstate = _restore_tune(trainer, tune_dir, start, mesh,
+                                   checkpoint)
+        if tstate is None:
+            tstate = trainer.init_tune_state()
+        # the rung selections always come from the controller (which just
+        # restored its ladder position, or starts at the base scheme's) —
+        # the checkpointed part that matters is the signal accumulators
+        rep = NamedSharding(mesh, PartitionSpec())
+        tstate = {"select": {k: jax.device_put(jnp.int32(v), rep)
+                             for k, v in ctrl.select_indices().items()},
+                  "sig": tstate["sig"]}
 
     bspecs = batch_specs(cfg, mi)
     if args.ckpt_dir:
@@ -313,15 +436,43 @@ def main():
     mon = fault.StepMonitor(
         heartbeat_path=os.path.join(args.ckpt_dir, "heartbeat.json")
         if args.ckpt_dir else None)
+    if args.tune:
+        mon.tune_plan_hash = ctrl.plan().table_hash()
+        mon.tune_decision_step = ctrl.last_decision_step
 
     for step in range(start, start + args.steps):
         mon.begin()
         np_batch = zigzag_shard_seq(data.batch(step), mi.cp)
         batch = {k: jax.device_put(v, NamedSharding(mesh, bspecs[k]))
                  for k, v in np_batch.items()}
-        params, ostate, cstate, metrics = trainer.step(params, ostate,
-                                                       cstate, batch)
+        if args.tune:
+            params, ostate, cstate, tstate, metrics = trainer.step_tuned(
+                params, ostate, cstate, tstate, batch)
+        else:
+            params, ostate, cstate, metrics = trainer.step(params, ostate,
+                                                           cstate, batch)
         info = mon.end(step)
+        if args.tune:
+            ctrl.observe_loss(step, float(metrics["loss"]))
+            if (step + 1 - start) % args.tune_interval == 0:
+                sigs, zeroed = trk.drain(tstate["sig"])
+                for d in ctrl.decide(step, sigs):
+                    if d.changed:
+                        print(f"tune[{d.site}] step {step}: {d.action} "
+                              f"{d.from_codec} -> {d.to_codec} "
+                              f"({d.reason})")
+                rep = NamedSharding(mesh, PartitionSpec())
+                tstate = {
+                    "select": {k: jax.device_put(jnp.int32(v), rep)
+                               for k, v in ctrl.select_indices().items()},
+                    "sig": {k: jax.device_put(jnp.asarray(z), rep)
+                            for k, z in zeroed.items()}}
+                mon.tune_plan_hash = ctrl.plan().table_hash()
+                mon.tune_decision_step = step
+                if args.ckpt_dir:
+                    policy_artifact.emit(
+                        os.path.join(args.ckpt_dir, "tune_policy.json"),
+                        ctrl)
         if step % 5 == 0 or step == start + args.steps - 1:
             print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f} "
@@ -335,6 +486,14 @@ def main():
         if checkpoint.latest_step(args.ckpt_dir) != start + args.steps:
             save_all(start + args.steps, blocking=True)
         print(f"checkpointed at step {start + args.steps}")
+    if args.tune:
+        if args.ckpt_dir:
+            art = policy_artifact.emit(
+                os.path.join(args.ckpt_dir, "tune_policy.json"), ctrl)
+            print(f"tune_policy.json: plan {art['plan_hash']} "
+                  f"({len(art['rules'])} site rules)")
+        print("tuned codecs: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(ctrl.codec.items())))
     print(f"done: final loss {float(metrics['loss']):.4f}, "
           f"teacher floor {data.optimal_xent():.4f}, "
           f"stragglers {mon.stragglers}/{mon.steps}")

@@ -30,6 +30,13 @@ class StepMonitor:
     last_t: float | None = None
     stragglers: int = 0
     steps: int = 0
+    # self-tuning stamp: the launch loop updates these after every
+    # accepted controller decision, so the heartbeat carries WHICH
+    # compression plan the run is currently executing (other hosts and
+    # the elastic restart path compare it against a policy artifact's
+    # recorded hash before trusting the artifact)
+    tune_plan_hash: str | None = None
+    tune_decision_step: int | None = None
 
     def begin(self):
         self.last_t = time.monotonic()
@@ -45,11 +52,14 @@ class StepMonitor:
         self.ema = dt if self.ema is None else \
             self.ema_decay * self.ema + (1 - self.ema_decay) * dt
         if self.heartbeat_path:
+            hb = {"step": step, "t": time.time(), "dt": dt,
+                  "ema": self.ema, "straggler": is_straggler}
+            if self.tune_plan_hash is not None:
+                hb["tune_plan_hash"] = self.tune_plan_hash
+                hb["tune_decision_step"] = self.tune_decision_step
             p = pathlib.Path(self.heartbeat_path)
             tmp = p.with_suffix(".tmp")
-            tmp.write_text(json.dumps(
-                {"step": step, "t": time.time(), "dt": dt,
-                 "ema": self.ema, "straggler": is_straggler}))
+            tmp.write_text(json.dumps(hb))
             os.replace(tmp, p)
         return {"dt": dt, "ema": self.ema, "straggler": is_straggler}
 
@@ -64,6 +74,39 @@ def heartbeat_stale(path, timeout_s: float) -> bool:
     except (ValueError, OSError):
         return True
     return (time.time() - hb["t"]) > timeout_s
+
+
+def tune_restart_warnings(artifact: dict, mesh_info,
+                          heartbeat_path=None) -> list:
+    """Loud pre-flight for resuming with a tuned-policy artifact.
+
+    Returns human-readable warning lines (empty = clean).  Two checks:
+    the artifact's recorded topology against the live mesh (an elastic
+    restart onto a different dp/node split invalidates the byte
+    arithmetic the rules were derived from), and — when the dead run's
+    heartbeat survives — the artifact's ``plan_hash`` against the plan
+    hash the run was actually executing, which catches replaying a stale
+    artifact from an earlier decision round."""
+    from repro.tune import policy_artifact
+    warnings = []
+    for diff in policy_artifact.topology_mismatch(artifact, mesh_info):
+        warnings.append(f"tune_policy topology mismatch — {diff}")
+    if heartbeat_path:
+        p = pathlib.Path(heartbeat_path)
+        if p.exists():
+            try:
+                hb = json.loads(p.read_text())
+            except (ValueError, OSError):
+                hb = {}
+            run_hash = hb.get("tune_plan_hash")
+            art_hash = artifact.get("plan_hash")
+            if run_hash and art_hash and run_hash != art_hash:
+                warnings.append(
+                    f"tune_policy plan_hash {art_hash} != last heartbeat "
+                    f"plan {run_hash} (decision step "
+                    f"{hb.get('tune_decision_step')}) — the artifact is "
+                    "stale relative to the run it came from")
+    return warnings
 
 
 @dataclasses.dataclass

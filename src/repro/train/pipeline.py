@@ -355,13 +355,15 @@ class PipelineTrainer(Trainer):
 
     def __init__(self, model: Model, mesh, scheme="baseline", opt_cfg=None,
                  n_micro: int = 1, ring_bidir: bool = False,
-                 ring_chunks: int = 1, remat_policy=None):
+                 ring_chunks: int = 1, remat_policy=None,
+                 tune: bool = False):
         self.n_micro = n_micro
         self.remat_policy = remat_policy
         # fail fast on a bad spec (before the jitted build)
         parse_remat_policy(remat_policy, getattr(model, "vpp", 1))
         super().__init__(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
-                         ring_bidir=ring_bidir, ring_chunks=ring_chunks)
+                         ring_bidir=ring_bidir, ring_chunks=ring_chunks,
+                         tune=tune)
 
     def _check_mesh(self):
         pass  # any mesh: pp > 1 pipelines, pp == 1 just microbatches

@@ -107,13 +107,14 @@ class Trainer:
 
     def __init__(self, model: Model, mesh, scheme="baseline",
                  opt_cfg: AdamConfig | None = None, ring_bidir: bool = False,
-                 ring_chunks: int = 1):
+                 ring_chunks: int = 1, tune: bool = False):
         self.model = model
         self.mesh = mesh
         self.policy = policy_lib.as_policy(scheme)
         self.plan = self.policy.compile(model.mi)
         self.ring_bidir = ring_bidir
         self.ring_chunks = ring_chunks
+        self.tune = bool(tune)
         self.opt = Adam(opt_cfg or AdamConfig(), model.mi)
         self._check_mesh()
         self._build()
@@ -167,8 +168,41 @@ class Trainer:
         mi = self.model.mi
         leaves, _, classes = _split_classes(self.model.structs())
         return [(local_shape(types.SimpleNamespace(shape=l.v.shape,
-                                                   spec=l.spec), mi), c)
+                                                   spec=l.spec), mi),
+                 c, l.spec)
                 for l, c in zip(leaves, classes)]
+
+    def _axis_sizes(self):
+        return dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+
+    def _axsize(self, axes) -> int:
+        if axes is None:
+            return 1
+        sizes = self._axis_sizes()
+        if isinstance(axes, str):
+            return sizes[axes]
+        return math.prod(sizes[a] for a in axes)
+
+    def _fold_specs(self):
+        """(dim, name, axes, elems) of the optimizer's whole-grad fold
+        psums — the cp / tp class-C / pp stage-replicated sites of
+        :meth:`Adam.apply`.  Carried-state codecs may ride these (flat or
+        two-level), so they join the codec-state enumeration; with
+        stateless codecs resolved there the slots never materialize."""
+        mi = self.model.mi
+        local = self._local_leaves()
+        out = []
+        if mi.cp > 1:
+            out.append(("cp", "grad_seq_rep", mi.cp_axes,
+                        sum(math.prod(sh) for sh, _, _ in local)))
+        if mi.tp > 1:
+            n_c = sum(math.prod(sh) for sh, c, _ in local if c == "C")
+            out.append(("tp", "grad_rep", mi.tp_axes, n_c))
+        if mi.pp > 1:
+            n_s = sum(math.prod(sh) for sh, c, sp in local
+                      if c != "A" and "stage" not in sp)
+            out.append(("pp", "grad_stage_rep", mi.stage_axes, n_s))
+        return [f for f in out if f[3] > 0]
 
     def codec_sites(self):
         """The carried-state-capable comm sites this trainer's step emits
@@ -177,14 +211,16 @@ class Trainer:
         shapes.  Mirrors :meth:`repro.train.optimizer.Adam.apply` exactly
         (site names, pinned levels, payload sizes), so the template built
         from it matches what the traced step reads."""
+        from repro.kernels import ops
+        from repro.kernels.ref import BLOCK
         mi = self.model.mi
         local = self._local_leaves()
-        n = sum(math.prod(shape) for shape, c in local if c != "A")
+        n = sum(math.prod(shape) for shape, c, _ in local if c != "A")
         hier = mi.node_axis is not None
         f32 = jnp.float32
         sites = []
         # class-A (fsdp) leaves: one dp psum per leaf on node/pod meshes
-        for i, (shape, c) in enumerate(local):
+        for i, (shape, c, _) in enumerate(local):
             if c != "A":
                 continue
             if hier:
@@ -193,6 +229,19 @@ class Trainer:
             if mi.pod_axis:
                 sites.append((comms.Site("dp", f"grad_fsdp{i}_pod"),
                               shape, f32))
+        # whole-grad fold psums (cp / tp class-C / pp stage-replicated):
+        # flat sites on plain axes; per-LEVEL sites on node-factored
+        # (AxisPair) axes, matching _stateful_hier_psum's stage slots
+        for dim, name, axes, elems in self._fold_specs():
+            if isinstance(axes, compat.AxisPair):
+                cl = ops.padded_rows(
+                    -(-elems // self._axsize(axes.inner))) * BLOCK
+                sites.append((comms.Site(dim, name, "bwd", level="inner"),
+                              (elems,), f32))
+                sites.append((comms.Site(dim, name, "bwd", level="outer"),
+                              (cl,), f32))
+            else:
+                sites.append((comms.Site(dim, name, "bwd"), (elems,), f32))
         # flat ZeRO-1 sync, one site chain per grad-sync bucket (a single
         # suffix-free chain when bucketing is off — the historic tags)
         bucketed = self.opt.cfg.grad_buckets > 1
@@ -215,8 +264,14 @@ class Trainer:
 
     def codec_state_template(self) -> dict:
         """Per-rank (local) ShapeDtypeStructs of the codec-state pytree;
-        empty for stateless policies — no pytree bloat in the step."""
-        return self.plan.codec_state_template(self.codec_sites())
+        empty for stateless policies — no pytree bloat in the step.  A
+        tuned trainer adds (or widens) a UNION slot per tunable site: the
+        EF residual AND the warm low-rank factor, so every ladder rung's
+        state is live whichever rung the controller selects."""
+        tmpl = self.plan.codec_state_template(self.codec_sites())
+        if self.tune:
+            tmpl = {**tmpl, **self._tune_union_template()}
+        return tmpl
 
     def _codec_joint_spec(self):
         # every state leaf varies per rank in general (residuals track
@@ -260,7 +315,95 @@ class Trainer:
             out[key] = jax.tree.map(
                 lambda l: jax.device_put(
                     jnp.tile(l, (rep,) + (1,) * (l.ndim - 1)), sharding), st)
+        if self.tune:
+            from repro.kernels import lowrank
+            from repro.tune import ladder
+            for key, (s, elems) in self.tune_sites().items():
+                _, ncols = lowrank.mat_shape(elems)
+                st = {"residual": jnp.zeros((elems,), jnp.float32),
+                      "q": lowrank.init_factor(
+                          ncols, lowrank.rank_for(elems,
+                                                  ladder.PLR_MAX_RANK))}
+                out[key] = jax.tree.map(
+                    lambda l: jax.device_put(
+                        jnp.tile(l, (rep,) + (1,) * (l.ndim - 1)),
+                        sharding), st)
         return out
+
+    # ------------------------------------------------------------------
+    # runtime-tunable sites (the self-tuning controller's swap surface)
+    # ------------------------------------------------------------------
+    def tune_sites(self) -> dict:
+        """``{ledger_tag: (Site, per_rank_elems)}`` of the runtime-tunable
+        sites: the flat ZeRO-1 dp grad-sync chain — the paper's
+        aggressive-DP compression target.  Only sum collectives over
+        nontrivial axes qualify (the tuned switch carries reduce-scatter
+        and all-reduce rungs); the pod hop and the param gather stay on
+        their plan-static codecs."""
+        mi = self.model.mi
+        local = self._local_leaves()
+        n = sum(math.prod(shape) for shape, c, _ in local if c != "A")
+        hier = mi.node_axis is not None
+        bucketed = self.opt.cfg.grad_buckets > 1
+        out = {}
+        for b, (lo, hi) in enumerate(self.opt._bucket_bounds(n)):
+            sfx = str(b) if bucketed else ""
+            if self._axsize(mi.data_axis) > 1:
+                s = comms.Site("dp", f"zero1_grad{sfx}",
+                               level="inner" if hier else None)
+                out[s.ledger_tag] = (s, hi - lo)
+            if hier:
+                s = comms.Site("dp", f"zero1_grad{sfx}", level="outer")
+                out[s.ledger_tag] = (s, self.opt._chunk_len(hi - lo))
+        return out
+
+    def _tune_union_template(self) -> dict:
+        from repro.kernels import lowrank
+        from repro.tune import ladder
+        out = {}
+        for key, (s, elems) in self.tune_sites().items():
+            _, ncols = lowrank.mat_shape(elems)
+            r = lowrank.rank_for(elems, ladder.PLR_MAX_RANK)
+            out[key] = {
+                "residual": jax.ShapeDtypeStruct((elems,), jnp.float32),
+                "q": jax.ShapeDtypeStruct((ncols, r), jnp.float32)}
+        return out
+
+    def tune_state_specs(self) -> dict:
+        """tune_state is replicated: rung selections are host-fed ints
+        (identical on every rank by construction — all devices must take
+        the same switch branch) and the signal accumulators come out of a
+        full-mesh psum."""
+        spec = {key: P() for key in self.tune_sites()}
+        return {"select": dict(spec), "sig": dict(spec)}
+
+    def tune_structs(self) -> dict:
+        """ShapeDtypeStructs matching :meth:`init_tune_state` (replicated,
+        so global shape == per-rank shape) — the checkpoint-restore
+        template for the ``<ckpt>/tune/`` subdir."""
+        from repro.tune import tracker
+        keys = list(self.tune_sites())
+        return {
+            "select": {k: jax.ShapeDtypeStruct((), jnp.int32)
+                       for k in keys},
+            "sig": {k: jax.ShapeDtypeStruct((tracker.SIG_LEN,), jnp.float32)
+                    for k in keys}}
+
+    def init_tune_state(self) -> dict:
+        """Device-resident ``{"select", "sig"}`` — rung indices seeded
+        from the compiled plan's own resolution at each site (a tuned run
+        starts exactly where its static scheme stands) and zeroed signal
+        accumulators."""
+        from repro.tune import ladder, tracker
+        sharding = NamedSharding(self.mesh, P())
+        sel, sig = {}, {}
+        for key, (s, elems) in self.tune_sites().items():
+            c = self.plan.codec_pair(s, elems * 4)[0].name
+            sel[key] = jax.device_put(
+                jnp.int32(ladder.rung_or_default(c)), sharding)
+            sig[key] = jax.device_put(
+                jnp.zeros((tracker.SIG_LEN,), jnp.float32), sharding)
+        return {"select": sel, "sig": sig}
 
     # ------------------------------------------------------------------
     def _build(self):
@@ -302,6 +445,40 @@ class Trainer:
                              check_vma=False),
             donate_argnums=(0, 1, 2))
 
+        if self.tune:
+            tspecs = self.tune_state_specs()
+            mi_axes = tuple(model.mi.all_axes)
+
+            def step_tuned_fn(params, opt_state, codec_state, tune_state,
+                              batch):
+                with policy_lib.use_plan(self.plan), comms.vma_mode(False), \
+                        comms.ring_options(self.ring_bidir,
+                                           self.ring_chunks):
+                    (loss, metrics), grads = jax.value_and_grad(
+                        loss_fn, has_aux=True)(params, batch)
+                    with comms.codec_state_io(codec_state) as cio:
+                        with comms.tune_io(tune_state["select"],
+                                           tune_state["sig"],
+                                           axes=mi_axes) as tio:
+                            params, opt_state, stats = opt.apply(
+                                params, grads, opt_state)
+                            sig = tio.collect()
+                    codec_state = cio.collect()
+                tune_state = {"select": tune_state["select"], "sig": sig}
+                return params, opt_state, codec_state, tune_state, \
+                    {"loss": loss, **metrics, **stats}
+
+            # tune_state is NOT donated: the host re-feeds the same select
+            # scalars every step and drains sig on the controller cadence
+            self.step_tuned = jax.jit(
+                compat.shard_map(step_tuned_fn, mesh=self.mesh,
+                                 in_specs=(pspecs, ospecs, cspecs, tspecs,
+                                           bspecs),
+                                 out_specs=(pspecs, ospecs, cspecs, tspecs,
+                                            METRIC_SPECS),
+                                 check_vma=False),
+                donate_argnums=(0, 1, 2))
+
     def init_all(self, key):
         """Initialize params + optimizer state + codec state (device-
         resident, sharded).  Returns ``(params, opt_state, codec_state)``;
@@ -313,17 +490,20 @@ class Trainer:
 def make_trainer(model: Model, mesh, scheme="baseline",
                  opt_cfg: AdamConfig | None = None, n_micro: int = 1,
                  ring_bidir: bool = False, ring_chunks: int = 1,
-                 remat_policy: str | None = None):
+                 remat_policy: str | None = None, tune: bool = False):
     """Trainer factory: the flat single-program step on an unfactored
     batch, or the microbatched 1F1B pipeline trainer when the mesh has a
     stage axis, gradient accumulation (``n_micro > 1``), or an activation
     ``remat_policy`` is requested.  A model built with ``vpp > 1`` runs
-    the interleaved virtual-stage schedule automatically."""
+    the interleaved virtual-stage schedule automatically.  ``tune``
+    additionally builds ``step_tuned`` — the 5-arg step whose dp sync
+    sites dispatch on the runtime rung indices in ``tune_state``."""
     if model.mi.pp > 1 or n_micro > 1 or remat_policy not in (None, "none"):
         from repro.train.pipeline import PipelineTrainer
         return PipelineTrainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
                                n_micro=n_micro, ring_bidir=ring_bidir,
                                ring_chunks=ring_chunks,
-                               remat_policy=remat_policy)
+                               remat_policy=remat_policy, tune=tune)
     return Trainer(model, mesh, scheme=scheme, opt_cfg=opt_cfg,
-                   ring_bidir=ring_bidir, ring_chunks=ring_chunks)
+                   ring_bidir=ring_bidir, ring_chunks=ring_chunks,
+                   tune=tune)

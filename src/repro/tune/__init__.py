@@ -1,0 +1,20 @@
+"""Self-tuning compression: close the measurement -> policy loop.
+
+The subsystem that derives the paper's hand-picked hybrid scheme at
+runtime instead of hard-coding it:
+
+* :mod:`repro.tune.ladder` — the canonical ``bq16 -> bq8 -> ef:bq4 ->
+  plr<r>`` promotion ladder, the single source of truth shared by the
+  offline ``roofline.suggest_scheme`` walk and the online controller;
+* :mod:`repro.tune.tracker` — the per-site signal layout accumulated
+  INSIDE the jitted step (norm ratios, EF-residual energy, spectral
+  decay from the warm low-rank factors) and its host-side reader;
+* :mod:`repro.tune.controller` — the host-side decision core that walks
+  each site up/down the ladder every ``--tune-interval`` steps;
+* :mod:`repro.tune.policy_artifact` — serialization of every accepted
+  plan as a reproducible ``tune_policy.json`` (``launch --policy-from``).
+
+Kept import-light on purpose: :mod:`repro.analysis.roofline` imports
+``repro.tune.ladder`` at module scope, so nothing here may import the
+analysis layer back at import time (the controller does so lazily).
+"""

@@ -193,4 +193,72 @@ print(f"dim-wide ef:bq4 on an fsdp model (node mesh): "
       f"(|residual|_max={res_max:.2e}, loss {float(fm['loss']):.4f})")
 jax.clear_caches()
 
+# ---- stateful codecs at hierarchical levels ------------------------------
+# The trace-time stateful ban is autodiff-only now: two-level optimizer
+# collectives carry per-level codec-state slots.
+# (a) ef:bq4 on the inter-node dp hop: hier_zpp_ef4_16 places the ef rung
+# at dp outer; the dp_outer@zero1_grad slot carries and the ef wire
+# prices exactly bq4's bytes at that level.
+hmesh = make_mesh(4, 2, nodes=2)
+hmi = MeshInfo.from_mesh(hmesh)
+hb = batch_specs(cfg, hmi)
+htr = Trainer(Model(cfg, hmi), hmesh, scheme="hier_zpp_ef4_16")
+assert "dp_outer@zero1_grad" in htr.codec_state_template(), \
+    sorted(htr.codec_state_template())
+hp, ho, hc = htr.init_all(jax.random.key(0))
+for s in range(3):
+    b = {k: jax.device_put(v, NamedSharding(hmesh, hb[k]))
+         for k, v in data.batch(s).items()}
+    hp, ho, hc, hm = htr.step(hp, ho, hc, b)
+assert np.isfinite(float(hm["loss"]))
+res = np.asarray(hc["dp_outer@zero1_grad"]["residual"])
+assert np.abs(res).max() > 0, "inter-node EF residual never engaged"
+jax.clear_caches()
+
+
+def trace_outer_bytes(codec):
+    pol = policy.as_policy("hier_zpp_16_16").with_rules(
+        policy.Rule(codec, dim="dp", level="outer", name="zero1_grad*"),
+        name="trace")
+    tr4 = Trainer(Model(cfg, hmi), hmesh, scheme=pol)
+    pstructs = tr4.model.structs()
+    ostructs = jax.eval_shape(tr4.opt_init, pstructs)
+    binputs = {"tokens": jax.ShapeDtypeStruct((8, 32), jnp.int32),
+               "labels": jax.ShapeDtypeStruct((8, 32), jnp.int32)}
+    with comms.record_traffic() as events:
+        tr4.step.lower(pstructs, ostructs, tr4.codec_structs(), binputs)
+    jax.clear_caches()
+    return rl.dim_level_bytes(events, "dp", "outer", train=True)
+
+
+bo_ef, bo_bq4 = trace_outer_bytes("ef:bq4"), trace_outer_bytes("bq4")
+assert bo_ef == bo_bq4, (bo_ef, bo_bq4)
+print(f"ef:bq4 at dp outer (node mesh): per-level slot carried "
+      f"(|residual|_max={np.abs(res).max():.2e}), wire {bo_ef:.0f}B == bq4")
+
+# (b) ef:bq4 at the outer level of the tp grad-replica fold — an AxisPair
+# site whose two-level decomposition runs inside one hier all-reduce
+# (inter-node reduce hop under error feedback, intra-node stays bq16).
+tmesh = make_mesh(2, 4, tp_nodes=2)
+tmi = MeshInfo.from_mesh(tmesh)
+tpol = policy.as_policy("hier_zpp_16_16").with_rules(
+    policy.Rule("ef:bq4", dim="tp", level="outer", name="grad_rep"),
+    name="tp_ef_outer")
+ttr = Trainer(Model(cfg, tmi), tmesh, scheme=tpol)
+assert "tp_bwd_outer@grad_rep" in ttr.codec_state_template(), \
+    sorted(ttr.codec_state_template())
+tp_, to_, tc_ = ttr.init_all(jax.random.key(1))
+tb = batch_specs(cfg, tmi)
+for s in range(3):
+    b = {k: jax.device_put(v, NamedSharding(tmesh, tb[k]))
+         for k, v in data.batch(s).items()}
+    tp_, to_, tc_, tm_ = ttr.step(tp_, to_, tc_, b)
+assert np.isfinite(float(tm_["loss"]))
+tres = np.asarray(tc_["tp_bwd_outer@grad_rep"]["residual"])
+assert np.abs(tres).max() > 0, "hier-fold EF residual never engaged"
+print(f"ef:bq4 at tp fold outer (AxisPair site): slot carried "
+      f"(|residual|_max={np.abs(tres).max():.2e}, "
+      f"loss {float(tm_['loss']):.4f})")
+jax.clear_caches()
+
 print("EF CHECK OK")

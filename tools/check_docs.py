@@ -254,12 +254,45 @@ def check_ledger_facts(src: pathlib.Path, text: str,
     return errors
 
 
+# a documented tune_policy.json field ("the `plan_hash` artifact field"):
+# the token must be a member of policy_artifact.py's ARTIFACT_FIELDS or
+# RULE_FIELDS tuples — renaming an artifact field breaks the doc
+# reference instead of letting it rot
+_DOC_ART_FIELD_RE = re.compile(r"`(\w+)`\s+artifact\s+field\b")
+_ART_FIELDS_RE = re.compile(
+    r"(?:ARTIFACT_FIELDS|RULE_FIELDS)\s*=\s*\(([^)]*)\)")
+
+
+def artifact_fields() -> set[str]:
+    """tune_policy.json's field names, parsed (not imported) from
+    src/repro/tune/policy_artifact.py."""
+    src = (ROOT / "src" / "repro" / "tune" / "policy_artifact.py")
+    if not src.exists():
+        return set()
+    out = set()
+    for body in _ART_FIELDS_RE.findall(src.read_text(encoding="utf-8")):
+        out |= set(re.findall(r"['\"](\w+)['\"]", body))
+    return out
+
+
+def check_artifact_fields(src: pathlib.Path, text: str,
+                          known: set[str]) -> list[str]:
+    errors = []
+    for tok in sorted(set(_DOC_ART_FIELD_RE.findall(text))):
+        if tok not in known:
+            errors.append(
+                f"{src.relative_to(ROOT)}: stale tune_policy.json field "
+                f"reference `{tok}` (not in ARTIFACT_FIELDS/RULE_FIELDS)")
+    return errors
+
+
 def check() -> list[str]:
     errors = []
     known_flags = defined_flags()
     known_fields = scheme_fields()
     known_rates = codec_rates()
     known_facts = ledger_facts()
+    known_art = artifact_fields()
     for src in md_files():
         raw = src.read_text(encoding="utf-8")
         text = _FENCE_RE.sub("", raw)
@@ -268,6 +301,7 @@ def check() -> list[str]:
         errors += check_scheme_tags(src, raw, known_fields)
         errors += check_codec_names(src, raw, known_rates)
         errors += check_ledger_facts(src, raw, known_facts)
+        errors += check_artifact_fields(src, raw, known_art)
         targets = [m.group(1) for m in _LINK_RE.finditer(text)]
         targets += [m.group(1) for m in _IMG_RE.finditer(text)]
         for t in targets:
